@@ -1,0 +1,368 @@
+"""Loop-aware cost model over optimized (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts every while-loop body ONCE — for
+scan-over-layers models that under-counts FLOPs by ~n_layers× (verified in
+EXPERIMENTS.md §Dry-run).  This module re-derives the three roofline inputs
+by walking the HLO with trip-count multiplication:
+
+* ``flops``        — dot/elementwise/reduce flops, × known_trip_count
+* ``hbm_bytes``    — operand+result bytes of every top-level (fused)
+                     instruction — the same convention XLA's own
+                     "bytes accessed" uses, but loop-aware
+* ``coll_bytes``   — per-collective-type result bytes (all-gather /
+                     all-reduce / reduce-scatter / all-to-all /
+                     collective-permute), loop-aware
+
+Because ``compiled.as_text()`` is the *partitioned* module, every number is
+per-device — exactly what the roofline terms want.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "s2": 0.25, "u2": 0.25,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s+"
+    r"([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+
+
+def _parse_shapes(type_str: str) -> List[Tuple[str, List[int]]]:
+    return [(dt, [int(d) for d in dims.split(",") if d])
+            for dt, dims in _SHAPE_RE.findall(type_str)]
+
+
+def _elems(shapes) -> float:
+    total = 0.0
+    for _, dims in shapes:
+        n = 1.0
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+def _bytes(shapes) -> float:
+    total = 0.0
+    for dt, dims in shapes:
+        n = 1.0
+        for d in dims:
+            n *= d
+        total += n * DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclass
+class OpInfo:
+    name: str
+    opcode: str
+    shapes: List[Tuple[str, List[int]]]
+    operands: List[str]
+    rest: str             # raw attrs after the closing operand paren
+    is_root: bool = False
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=dict)
+    warnings: List[str] = field(default_factory=list)
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.hbm_bytes += other.hbm_bytes
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v
+        self.warnings.extend(other.warnings)
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.hbm_bytes * k,
+                    {kk: v * k for kk, v in self.coll.items()}, list(self.warnings))
+
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "and", "or", "xor", "not", "negate", "abs", "sign", "compare", "select",
+    "tanh", "exponential", "log", "log-plus-one", "exponential-minus-one",
+    "rsqrt", "sqrt", "cbrt", "sine", "cosine", "logistic", "atan2", "erf",
+    "floor", "ceil", "round-nearest-even", "round-nearest-afz", "clamp",
+    "convert", "remainder", "shift-left", "shift-right-arithmetic",
+    "shift-right-logical", "is-finite", "popcnt", "clz",
+}
+MEMORY_OPS = {
+    "copy", "copy-start", "transpose", "broadcast", "gather", "scatter",
+    "dynamic-slice", "dynamic-update-slice", "concatenate", "pad", "slice",
+    "reduce", "reduce-window", "reverse", "sort", "iota", "rng",
+    "rng-bit-generator", "custom-call", "dot", "convolution", "fusion",
+    "select-and-scatter", "cholesky", "triangular-solve",
+}
+ZERO_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "reshape", "after-all", "partition-id", "replica-id",
+    "copy-done", "optimization-barrier", "domain",
+}
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.comps: Dict[str, List[OpInfo]] = {}
+        self.entry: Optional[str] = None
+        self.shape_of: Dict[str, List[Tuple[str, List[int]]]] = {}
+        self._parse(text)
+        self._memo: Dict[str, Cost] = {}
+
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if cur is None:
+                m = _COMP_RE.match(line)
+                # a computation header is not an op assignment line
+                if m and not re.match(r"^\s*(ROOT\s+)?%[\w\.\-]+\s*=", line):
+                    cur = m.group(2)
+                    self.comps[cur] = []
+                    if m.group(1):
+                        self.entry = cur
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            root, name, type_str, opcode, tail = m.groups()
+            operands, rest = _split_operands(tail)
+            info = OpInfo(name, opcode, _parse_shapes(type_str), operands, rest,
+                          is_root=bool(root))
+            self.comps[cur].append(info)
+            self.shape_of[name] = info.shapes
+
+    # ------------------------------------------------------------- costing
+    def cost(self, comp: Optional[str] = None, top_level: bool = True) -> Cost:
+        comp = comp or self.entry
+        key = f"{comp}/{top_level}"
+        if key in self._memo:
+            return self._memo[key]
+        total = Cost()
+        for op in self.comps.get(comp, ()):
+            total += self._op_cost(op, top_level)
+        self._memo[key] = total
+        return total
+
+    def _op_cost(self, op: OpInfo, top_level: bool) -> Cost:
+        oc = op.opcode
+        c = Cost()
+        if oc == "while":
+            trip = self._trip_count(op)
+            body, cond = _attr(op.rest, "body"), _attr(op.rest, "condition")
+            inner = Cost()
+            if body:
+                inner += self.cost(body, top_level)
+            if cond:
+                inner += self.cost(cond, top_level)
+            if trip is None:
+                c.warnings.append(f"while {op.name}: unknown trip count, using 1")
+                trip = 1
+            return inner.scaled(trip)
+        if oc == "conditional":
+            branches = re.findall(r"%([\w\.\-]+)", _attr(op.rest, "branch_computations") or "")
+            if branches:
+                costs = [self.cost(b, top_level) for b in branches]
+                best = max(costs, key=lambda x: x.flops + x.hbm_bytes)
+                c += best
+            c.hbm_bytes += self._io_bytes(op) if top_level else 0.0
+            return c
+        if oc in ("call", "async-start"):
+            called = _attr(op.rest, "calls") or _attr(op.rest, "to_apply")
+            if called:
+                c += self.cost(called.lstrip("%"), top_level)
+            return c
+        if oc == "fusion":
+            called = _attr(op.rest, "calls")
+            if called:
+                called = called.lstrip("%")
+                inner = self.cost(called, top_level=False)
+                c.flops += inner.flops
+                c.coll = dict(inner.coll)
+            if top_level:
+                c.hbm_bytes += (self._fusion_io_bytes(called, op) if called
+                                else self._io_bytes(op))
+            return c
+        if oc.rstrip("-start").rstrip("-done") in COLLECTIVES or oc in COLLECTIVES:
+            base = oc.replace("-start", "").replace("-done", "")
+            if not oc.endswith("-done"):
+                b = _bytes(op.shapes)
+                c.coll[base] = c.coll.get(base, 0.0) + b
+                c.coll["n_collectives"] = c.coll.get("n_collectives", 0.0) + 1
+                if top_level:
+                    c.hbm_bytes += self._io_bytes(op)
+            return c
+        if oc == "dot":
+            c.flops += self._dot_flops(op)
+            if top_level:
+                c.hbm_bytes += self._io_bytes(op)
+            return c
+        if oc == "convolution":
+            c.flops += 2 * _elems(op.shapes) * self._conv_contract(op)
+            if top_level:
+                c.hbm_bytes += self._io_bytes(op)
+            return c
+        if oc in ("reduce", "reduce-window"):
+            c.flops += sum(_elems(self.shape_of.get(o, [])) for o in op.operands[:1])
+            if top_level:
+                c.hbm_bytes += self._io_bytes(op)
+            return c
+        if oc in ELEMENTWISE:
+            c.flops += _elems(op.shapes)
+            if top_level:
+                c.hbm_bytes += self._io_bytes(op)
+            return c
+        if oc in MEMORY_OPS:
+            if top_level:
+                c.hbm_bytes += self._io_bytes(op)
+            return c
+        if oc in ZERO_OPS:
+            return c
+        # unknown op: count memory conservatively
+        if top_level:
+            c.hbm_bytes += self._io_bytes(op)
+        return c
+
+    def _io_bytes(self, op: OpInfo) -> float:
+        if op.opcode == "dynamic-update-slice" and len(op.operands) >= 2:
+            # in-place: traffic = read update + write slice (not the buffer)
+            return 2.0 * _bytes(self.shape_of.get(op.operands[1], []))
+        b = _bytes(op.shapes)
+        for o in op.operands:
+            b += _bytes(self.shape_of.get(o, []))
+        return b
+
+    def _fusion_io_bytes(self, called: str, op: OpInfo) -> float:
+        """HBM traffic of a fusion, looking *inside* the fused computation.
+
+        Loop bodies index big stacked scan buffers with dynamic-slice /
+        dynamic-update-slice inside fusions; counting the whole buffer as
+        operand traffic over-counts by the trip count.  Reads: a parameter
+        consumed only by dynamic-slice counts as the slice size.  Writes: a
+        root produced by dynamic-update-slice counts as the update size.
+        """
+        ops = self.comps.get(called)
+        if not ops:
+            return self._io_bytes(op)
+        by_name = {o.name: o for o in ops}
+        reads = 0.0
+        for o in ops:
+            if o.opcode != "parameter":
+                continue
+            uses = [u for u in ops if o.name in u.operands]
+            if uses and all(u.opcode == "dynamic-slice" or
+                            (u.opcode == "dynamic-update-slice"
+                             and u.operands and u.operands[0] == o.name)
+                            for u in uses):
+                for u in uses:
+                    if u.opcode == "dynamic-slice":
+                        reads += _bytes(u.shapes)
+                    # DUS buffer operand: aliased in-place, no read traffic
+            else:
+                reads += _bytes(o.shapes)
+        writes = 0.0
+        roots = [o for o in ops if o.is_root]
+        comps_to_write = []
+        for r in roots:
+            if r.opcode == "tuple":
+                comps_to_write.extend(by_name.get(n) for n in r.operands)
+            else:
+                comps_to_write.append(r)
+        for r in comps_to_write:
+            if r is None:
+                writes += 0.0
+            elif r.opcode == "dynamic-update-slice" and len(r.operands) >= 2:
+                writes += _bytes(self.shape_of.get(r.operands[1], []))
+            else:
+                writes += _bytes(r.shapes)
+        return reads + writes
+
+    def _dot_flops(self, op: OpInfo) -> float:
+        out = _elems(op.shapes)
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+        lhs = self.shape_of.get(op.operands[0], [])
+        contract = 1.0
+        if m and lhs:
+            dims = lhs[0][1]
+            for d in m.group(1).split(","):
+                if d and int(d) < len(dims):
+                    contract *= dims[int(d)]
+        return 2.0 * out * contract
+
+    def _conv_contract(self, op: OpInfo) -> float:
+        m = re.search(r"window=\{size=([0-9x]+)", op.rest)
+        k = 1.0
+        if m:
+            for d in m.group(1).split("x"):
+                k *= int(d)
+        lhs = self.shape_of.get(op.operands[0], [])
+        cin = lhs[0][1][-1] if lhs and lhs[0][1] else 1
+        return k * cin
+
+    def _trip_count(self, op: OpInfo) -> Optional[int]:
+        m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', op.rest)
+        if m:
+            return int(m.group(1))
+        return None
+
+
+def _attr(rest: str, name: str) -> Optional[str]:
+    m = re.search(rf"{name}=%?([\w\.\-]+)", rest)
+    return m.group(1) if m else None
+
+
+def _split_operands(tail: str) -> Tuple[List[str], str]:
+    """Split 'a, %b, f32[] constant(3)), attr=1, ...' at top level."""
+    depth = 0
+    out, cur = [], []
+    for i, ch in enumerate(tail):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            if depth == 0:
+                out.append("".join(cur).strip())
+                rest = tail[i + 1:]
+                ops = [o.lstrip("%") for o in out if o.startswith("%")]
+                return ops, rest
+            depth -= 1
+        elif ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+            continue
+        cur.append(ch)
+    ops = [o.lstrip("%") for o in out if o.startswith("%")]
+    return ops, ""
+
+
+def analyze_text(hlo_text: str) -> Dict:
+    mod = HloModule(hlo_text)
+    c = mod.cost()
+    coll_total = sum(v for k, v in c.coll.items() if k != "n_collectives")
+    return {
+        "flops": c.flops,
+        "hbm_bytes": c.hbm_bytes,
+        "coll_bytes": coll_total,
+        "coll": c.coll,
+        "warnings": c.warnings[:10],
+    }

@@ -1,0 +1,108 @@
+"""Top-contributor breakdown of a dry-run cell's HLO — the hillclimb profiler.
+
+    PYTHONPATH=src:. python -m benchmarks.hlo_top --arch qwen3_14b \
+        --shape train_4k [--multi-pod] [--by coll|bytes|flops] [-n 20]
+
+Prints the N largest per-op contributions (trip-count multiplied) to the
+chosen roofline term, with the op's metadata name so it maps back to the
+JAX source line.
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+
+
+def collect(mod, by: str):
+    contrib = []
+
+    def walk(comp, mult):
+        for op in mod.comps.get(comp, ()):
+            oc = op.opcode
+            if oc == "while":
+                trip = mod._trip_count(op) or 1
+                for attr in ("body", "condition"):
+                    m = re.search(rf"{attr}=%([\w\.\-]+)", op.rest)
+                    if m:
+                        walk(m.group(1), mult * trip)
+                continue
+            meta = re.search(r'op_name="([^"]+)"', op.rest)
+            label = meta.group(1)[-90:] if meta else op.name
+            if by == "coll":
+                base = oc.replace("-start", "")
+                if base in ("all-gather", "all-reduce", "reduce-scatter",
+                            "all-to-all", "collective-permute") \
+                        and not oc.endswith("-done"):
+                    from benchmarks.hlo_cost import _bytes
+                    contrib.append((_bytes(op.shapes) * mult, base, label))
+            elif by == "bytes":
+                if oc == "fusion":
+                    m = re.search(r"calls=%([\w\.\-]+)", op.rest)
+                    b = mod._fusion_io_bytes(m.group(1), op) if m else mod._io_bytes(op)
+                    contrib.append((b * mult, oc, label))
+                elif oc not in ("parameter", "constant", "tuple",
+                                "get-tuple-element", "bitcast", "reshape"):
+                    contrib.append((mod._io_bytes(op) * mult, oc, label))
+            else:  # flops
+                c = mod._op_cost(op, top_level=False)
+                if c.flops:
+                    contrib.append((c.flops * mult, oc, label))
+
+    walk(mod.entry, 1.0)
+    contrib.sort(reverse=True)
+    return contrib
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--by", default="bytes", choices=["bytes", "coll", "flops"])
+    ap.add_argument("-n", type=int, default=20)
+    args = ap.parse_args()
+
+    # reuse the dryrun cell builder, then walk its HLO
+    import repro.launch.dryrun  # sets XLA_FLAGS before jax init
+    from benchmarks.hlo_cost import HloModule
+
+    import jax
+    from repro.configs.base import SHAPES, get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.registry import build_model
+    from repro.nn.params import param_shapes
+    from repro.optim.adam import adam_init
+    from repro.train import steps as steps_mod
+
+    cfg = get_config(args.arch)
+    spec = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    model = build_model(cfg, mesh)
+    p_shapes = param_shapes(model.defs())
+    bs = steps_mod.batch_shardings(model, spec.seq_len, spec.global_batch,
+                                   spec.mode, mesh)
+    ins = model.input_specs(spec.seq_len, spec.global_batch, spec.mode)
+    if spec.mode == "train":
+        fn, _ = steps_mod.make_train_step(model, mesh, donate=False,
+                                          batch_shards=bs)
+        lowered = fn.lower(p_shapes, jax.eval_shape(adam_init, p_shapes), ins)
+    elif spec.mode == "prefill":
+        fn = steps_mod.make_prefill(model, mesh, batch_shards=bs)
+        lowered = fn.lower(p_shapes, ins)
+    else:
+        cs = param_shapes(model.cache_defs(spec.global_batch, spec.seq_len))
+        fn = steps_mod.make_decode_step(model, spec.global_batch,
+                                        spec.seq_len, mesh)
+        lowered = fn.lower(p_shapes, cs, ins["tokens"])
+
+    mod = HloModule(lowered.compile().as_text())
+    rows = collect(mod, args.by)
+    total = sum(r[0] for r in rows)
+    print(f"total {args.by}: {total:.4g}   (top {args.n})")
+    for v, oc, label in rows[:args.n]:
+        print(f"{v:12.4g} {100*v/max(total,1e-30):5.1f}%  {oc:12s} {label}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""§Roofline: three-term analysis per (arch × shape × mesh) from the dry-run.
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+All three inputs come from benchmarks/hlo_cost.py's loop-aware walk over the
+*partitioned* compiled HLO (per-device numbers by construction).  The
+collective term approximates ring-algorithm wire cost: an all-reduce moves
+≈2× its operand bytes per device, all-gather/reduce-scatter ≈1×, over
+n_links≈2 usable ICI links per axis hop (v5e 2D torus, conservative).
+
+MODEL_FLOPS = 6·N·D (train, dense) / 6·N_active·D (MoE) / 2·N·D (prefill) /
+2·N_active·B (decode, per step) — the "useful work" yardstick; the ratio
+against HLO FLOPs exposes remat/redundant compute.
+
+Usage:  PYTHONPATH=src:. python -m benchmarks.roofline [--jsonl results/dryrun_all.jsonl]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, Optional
+
+# TPU v5e per-chip constants (assignment-specified)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # B/s
+LINK_BW = 50e9             # B/s per ICI link
+N_LINKS = 2                # conservative usable links per device
+
+_PARAM_CACHE: Dict[str, Dict[str, float]] = {}
+
+
+def arch_params(arch: str) -> Dict[str, float]:
+    """Total and active parameter counts from the PDefs (cached)."""
+    if arch in _PARAM_CACHE:
+        return _PARAM_CACHE[arch]
+    import numpy as np
+
+    from repro.configs.base import get_config
+    from repro.models.registry import build_model
+    from repro.nn.params import is_pdef
+
+    import jax
+    cfg = get_config(arch)
+    defs = build_model(cfg).defs()
+    total = active = 0.0
+    for d in jax.tree.leaves(defs, is_leaf=is_pdef):
+        n = float(np.prod(d.shape))
+        total += n
+        if "experts" in d.axes:
+            active += n * cfg.top_k / max(cfg.n_experts, 1)
+        else:
+            active += n
+    _PARAM_CACHE[arch] = {"total": total, "active": active}
+    return _PARAM_CACHE[arch]
+
+
+def model_flops(arch: str, shape: str) -> float:
+    from repro.configs.base import SHAPES
+    spec = SHAPES[shape]
+    p = arch_params(arch)
+    tokens = spec.seq_len * spec.global_batch
+    if spec.mode == "train":
+        return 6.0 * p["active"] * tokens
+    if spec.mode == "prefill":
+        return 2.0 * p["active"] * tokens
+    # decode: one token per sequence in the batch
+    return 2.0 * p["active"] * spec.global_batch
+
+
+def coll_wire_bytes(coll: Dict[str, float]) -> float:
+    """Ring-cost-weighted wire bytes per device."""
+    w = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+         "all-to-all": 1.0, "collective-permute": 1.0}
+    return sum(v * w.get(k, 1.0) for k, v in coll.items()
+               if k != "n_collectives")
+
+
+def analyze_record(r: Dict) -> Dict:
+    flops = r["flops"]
+    hbm = r["hbm_bytes"]
+    wire = coll_wire_bytes(r.get("coll", {}))
+    t_comp = flops / PEAK_FLOPS
+    t_mem = hbm / HBM_BW
+    t_coll = wire / (LINK_BW * N_LINKS)
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(r["arch"], r["shape"])
+    hlo_global = flops * r["n_devices"]
+    bound = max(terms.values())
+    # roofline fraction: useful model flops per step / (what the dominant
+    # term would allow at peak) — i.e. achievable MFU of this lowering
+    mfu = (mf / r["n_devices"] / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return {
+        **{k: r[k] for k in ("arch", "shape", "mesh", "n_devices")},
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dom,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "roofline_mfu": mfu,
+        "compile_s": r.get("compile_s", -1),
+    }
+
+
+def load(jsonl: str):
+    out = []
+    with open(jsonl) as f:
+        for line in f:
+            if line.strip():
+                out.append(json.loads(line))
+    return out
+
+
+def render_table(rows, multi_pod: Optional[bool] = None) -> str:
+    lines = [f"{'arch':16s} {'shape':12s} {'mesh':9s} "
+             f"{'compute':>9s} {'memory':>9s} {'collect':>9s} {'dominant':>10s} "
+             f"{'MODEL/HLO':>9s} {'rMFU':>6s}"]
+    for a in rows:
+        if multi_pod is not None and (a["mesh"].count("x") == 2) != multi_pod:
+            continue
+        lines.append(
+            f"{a['arch']:16s} {a['shape']:12s} {a['mesh']:9s} "
+            f"{a['t_compute_s']*1e3:8.1f}ms {a['t_memory_s']*1e3:8.1f}ms "
+            f"{a['t_collective_s']*1e3:8.1f}ms {a['dominant']:>10s} "
+            f"{a['useful_ratio']:9.3f} {a['roofline_mfu']:6.3f}")
+    return "\n".join(lines)
+
+
+def run() -> None:
+    main(["--jsonl", "results/dryrun_all.jsonl"])
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jsonl", default="results/dryrun_all.jsonl")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    rows = [analyze_record(r) for r in load(args.jsonl)]
+    txt = render_table(rows)
+    print(txt)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

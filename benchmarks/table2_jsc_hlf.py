@@ -1,0 +1,83 @@
+"""Paper Table II / Fig. 2: HLF-JSC accuracy vs LUT-usage Pareto frontier.
+
+One β-ramped training run; snapshots along the ramp give (accuracy, EBOPs,
+estimated LUTs) points.  Datasets are synthetic JSC analogues (no network in
+this env), so absolute accuracies differ from the paper; the deliverable is
+the frontier shape: accuracy degrades gracefully while LUTs fall by >10×
+(the paper's low-LUT-region advantage).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.ebops import BetaSchedule, estimate_luts
+from repro.core.lut_layers import LUTDense
+from repro.core.quant import int_to_float, quantize_to_int
+from repro.data.synthetic import jsc_hlf
+from repro.nn.base import merge_aux
+from repro.optim.adam import AdamConfig, adam_init, adam_update, cosine_restarts
+
+STEPS = 700
+SNAP = 100
+
+
+def run() -> None:
+    xtr, ytr = jsc_hlf(0, 16000, "train")
+    xte, yte = jsc_hlf(0, 4000, "test")
+    q = lambda x: int_to_float(quantize_to_int(x, 4, 3, True, "SAT"), 4)
+    xtr, xte = q(xtr), q(xte)
+
+    l1 = LUTDense(16, 20, hidden=8, use_batchnorm=True)
+    l2 = LUTDense(20, 5, hidden=8)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    params = {"l1": l1.init(k1), "l2": l2.init(k2)}
+    opt = adam_init(params)
+    beta = BetaSchedule(5e-7, 1.5e-4, STEPS)
+    acfg = AdamConfig(lr=3e-3)
+    sched = cosine_restarts(3e-3, first_period=STEPS // 2, warmup=30)
+
+    @jax.jit
+    def step(params, opt, x, y, s):
+        def loss_fn(p):
+            h, a1 = l1.apply(p["l1"], x, train=True)
+            logits, a2 = l2.apply(p["l2"], h, train=True)
+            aux = merge_aux(a1, a2)
+            ce = -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(x.shape[0]), y])
+            return ce + beta(s) * aux.ebops, aux
+        (_, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt, _ = adam_update(params, grads, opt, acfg, sched)
+        for path, val in aux.updates.items():
+            params["l1"][path] = val
+        return params, opt, aux.ebops
+
+    @jax.jit
+    def acc_fn(params):
+        h, _ = l1.apply(params["l1"], jnp.asarray(xte), train=False)
+        logits, _ = l2.apply(params["l2"], h, train=False)
+        return jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(yte))
+
+    rng = np.random.default_rng(0)
+    import time
+    t0 = time.time()
+    points = []
+    for s in range(STEPS):
+        idx = rng.integers(0, len(xtr), 1024)
+        params, opt, ebops = step(params, opt, jnp.asarray(xtr[idx]),
+                                  jnp.asarray(ytr[idx]), jnp.asarray(s))
+        if (s + 1) % SNAP == 0:
+            acc = float(acc_fn(params))
+            eb = float(ebops)
+            points.append((acc, eb, estimate_luts(eb)))
+    us = (time.time() - t0) / STEPS * 1e6
+    for acc, eb, luts in points:
+        emit("table2/pareto_point", us,
+             f"acc={acc:.4f};ebops={eb:.0f};est_luts={luts:.0f}")
+    accs = [p[0] for p in points]
+    luts = [p[2] for p in points]
+    emit("table2/frontier", us,
+         f"lut_reduction={max(luts)/max(min(luts),1):.1f}x;"
+         f"acc_drop={max(accs)-accs[-1]:.4f}")

@@ -1,0 +1,121 @@
+"""Paper Table III: PLF-JSC LUT-GNN + TGC muon-tracking hybrid.
+
+* PLF: JEDI-Linear-style permutation-invariant network with the paper's
+  substitution — EinsumDense → LUT-Dense (per-particle encoder + sum pool +
+  LUT-Dense classifier head), hidden dim 8 as in §V-D.
+* TGC: hybrid per §V-E — HGQ (matmul) feature extractor + LUT-Dense output
+  head, regression target in mrad; metric is angular resolution (RMS).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.ebops import estimate_luts
+from repro.core.hgq_layers import HGQDense
+from repro.core.lut_layers import LUTDense
+from repro.core.quant import int_to_float, quantize_to_int
+from repro.data.synthetic import jsc_plf, tgc_muon
+from repro.nn.base import merge_aux
+from repro.optim.adam import AdamConfig, adam_init, adam_update, cosine_restarts
+
+
+def run_plf() -> None:
+    N_P, N_F, HID = 16, 8, 8       # paper reduces hidden dims to 8
+    xtr, ytr = jsc_plf(0, 8000, N_P, N_F, "train")
+    xte, yte = jsc_plf(0, 2000, N_P, N_F, "test")
+    q = lambda x: int_to_float(quantize_to_int(x, 4, 3, True, "SAT"), 4)
+    xtr, xte = q(xtr), q(xte)
+
+    enc = LUTDense(N_F, HID, hidden=8, use_batchnorm=True)   # per-particle
+    head = LUTDense(HID, 5, hidden=8)
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    params = {"enc": enc.init(ks[0]), "head": head.init(ks[1])}
+    opt = adam_init(params)
+    acfg = AdamConfig(lr=3e-3)
+    sched = cosine_restarts(3e-3, first_period=200, warmup=20)
+
+    def fwd(p, x, train):
+        h, a1 = enc.apply(p["enc"], x, train=train)       # (B, P, HID)
+        pooled = jnp.mean(h, axis=1)                      # permutation-inv
+        logits, a2 = head.apply(p["head"], pooled, train=train)
+        return logits, merge_aux(a1, a2)
+
+    @jax.jit
+    def step(params, opt, x, y):
+        def loss_fn(p):
+            logits, aux = fwd(p, x, True)
+            ce = -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(x.shape[0]), y])
+            return ce + 1e-7 * aux.ebops, aux
+        (_, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt, _ = adam_update(params, g, opt, acfg, sched)
+        for path, val in aux.updates.items():
+            params["enc"][path] = val
+        return params, opt, aux.ebops
+
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for s in range(400):
+        idx = rng.integers(0, len(xtr), 512)
+        params, opt, ebops = step(params, opt, jnp.asarray(xtr[idx]),
+                                  jnp.asarray(ytr[idx]))
+    us = (time.time() - t0) / 400 * 1e6
+    logits, aux = fwd(params, jnp.asarray(xte), False)
+    acc = float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(yte)))
+    eb = float(aux.ebops)
+    emit("table3/plf_lut_gnn", us,
+         f"acc={acc:.4f};ebops={eb:.0f};est_luts={estimate_luts(eb):.0f}")
+
+
+def run_tgc() -> None:
+    xtr, atr = tgc_muon(0, 12000, "train")
+    xte, ate = tgc_muon(0, 3000, "test")
+
+    feat1 = HGQDense(350, 32, activation="relu")
+    feat2 = HGQDense(32, 16, activation="relu")
+    head = LUTDense(16, 1, hidden=8)
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    params = {"f1": feat1.init(ks[0]), "f2": feat2.init(ks[1]),
+              "h": head.init(ks[2])}
+    opt = adam_init(params)
+    acfg = AdamConfig(lr=1e-3)
+    sched = cosine_restarts(1e-3, first_period=300, warmup=20)
+
+    def fwd(p, x, train):
+        z, a1 = feat1.apply(p["f1"], x, train=train)
+        z, a2 = feat2.apply(p["f2"], z, train=train)
+        pred, a3 = head.apply(p["h"], z, train=train)
+        return pred[:, 0] * 30.0, merge_aux(a1, a2, a3)
+
+    @jax.jit
+    def step(params, opt, x, a):
+        def loss_fn(p):
+            pred, aux = fwd(p, x, True)
+            return jnp.mean((pred - a) ** 2) / 900.0 + 2e-8 * aux.ebops, aux
+        (_, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt, _ = adam_update(params, g, opt, acfg, sched)
+        return params, opt, aux.ebops
+
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for s in range(600):
+        idx = rng.integers(0, len(xtr), 512)
+        params, opt, ebops = step(params, opt, jnp.asarray(xtr[idx]),
+                                  jnp.asarray(atr[idx]))
+    us = (time.time() - t0) / 600 * 1e6
+    pred, aux = fwd(params, jnp.asarray(xte), False)
+    res = float(jnp.sqrt(jnp.mean((pred - jnp.asarray(ate)) ** 2)))
+    eb = float(aux.ebops)
+    emit("table3/tgc_hybrid", us,
+         f"resolution_mrad={res:.3f};ebops={eb:.0f};"
+         f"est_luts={estimate_luts(eb):.0f}")
+
+
+def run() -> None:
+    run_plf()
+    run_tgc()

@@ -1,0 +1,23 @@
+"""Phi-3.5-MoE (42B total / 6.6B active) [hf:microsoft/Phi-3.5-MoE-instruct].
+
+16 experts, top-2 routing, GQA kv=8.
+"""
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi35_moe", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=6400, vocab=32064,
+    n_experts=16, top_k=2,
+    mlp_type="glu", act="silu",
+    fsdp=True,
+    serve_fsdp=0,
+)
+
+
+def smoke() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=96, vocab=256, n_experts=4, q_chunk=16, fsdp=False)

@@ -1,0 +1,303 @@
+"""DAIS — distributed-arithmetic instruction set with the L-LUT extension.
+
+The paper extends da4ml's internal IR with a logic-lookup instruction so that
+LUT-layers, quantizers and plain fixed-point arithmetic live in one program
+that can be (a) interpreted bit-exactly on CPU (up to 64-bit internal width)
+and (b) emitted as RTL.  We reproduce that layer: a linear SSA program over
+integer *codes*, each register annotated with its fixed-point format
+(fractional bits ``f``, signedness, width).
+
+Instructions
+------------
+``IN k``                read scalar k of the program input vector
+``CONST c``            integer constant code
+``REQUANT r,(f,i,s,mode)``  re-quantize register r onto a new grid
+``LLUT r,(layer,j,i)``  truth-table lookup (tables stored on the program)
+``CMUL r,(code,f)``     multiply by a fixed-point constant (exact in ints)
+``ADD a,b`` / ``SUB a,b``  aligned fixed-point add/sub (result f = max)
+``OUT r``              append register r to the output vector
+
+The interpreter vectorises over a leading batch axis (register values are
+int64 arrays of shape (B,)), mirroring da4ml's batched emulation mode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.tables import LayerTables
+
+
+@dataclasses.dataclass
+class Reg:
+    """Static metadata of one SSA register."""
+
+    f: int          # fractional bits of the code grid
+    width: int      # total physical bits (incl. sign)
+    signed: bool
+
+
+@dataclasses.dataclass
+class Instr:
+    op: str
+    args: tuple
+    reg: Reg        # metadata of the produced value
+
+
+@dataclasses.dataclass
+class DaisProgram:
+    instrs: List[Instr] = dataclasses.field(default_factory=list)
+    outputs: List[int] = dataclasses.field(default_factory=list)
+    input_f: List[int] = dataclasses.field(default_factory=list)
+    input_signed: List[bool] = dataclasses.field(default_factory=list)
+    tables: Dict[int, LayerTables] = dataclasses.field(default_factory=dict)
+    output_f: List[int] = dataclasses.field(default_factory=list)
+
+    # ------------------------------------------------------------- builders
+    def emit(self, op: str, args: tuple, reg: Reg) -> int:
+        self.instrs.append(Instr(op, args, reg))
+        if reg.width > 64:
+            raise OverflowError(
+                f"register width {reg.width} exceeds the 64-bit interpreter "
+                f"limit (op={op})")
+        return len(self.instrs) - 1
+
+    def n_instrs(self) -> int:
+        return len(self.instrs)
+
+    def count_ops(self) -> Dict[str, int]:
+        c: Dict[str, int] = {}
+        for ins in self.instrs:
+            c[ins.op] = c.get(ins.op, 0) + 1
+        return c
+
+    # ---------------------------------------------------------- interpreter
+    def run(self, x_codes: np.ndarray) -> np.ndarray:
+        """Bit-exact batched evaluation.
+
+        ``x_codes``: (B, n_inputs) int64 input codes (on the grids declared in
+        ``input_f``).  Returns (B, n_outputs) int64 codes on ``output_f``.
+        """
+        x_codes = np.asarray(x_codes, np.int64)
+        if x_codes.ndim == 1:
+            x_codes = x_codes[None]
+        vals: List[np.ndarray] = []
+        for ins in self.instrs:
+            op, a = ins.op, ins.args
+            if op == "IN":
+                v = x_codes[:, a[0]]
+            elif op == "CONST":
+                v = np.full(x_codes.shape[:1], a[0], np.int64)
+            elif op == "REQUANT":
+                src, f, i, signed, mode, src_f = a
+                v = _requant(vals[src], src_f, f, i, signed, mode)
+            elif op == "LLUT":
+                src, layer_id, j, i = a
+                t = self.tables[layer_id]
+                m = int(t.in_width[j, i])
+                size = 1 << m if m > 0 else 1
+                idx = np.mod(vals[src], size)
+                v = t.codes[j, i, idx]
+            elif op == "CMUL":
+                src, code, _f = a
+                v = vals[src] * np.int64(code)
+            elif op in ("ADD", "SUB"):
+                ra, rb = a
+                fa, fb = self.instrs[ra].reg.f, self.instrs[rb].reg.f
+                F = max(fa, fb)
+                va = vals[ra] << np.int64(F - fa)
+                vb = vals[rb] << np.int64(F - fb)
+                v = va + vb if op == "ADD" else va - vb
+            else:
+                raise ValueError(f"unknown op {op}")
+            vals.append(v.astype(np.int64))
+        return np.stack([vals[r] for r in self.outputs], axis=-1)
+
+    def run_float(self, x: np.ndarray) -> np.ndarray:
+        """Convenience: float inputs -> float outputs (quantizing at the edges)."""
+        x = np.asarray(x, np.float64)
+        codes = np.empty(x.shape, np.int64)
+        for k, (f, s) in enumerate(zip(self.input_f, self.input_signed)):
+            # inputs are assumed pre-quantized; map to the declared grid
+            codes[..., k] = np.round(x[..., k] * np.exp2(f)).astype(np.int64)
+        out = self.run(codes)
+        return out.astype(np.float64) * np.exp2(-np.asarray(self.output_f, np.float64))
+
+
+def _requant(v: np.ndarray, src_f: int, f: int, i: int, signed: bool, mode: str) -> np.ndarray:
+    """Exact integer re-quantization between fixed-point grids."""
+    shift = f - src_f
+    if shift >= 0:
+        code = v << np.int64(shift)
+    else:
+        # round-half-to-even on the dropped bits, matching np.round/jnp.round
+        s = -shift
+        floor = v >> np.int64(s)
+        rem = v - (floor << np.int64(s))
+        half = np.int64(1) << np.int64(s - 1)
+        code = np.where(rem > half, floor + 1,
+                        np.where(rem < half, floor,
+                                 floor + (floor & 1)))  # ties -> even
+    width = f + i + (1 if signed else 0)
+    if width <= 0:
+        return np.zeros_like(v)
+    n_codes = np.int64(1) << np.int64(width)
+    lo = -(n_codes >> 1) if signed else np.int64(0)
+    hi = lo + n_codes - 1
+    if mode == "SAT":
+        return np.clip(code, lo, hi)
+    return lo + np.mod(code - lo, n_codes)
+
+
+def _tree_add(prog: DaisProgram, regs: List[int], f: int) -> int:
+    """Balanced adder tree (width grows log2(n), matching da4ml's reduction
+    hardware rather than a linear accumulator chain)."""
+    assert regs
+    while len(regs) > 1:
+        nxt = []
+        for a, b in zip(regs[::2], regs[1::2]):
+            w = max(prog.instrs[a].reg.width, prog.instrs[b].reg.width) + 1
+            nxt.append(prog.emit("ADD", (a, b), Reg(f, w, True)))
+        if len(regs) % 2:
+            nxt.append(regs[-1])
+        regs = nxt
+    return regs[0]
+
+
+# --------------------------------------------------------------------------- #
+# frontend: compile a Sequential of LUT/HGQ layers into a DAIS program
+# --------------------------------------------------------------------------- #
+def compile_sequential(layers: Sequence, params_list: Sequence[dict],
+                       input_f: int, input_i: int,
+                       input_signed: bool = True) -> DaisProgram:
+    """Lower a list of (LUTDense | HGQDense) layers to DAIS.
+
+    The float input is assumed pre-quantized to (input_f, input_i); each
+    layer's quantizers then govern all internal grids, matching the HGQ →
+    da4ml flow of Fig. 1.
+    """
+    from repro.core.hgq_layers import HGQDense
+    from repro.core.lut_layers import LUTDense
+    from repro.core.quant import int_bits
+    from repro.core.tables import extract_tables
+
+    prog = DaisProgram()
+    c_in = layers[0].c_in
+    prog.input_f = [input_f] * c_in
+    prog.input_signed = [input_signed] * c_in
+    in_w = input_f + input_i + (1 if input_signed else 0)
+    regs = [prog.emit("IN", (k,), Reg(input_f, in_w, input_signed))
+            for k in range(c_in)]
+
+    for lid, (layer, params) in enumerate(zip(layers, params_list)):
+        if isinstance(layer, LUTDense):
+            regs = _lower_lut_dense(prog, lid, layer, params, regs)
+        elif isinstance(layer, HGQDense):
+            regs = _lower_hgq_dense(prog, lid, layer, params, regs)
+        else:
+            raise TypeError(f"cannot lower layer type {type(layer)}")
+
+    prog.outputs = regs
+    prog.output_f = [prog.instrs[r].reg.f for r in regs]
+    return prog
+
+
+def _lower_lut_dense(prog: DaisProgram, lid: int, layer, params, in_regs) -> List[int]:
+    from repro.core.tables import extract_tables
+
+    t = extract_tables(layer, params)
+    prog.tables[lid] = t
+    F = t.common_f_out()
+    out_regs: List[int] = []
+    for i in range(t.c_out):
+        terms: List[int] = []
+        for j in range(t.c_in):
+            m = int(t.in_width[j, i])
+            n = int(t.out_width[j, i])
+            if m <= 0 or n <= 0:
+                continue  # pruned cell
+            src = in_regs[j]
+            rq = prog.emit(
+                "REQUANT",
+                (src, int(t.f_in[j, i]), int(t.i_in[j, i]), True, "WRAP",
+                 prog.instrs[src].reg.f),
+                Reg(int(t.f_in[j, i]), m, True))
+            lu = prog.emit("LLUT", (rq, lid, j, i), Reg(int(t.f_out[j, i]), n, True))
+            if int(t.f_out[j, i]) != F:
+                lu = prog.emit("CMUL", (lu, 1 << (F - int(t.f_out[j, i])), 0),
+                               Reg(F, n + F - int(t.f_out[j, i]), True))
+            terms.append(lu)
+        if not terms:  # fully pruned output
+            out_regs.append(prog.emit("CONST", (0,), Reg(F, 1, True)))
+        else:
+            out_regs.append(_tree_add(prog, terms, F))
+    return out_regs
+
+
+def _lower_hgq_dense(prog: DaisProgram, lid: int, layer, params, in_regs) -> List[int]:
+    """Lower an HGQ dense layer: per-element constant multiplies + adds.
+
+    Activation quantizer grids come from q_a; weights use their per-element
+    (f, i).  Nonlinear activations other than relu are not representable in
+    plain DAIS (da4ml would emit them as L-LUTs); relu is lowered as a
+    saturating REQUANT with lo clamped at 0 via the unsigned grid.
+    """
+    import numpy as np
+
+    from repro.core.quant import int_bits, quantize_to_int
+
+    fa, ia = int_bits(params["q_a"], layer.q_a)
+    fw, iw = int_bits(params["q_w"], layer.q_w)
+    fa = np.broadcast_to(fa, (layer.c_in,))
+    ia = np.broadcast_to(ia, (layer.c_in,))
+    w = np.asarray(params["w"], np.float64)
+    w_codes = quantize_to_int(w, fw, iw, layer.q_w.signed, layer.q_w.overflow)
+    bias = np.asarray(params.get("b", np.zeros(layer.c_out)), np.float64)
+
+    ka = 1 if layer.q_a.signed else 0
+    # quantize inputs once per j
+    act_regs = []
+    for j in range(layer.c_in):
+        src = in_regs[j]
+        wdt = int(fa[j] + ia[j] + ka)
+        act_regs.append(prog.emit(
+            "REQUANT",
+            (src, int(fa[j]), int(ia[j]), layer.q_a.signed,
+             layer.q_a.overflow, prog.instrs[src].reg.f),
+            Reg(int(fa[j]), max(wdt, 1), layer.q_a.signed)))
+
+    out_regs: List[int] = []
+    for i in range(layer.c_out):
+        F = int(max((fw[j, i] + fa[j]) for j in range(layer.c_in)))
+        terms: List[int] = []
+        for j in range(layer.c_in):
+            code = int(w_codes[j, i])
+            if code == 0:
+                continue
+            f_prod = int(fw[j, i] + fa[j])
+            wdt = prog.instrs[act_regs[j]].reg.width + \
+                max(abs(code).bit_length() + 1, 1)
+            r = prog.emit("CMUL", (act_regs[j], code, int(fw[j, i])),
+                          Reg(f_prod, wdt, True))
+            if f_prod != F:
+                r = prog.emit("CMUL", (r, 1 << (F - f_prod), 0),
+                              Reg(F, wdt + F - f_prod, True))
+            terms.append(r)
+        b_code = int(np.round(bias[i] * 2.0 ** F))
+        b_width = max(abs(b_code).bit_length() + 1, 1)
+        if b_code != 0 or not terms:
+            terms.append(prog.emit("CONST", (b_code,), Reg(F, b_width, True)))
+        acc = _tree_add(prog, terms, F)
+        if layer.activation == "relu":
+            # relu == clamp to the non-negative grid of the same precision
+            wdt = prog.instrs[acc].reg.width
+            acc = prog.emit("REQUANT", (acc, F, max(wdt - F, 1), False, "SAT", F),
+                            Reg(F, wdt, False))
+        elif layer.activation is not None:
+            raise NotImplementedError(
+                f"activation {layer.activation!r} needs an L-LUT lowering")
+        out_regs.append(acc)
+    return out_regs

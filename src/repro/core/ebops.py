@@ -1,0 +1,94 @@
+"""EBOPs resource surrogates and the beta trade-off schedule (paper §III-B, §IV-A).
+
+Two families of surrogate:
+
+* ``ebops_mac`` — the original HGQ surrogate for arithmetic (matmul/conv)
+  layers: one MAC between an ``m``-bit and an ``n``-bit operand costs ``m*n``
+  effective bit-operations.
+* ``ebops_lut`` — Eq. (5) of the paper, the LUT-aware surrogate: an L-LUT with
+  an ``m``-bit input and ``n``-bit output on LUT-X primitives (splittable into
+  ``2**(X-Y)`` LUT-Y's) costs
+
+      2**(m-X) * n          if m >= Y
+      (m/Y) * 2**(Y-X) * n  if m <  Y
+
+  The paper calibrates ``exp(0.985 * log(EBOPs)) ≈ #LUTs`` against da4ml +
+  Vivado; :func:`estimate_luts` applies that fit so benchmark tables can report
+  estimated LUT counts.
+
+The β schedule sweeps the accuracy/resource trade-off in a *single* training
+run (paper §V-A uses an exponential ramp, e.g. 5e-7 → 1e-3 for HLF JSC).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+# Default FPGA primitive geometry: LUT-6 splittable into two LUT-5s
+# (Xilinx 7-series / UltraScale+, as used by the paper's target xcvu13p).
+LUT_X = 6
+LUT_Y = 5
+
+
+def ebops_mac(w_bits: jnp.ndarray, a_bits: jnp.ndarray) -> jnp.ndarray:
+    """HGQ MAC surrogate for a dense layer.
+
+    ``w_bits``: (..., C_in, C_out) effective weight widths.
+    ``a_bits``: (..., C_in) effective input-activation widths (broadcast over
+    the output dim).  Returns a scalar.
+    """
+    return jnp.sum(w_bits * a_bits[..., :, None])
+
+
+def ebops_lut(m_bits: jnp.ndarray, n_bits: jnp.ndarray,
+              x: int = LUT_X, y: int = LUT_Y) -> jnp.ndarray:
+    """Eq. (5): cost of L-LUTs with input widths ``m_bits`` / output ``n_bits``.
+
+    Shapes of ``m_bits`` and ``n_bits`` must broadcast (the paper's LUT-Dense
+    has one (m, n) pair per (C_in, C_out) cell).  Differentiable in both
+    arguments; 0-width inputs or outputs contribute exactly 0.
+    """
+    m = jnp.maximum(m_bits, 0.0)
+    n = jnp.maximum(n_bits, 0.0)
+    wide = jnp.exp2(m - x) * n
+    narrow = (m / y) * (2.0 ** (y - x)) * n
+    cost = jnp.where(m >= y, wide, narrow)
+    return jnp.sum(jnp.where((m > 0) & (n > 0), cost, 0.0))
+
+
+def ebops_lut_np(m: np.ndarray, n: np.ndarray, x: int = LUT_X, y: int = LUT_Y) -> float:
+    """Host-side (numpy) Eq. (5) for deployment-time reporting."""
+    m = np.maximum(np.asarray(m, np.float64), 0.0)
+    n = np.maximum(np.asarray(n, np.float64), 0.0)
+    cost = np.where(m >= y, np.exp2(m - x) * n, (m / y) * 2.0 ** (y - x) * n)
+    return float(np.sum(np.where((m > 0) & (n > 0), cost, 0.0)))
+
+
+def estimate_luts(ebops: float) -> float:
+    """Paper's empirical da4ml calibration: #LUTs ≈ exp(0.985 · log EBOPs)."""
+    if ebops <= 0:
+        return 0.0
+    return float(np.exp(0.985 * np.log(ebops)))
+
+
+# --------------------------------------------------------------------------- #
+# beta schedule
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class BetaSchedule:
+    """Exponential β ramp over training steps (constant if beta_final is None)."""
+
+    beta_init: float = 5e-7
+    beta_final: float | None = 1e-3
+    total_steps: int = 1000
+
+    def __call__(self, step) -> jnp.ndarray:
+        b0 = jnp.asarray(self.beta_init, jnp.float32)
+        if self.beta_final is None:
+            return jnp.broadcast_to(b0, jnp.shape(step))
+        b1 = jnp.asarray(self.beta_final, jnp.float32)
+        t = jnp.clip(jnp.asarray(step, jnp.float32) / max(self.total_steps - 1, 1), 0.0, 1.0)
+        return jnp.exp((1.0 - t) * jnp.log(b0) + t * jnp.log(b1))

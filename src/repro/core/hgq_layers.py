@@ -1,0 +1,91 @@
+"""HGQ-quantized arithmetic layers (the matmul side of hybrid architectures).
+
+These are the "plain HGQ" layers of ref. [13] that the paper uses both as its
+baseline and as the non-LUT half of hybrid models (§V-E, §V-F): ordinary
+dense / conv layers whose weights and input activations pass through
+heterogeneous fake-quantizers with trainable per-element bit-widths, and whose
+resource surrogate is the MAC-level EBOPs  Σ bw_w · bw_a.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ebops import ebops_mac
+from repro.core.quant import QuantConfig, bitwidth, fake_quant, init_quantizer
+from repro.nn.base import Aux
+
+Array = jax.Array
+
+QW_DEFAULT = QuantConfig(granularity="element", signed=True, overflow="SAT",
+                         init_f=6.0, init_i=1.0)
+QA_DEFAULT = QuantConfig(granularity="channel", signed=True, overflow="SAT",
+                         init_f=6.0, init_i=3.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class HGQDense:
+    c_in: int
+    c_out: int
+    use_bias: bool = True
+    activation: Optional[str] = None
+    q_w: QuantConfig = QW_DEFAULT
+    q_a: QuantConfig = QA_DEFAULT
+
+    def init(self, key: Array) -> dict:
+        kw, = jax.random.split(key, 1)
+        params = {
+            "w": jax.random.normal(kw, (self.c_in, self.c_out)) * self.c_in ** -0.5,
+            "q_w": init_quantizer(self.q_w, (self.c_in, self.c_out)),
+            "q_a": init_quantizer(self.q_a, (self.c_in,)),
+        }
+        if self.use_bias:
+            params["b"] = jnp.zeros((self.c_out,))
+        return params
+
+    def apply(self, params: dict, x: Array, *, train: bool = False) -> Tuple[Array, Aux]:
+        xq = fake_quant(params["q_a"], x, self.q_a, train=train)
+        wq = fake_quant(params["q_w"], params["w"], self.q_w, train=train)
+        y = xq @ wq
+        if self.use_bias:
+            y = y + params["b"]
+        if self.activation == "relu":
+            y = jax.nn.relu(y)
+        elif self.activation == "tanh":
+            y = jnp.tanh(y)
+        eb = ebops_mac(bitwidth(params["q_w"], self.q_w),
+                       bitwidth(params["q_a"], self.q_a))
+        return y, Aux(ebops=eb, aux_loss=jnp.zeros((), jnp.float32), updates={})
+
+
+@dataclasses.dataclass(frozen=True)
+class HGQConv1D:
+    """im2col + HGQDense, mirroring LUTConv1D so hybrids swap layer types 1:1."""
+
+    c_in: int
+    c_out: int
+    kernel: int
+    stride: int = 1
+    padding: str = "VALID"
+    use_bias: bool = True
+    activation: Optional[str] = None
+    q_w: QuantConfig = QW_DEFAULT
+    q_a: QuantConfig = QA_DEFAULT
+
+    @property
+    def dense(self) -> HGQDense:
+        return HGQDense(self.c_in * self.kernel, self.c_out, self.use_bias,
+                        self.activation, self.q_w, self.q_a)
+
+    def init(self, key: Array) -> dict:
+        return self.dense.init(key)
+
+    def apply(self, params: dict, x: Array, *, train: bool = False):
+        from repro.core.lut_layers import im2col_1d
+
+        patches = im2col_1d(x, self.kernel, self.stride, self.padding)
+        return self.dense.apply(params, patches, train=train)

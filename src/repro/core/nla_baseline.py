@@ -1,0 +1,93 @@
+"""NLA-style LUT-aware-training baseline (paper §II / §III-A bottleneck model).
+
+NeuraLUT-Assemble replaces neurons with *high-fan-in* L-LUTs assembled into
+trees: each output is a tree of F-input L-LUTs, every L-LUT realised during
+training as a comparatively wide/deep MLP, and the input mappings are
+*learned* — implemented with dynamic gather operations.  The paper
+identifies exactly these two choices (wide per-LUT MLPs, irregular gathers)
+as the training-speed bottlenecks HGQ-LUT removes.
+
+We implement that computational pattern faithfully: per output neuron, a
+two-level tree of ⌈C_in/F⌉ leaf L-LUTs + one root L-LUT, each a width-64
+depth-2 MLP, fed through ``jnp.take`` gather mappings with straight-through
+trainable selection.  Used by benchmarks/table1_train_time.py for the
+Table-I speed/structure comparison.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.base import Aux
+
+Array = jax.Array
+
+
+def _mlp_defs(key, n: int, fan_in: int, width: int, depth: int) -> dict:
+    ks = jax.random.split(key, depth + 2)
+    params = {}
+    d_prev = fan_in
+    for l in range(depth):
+        params[f"w{l}"] = jax.random.normal(ks[l], (n, d_prev, width)) * d_prev ** -0.5
+        params[f"b{l}"] = jnp.zeros((n, width))
+        d_prev = width
+    params["w_out"] = jax.random.normal(ks[-1], (n, d_prev)) * d_prev ** -0.5
+    params["b_out"] = jnp.zeros((n,))
+    return params
+
+
+def _mlp_apply(p: dict, x: Array, depth: int) -> Array:
+    """x (..., n, fan_in) -> (..., n) through per-LUT MLPs."""
+    h = x
+    for l in range(depth):
+        h = jnp.tanh(jnp.einsum("...nf,nfh->...nh", h, p[f"w{l}"]) + p[f"b{l}"])
+    return jnp.einsum("...nh,nh->...n", h, p["w_out"]) + p["b_out"]
+
+
+@dataclasses.dataclass(frozen=True)
+class NLALayer:
+    """One NLA-style layer: per output, a tree of fan_in-input L-LUTs."""
+
+    c_in: int
+    c_out: int
+    fan_in: int = 6            # F: logical inputs per L-LUT (high fan-in)
+    mlp_width: int = 64        # wide MLP needed to approximate a 6-in table
+    mlp_depth: int = 2
+
+    @property
+    def n_leaves(self) -> int:
+        return -(-self.c_in // self.fan_in)
+
+    def init(self, key: Array) -> dict:
+        k1, k2, k3 = jax.random.split(key, 3)
+        n_leaf = self.c_out * self.n_leaves
+        return {
+            # learned mapping logits: which inputs feed each leaf L-LUT
+            "map_logits": jax.random.normal(
+                k1, (n_leaf, self.fan_in, self.c_in)) * 0.1,
+            "leaf": _mlp_defs(k2, n_leaf, self.fan_in,
+                              self.mlp_width, self.mlp_depth),
+            "root": _mlp_defs(k3, self.c_out, self.n_leaves,
+                              self.mlp_width, self.mlp_depth),
+        }
+
+    def apply(self, params: dict, x: Array, *, train: bool = False) -> Tuple[Array, Aux]:
+        n_leaf = self.c_out * self.n_leaves
+        # hard selection via argmax of the mapping logits, realised as a
+        # dynamic gather — the irregular-access pattern the paper calls out
+        idx = jnp.argmax(params["map_logits"], axis=-1)          # (n_leaf, F)
+        gathered = jnp.take(x, idx.reshape(-1), axis=-1)
+        hard = gathered.reshape(x.shape[:-1] + (n_leaf, self.fan_in))
+        # straight-through so mapping logits keep receiving gradient
+        soft = jnp.einsum("...i,nfi->...nf", x,
+                          jax.nn.softmax(params["map_logits"], -1))
+        h = jax.lax.stop_gradient(hard - soft) + soft
+        leaf_out = _mlp_apply(params["leaf"], h, self.mlp_depth)  # (..., n_leaf)
+        tree_in = leaf_out.reshape(x.shape[:-1] + (self.c_out, self.n_leaves))
+        y = _mlp_apply(params["root"], tree_in, self.mlp_depth)  # (..., c_out)
+        return y, Aux(ebops=jnp.zeros((), jnp.float32),
+                      aux_loss=jnp.zeros((), jnp.float32), updates={})

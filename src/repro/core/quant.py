@@ -1,0 +1,229 @@
+"""HGQ heterogeneous fixed-point quantizers (paper §III-B).
+
+Implements the High-Granularity-Quantization fake-quantizer with
+
+* per-element / per-channel / per-tensor *trainable* bit-widths,
+* WRAP and SAT overflow modes (paper: WRAP on L-LUT inputs so no comparator
+  logic is emitted; SAT on outputs, resolved offline during table generation),
+* native 0-bit pruning (an element whose total width reaches 0 contributes
+  exactly 0 to the layer output and 0 EBOPs),
+* analytic surrogate gradients for the fractional (`f`) and integer (`i`)
+  bit-width parameters (the STE on rounding would otherwise kill them).
+
+A quantized value with sign bit ``k`` (0/1), integer bits ``i`` and fractional
+bits ``f`` lives on the grid ``2**-f * Z`` restricted to
+``[-k * 2**i, 2**i - 2**-f]``.  Total physical width ``b = k + i + f``.
+
+The *bit-exact* integer path used by the DAIS interpreter / truth-table
+extraction is :func:`quantize_to_int` / :func:`int_to_float` — these must (and
+do, see tests) agree exactly with :func:`fake_quant` with rounded parameters.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LOG2 = float(np.log(2.0))
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------- #
+# config
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static configuration of one HGQ quantizer."""
+
+    granularity: str = "element"     # element | channel | tensor
+    signed: bool = True
+    overflow: str = "SAT"            # SAT | WRAP
+    init_f: float = 6.0              # initial fractional bits
+    init_i: float = 2.0              # initial integer bits (excl. sign)
+    trainable: bool = True
+    min_f: float = -8.0              # lower clamps keep the search bounded
+    min_i: float = -8.0
+    max_f: float = 12.0
+    max_i: float = 12.0
+
+    def param_shape(self, shape: Tuple[int, ...]) -> Tuple[int, ...]:
+        if self.granularity == "element":
+            return tuple(shape)
+        if self.granularity == "channel":
+            return (shape[-1],) if shape else ()
+        if self.granularity == "tensor":
+            return ()
+        raise ValueError(f"unknown granularity {self.granularity!r}")
+
+
+def init_quantizer(cfg: QuantConfig, shape: Tuple[int, ...]) -> dict:
+    """Create the trainable parameter pytree for a quantizer over `shape`."""
+    ps = cfg.param_shape(shape)
+    return {
+        "f": jnp.full(ps, cfg.init_f, dtype=jnp.float32),
+        "i": jnp.full(ps, cfg.init_i, dtype=jnp.float32),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# straight-through rounding of the bit-width parameters themselves
+# --------------------------------------------------------------------------- #
+@jax.custom_vjp
+def round_ste(x: Array) -> Array:
+    return jnp.round(x)
+
+
+def _round_ste_fwd(x):
+    return jnp.round(x), None
+
+
+def _round_ste_bwd(_, g):
+    return (g,)
+
+
+round_ste.defvjp(_round_ste_fwd, _round_ste_bwd)
+
+
+# --------------------------------------------------------------------------- #
+# the fake-quant core with analytic bit-width gradients
+# --------------------------------------------------------------------------- #
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _fq_core(x: Array, f: Array, i: Array, signed: bool, overflow: str) -> Array:
+    return _fq_eval(x, f, i, signed, overflow)
+
+
+def _fq_eval(x, f, i, signed, overflow):
+    scale = jnp.exp2(-f)
+    hi = jnp.exp2(i) - scale
+    lo = jnp.where(jnp.asarray(signed), -jnp.exp2(i), jnp.zeros_like(hi))
+    q = jnp.round(x / scale) * scale
+    if overflow == "SAT":
+        q = jnp.clip(q, lo, hi)
+    else:  # WRAP: modular arithmetic, matches dropping carry bits in hardware
+        span = hi - lo + scale
+        q = lo + jnp.mod(q - lo, span)
+    # 0-bit (or negative-width) elements are pruned to exactly zero.
+    width = i + f + (1.0 if signed else 0.0)
+    return jnp.where(width > 0.0, q, jnp.zeros_like(q))
+
+
+def _fq_fwd(x, f, i, signed, overflow):
+    q = _fq_eval(x, f, i, signed, overflow)
+    return q, (x, f, i, q)
+
+
+def _fq_bwd(signed, overflow, res, g):
+    x, f, i, q = res
+    scale = jnp.exp2(-f)
+    hi = jnp.exp2(i) - scale
+    lo = jnp.where(jnp.asarray(signed), -jnp.exp2(i), jnp.zeros_like(hi))
+    rounded = jnp.round(x / scale) * scale
+    clipped_hi = rounded > hi
+    clipped_lo = rounded < lo
+    width = i + f + (1.0 if signed else 0.0)
+    alive = width > 0.0
+
+    if overflow == "SAT":
+        # STE inside the representable range, zero outside (standard QAT).
+        dx = jnp.where(alive & ~(clipped_hi | clipped_lo), g, jnp.zeros_like(g))
+        # d q / d f: rounding-error term inside, boundary term when clipped hi.
+        df_in = LOG2 * (x - rounded)
+        df = jnp.where(clipped_hi, LOG2 * scale, df_in)
+        df = jnp.where(clipped_lo, jnp.zeros_like(df), df)
+        # d q / d i: only the saturation boundaries move with i.
+        di = jnp.where(clipped_hi, LOG2 * jnp.exp2(i), jnp.zeros_like(x))
+        di = jnp.where(clipped_lo, -LOG2 * jnp.exp2(i), di)
+    else:  # WRAP
+        dx = jnp.where(alive, g, jnp.zeros_like(g))
+        df = LOG2 * (x - rounded)
+        di = jnp.zeros_like(x)
+
+    df = jnp.where(alive, df * g, jnp.zeros_like(df))
+    di = jnp.where(alive, di * g, jnp.zeros_like(di))
+    # reduce f/i grads back to their (possibly broadcast) parameter shape
+    df = _reduce_to_shape(df, f.shape)
+    di = _reduce_to_shape(di, i.shape)
+    return dx, df, di
+
+
+def _reduce_to_shape(g: Array, shape: Tuple[int, ...]) -> Array:
+    if g.shape == shape:
+        return g
+    # sum over leading broadcast dims, then over any expanded axes
+    extra = g.ndim - len(shape)
+    if extra > 0:
+        g = jnp.sum(g, axis=tuple(range(extra)))
+    axes = tuple(a for a, (gs, ss) in enumerate(zip(g.shape, shape)) if gs != ss)
+    if axes:
+        g = jnp.sum(g, axis=axes, keepdims=True)
+    return g.reshape(shape)
+
+
+_fq_core.defvjp(_fq_fwd, _fq_bwd)
+
+
+# --------------------------------------------------------------------------- #
+# public API
+# --------------------------------------------------------------------------- #
+def fake_quant(qp: dict, x: Array, cfg: QuantConfig, *, train: bool = True) -> Array:
+    """Quantize ``x`` on the fixed-point grid described by params ``qp``.
+
+    In training mode the *continuous* f/i parameters are rounded with an STE so
+    the forward pass is always a true fixed-point projection while gradients
+    still reach the bit-width parameters.
+    """
+    f = round_ste(jnp.clip(qp["f"], cfg.min_f, cfg.max_f))
+    i = round_ste(jnp.clip(qp["i"], cfg.min_i, cfg.max_i))
+    if not train:
+        f, i = jax.lax.stop_gradient(f), jax.lax.stop_gradient(i)
+    return _fq_core(x.astype(jnp.float32), f, i, cfg.signed, cfg.overflow).astype(x.dtype)
+
+
+def bitwidth(qp: dict, cfg: QuantConfig) -> Array:
+    """Effective physical bit-width per parameter element (≥ 0, STE-rounded)."""
+    f = round_ste(jnp.clip(qp["f"], cfg.min_f, cfg.max_f))
+    i = round_ste(jnp.clip(qp["i"], cfg.min_i, cfg.max_i))
+    k = 1.0 if cfg.signed else 0.0
+    return jnp.maximum(f + i + k, 0.0)
+
+
+def int_bits(qp: dict, cfg: QuantConfig) -> Tuple[np.ndarray, np.ndarray]:
+    """Concrete (f, i) integers for deployment (numpy, host-side)."""
+    f = np.clip(np.asarray(jax.device_get(qp["f"])), cfg.min_f, cfg.max_f)
+    i = np.clip(np.asarray(jax.device_get(qp["i"])), cfg.min_i, cfg.max_i)
+    return np.round(f).astype(np.int32), np.round(i).astype(np.int32)
+
+
+# --------------------------------------------------------------------------- #
+# bit-exact integer path (shared by the truth-table compiler and DAIS interp)
+# --------------------------------------------------------------------------- #
+def quantize_to_int(
+    x: np.ndarray, f: np.ndarray, i: np.ndarray, signed: bool, overflow: str
+) -> np.ndarray:
+    """Project float ``x`` to the *integer code* on the (f, i) grid.
+
+    The code is ``round(x * 2**f)`` wrapped/clipped into the representable
+    integer range.  ``int_to_float(code) == fake_quant(x)`` exactly.
+    """
+    f = np.asarray(f, dtype=np.int64)
+    i = np.asarray(i, dtype=np.int64)
+    width = f + i + (1 if signed else 0)
+    code = np.round(np.asarray(x, dtype=np.float64) * np.exp2(f)).astype(np.int64)
+    n_codes = np.where(width > 0, 2 ** np.maximum(width, 0), 1)
+    lo = np.where(signed, -(n_codes // 2), 0)
+    hi = lo + n_codes - 1
+    if overflow == "SAT":
+        code = np.clip(code, lo, hi)
+    else:
+        code = lo + np.mod(code - lo, n_codes)
+    return np.where(width > 0, code, 0)
+
+
+def int_to_float(code: np.ndarray, f: np.ndarray) -> np.ndarray:
+    return np.asarray(code, dtype=np.float64) * np.exp2(-np.asarray(f, dtype=np.float64))

@@ -1,0 +1,100 @@
+"""Verilog emission backend for DAIS programs (paper §IV-B).
+
+Generates a single flat combinational module per program: L-LUT instructions
+become case-statement functions (which synthesis maps onto logic LUTs),
+REQUANTs become slice/clamp expressions, ADD/CMUL become plain arithmetic.
+This mirrors da4ml's Verilog flow; pipelining registers are the synthesis
+tool's job (the paper relies on global retiming).  We cannot run Vivado in
+this environment, so this backend is exercised only for well-formedness
+(emit + structural checks) — bit-exact verification happens at the DAIS
+interpreter level instead (Fig. 1's "DAIS-level simulation" path).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.dais import DaisProgram
+
+
+def _w(reg) -> int:
+    return max(reg.width, 1)
+
+
+def emit_verilog(prog: DaisProgram, name: str = "hgq_lut_model") -> str:
+    lines: List[str] = []
+    n_in = len(prog.input_f)
+    n_out = len(prog.outputs)
+    in_w = [max(prog.instrs[k].reg.width, 1) for k in range(n_in)]
+
+    ports = [f"    input  wire signed [{in_w[k]-1}:0] in_{k}" for k in range(n_in)]
+    ports += [
+        f"    output wire signed [{_w(prog.instrs[r].reg)-1}:0] out_{k}"
+        for k, r in enumerate(prog.outputs)
+    ]
+    lines.append(f"module {name} (")
+    lines.append(",\n".join(ports))
+    lines.append(");")
+
+    # truth tables as functions
+    for lid, t in prog.tables.items():
+        for j in range(t.c_in):
+            for i in range(t.c_out):
+                m = int(t.in_width[j, i])
+                n = int(t.out_width[j, i])
+                if m <= 0 or n <= 0:
+                    continue
+                lines.append(f"  function automatic signed [{n-1}:0] llut_{lid}_{j}_{i};")
+                lines.append(f"    input [{m-1}:0] idx;")
+                lines.append("    begin")
+                lines.append("      case (idx)")
+                for e in range(1 << m):
+                    code = int(t.codes[j, i, e]) & ((1 << n) - 1)
+                    lines.append(f"        {m}'d{e}: llut_{lid}_{j}_{i} = {n}'d{code};")
+                lines.append(f"        default: llut_{lid}_{j}_{i} = {n}'d0;")
+                lines.append("      endcase")
+                lines.append("    end")
+                lines.append("  endfunction")
+
+    for ridx, ins in enumerate(prog.instrs):
+        w = _w(ins.reg)
+        decl = f"  wire signed [{w-1}:0] r{ridx}"
+        op, a = ins.op, ins.args
+        if op == "IN":
+            lines.append(f"{decl} = in_{a[0]};")
+        elif op == "CONST":
+            code = a[0] & ((1 << w) - 1)
+            lines.append(f"{decl} = {w}'d{code};")
+        elif op == "REQUANT":
+            src, f, i, signed, mode, src_f = a
+            sw = _w(prog.instrs[src].reg)
+            shift = f - src_f
+            if shift >= 0:
+                expr = f"(r{src} <<< {shift})"
+            else:
+                expr = f"(r{src} >>> {-shift})"  # truncation; rounding folded upstream
+            if mode == "SAT":
+                width = f + i + (1 if signed else 0)
+                hi = (1 << (width - 1)) - 1 if signed else (1 << width) - 1
+                lo = -(1 << (width - 1)) if signed else 0
+                expr = (f"(({expr}) > $signed({max(hi,0)}) ? $signed({max(hi,0)}) : "
+                        f"(({expr}) < $signed({lo}) ? $signed({lo}) : ({expr})))")
+            lines.append(f"{decl} = {expr};  // requant f={f} i={i} {mode}")
+        elif op == "LLUT":
+            src, lid, j, i = a
+            t = prog.tables[lid]
+            m = int(t.in_width[j, i])
+            lines.append(f"{decl} = llut_{lid}_{j}_{i}(r{src}[{m-1}:0]);")
+        elif op == "CMUL":
+            src, code, _f = a
+            lines.append(f"{decl} = r{src} * $signed({code});")
+        elif op in ("ADD", "SUB"):
+            sym = "+" if op == "ADD" else "-"
+            lines.append(f"{decl} = r{a[0]} {sym} r{a[1]};")
+        else:
+            raise ValueError(op)
+
+    for k, r in enumerate(prog.outputs):
+        lines.append(f"  assign out_{k} = r{r};")
+    lines.append("endmodule")
+    return "\n".join(lines) + "\n"

@@ -1,0 +1,129 @@
+"""Truth-table extraction for trained LUT-layers (paper §IV-B).
+
+After training, every L-LUT_{i,j} of a LUT-Dense layer is converted to a
+physical truth table by enumerating all ``2**m`` quantized input codes,
+passing them through the cell MLP (+ fused batch-norm), and quantizing the
+result with the cell's SAT output quantizer.  All cells of a layer are
+enumerated in one batched einsum — the same trick the paper uses to keep
+conversion around 100 ms for a 32×32 layer.
+
+The resulting :class:`LayerTables` is the hardware artifact: integer code in,
+integer code out, per-cell fixed-point formats.  ``lookup`` reproduces the
+layer bit-exactly on CPU and is the oracle the DAIS interpreter and RTL are
+checked against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lut_layers import LUTDense
+from repro.core.quant import int_bits, int_to_float, quantize_to_int
+
+
+@dataclasses.dataclass
+class LayerTables:
+    """Truth tables of one LUT-Dense layer.
+
+    codes[j, i, e] is the output code of L-LUT_{i,j} for input index ``e``;
+    entries with e >= 2**in_width[j, i] are padding (never addressed).
+    Input index = two's-complement re-interpretation of the input code
+    (i.e. ``code & (2**m - 1)``), which is what the WRAP input quantizer
+    produces for free in hardware.
+    """
+
+    f_in: np.ndarray      # (C_in, C_out) int32
+    i_in: np.ndarray
+    f_out: np.ndarray
+    i_out: np.ndarray
+    in_width: np.ndarray  # m  = f_in + i_in + 1  (signed), clipped >= 0
+    out_width: np.ndarray  # n = f_out + i_out + 1, clipped >= 0
+    codes: np.ndarray     # (C_in, C_out, 2**max_m) int64
+
+    @property
+    def c_in(self) -> int:
+        return self.codes.shape[0]
+
+    @property
+    def c_out(self) -> int:
+        return self.codes.shape[1]
+
+    def n_luts(self) -> int:
+        """Number of live (non-pruned) L-LUTs."""
+        return int(np.sum((self.in_width > 0) & (self.out_width > 0)))
+
+    # ------------------------------------------------------------------ use
+    def lookup_codes(self, x_codes: np.ndarray, x_f: np.ndarray) -> np.ndarray:
+        """Bit-exact layer evaluation on integer input codes.
+
+        ``x_codes``: (..., C_in) int64 codes on a grid with fractional bits
+        ``x_f`` (scalar or (C_in,)).  Returns output codes (..., C_out) on the
+        *common* output grid with fractional bits ``self.common_f_out()``.
+        """
+        ci, co = self.c_in, self.c_out
+        xf = np.broadcast_to(np.asarray(x_f, np.int64), (ci,))
+        # requantize each input to each cell's WRAP grid: shift to f_in bits
+        shift = self.f_in - xf[:, None]                     # (ci, co)
+        x = x_codes[..., :, None].astype(np.float64)        # (..., ci, 1)
+        scaled = np.round(x * np.exp2(shift))               # (..., ci, co)
+        m = np.maximum(self.in_width, 0)
+        size = np.where(m > 0, 2 ** m, 1)
+        idx = np.mod(scaled, size).astype(np.int64)         # WRAP == masking
+        out = np.take_along_axis(
+            np.broadcast_to(self.codes, x_codes.shape[:-1] + self.codes.shape),
+            idx[..., None], axis=-1)[..., 0]                # (..., ci, co)
+        # align heterogeneous per-cell output grids to the common grid
+        F = self.common_f_out()
+        out = out * (2 ** (F - self.f_out).astype(np.int64))
+        return out.sum(axis=-2)                             # Σ over C_in
+
+    def common_f_out(self) -> int:
+        live = (self.in_width > 0) & (self.out_width > 0)
+        return int(self.f_out[live].max()) if live.any() else 0
+
+
+def extract_tables(layer: LUTDense, params: dict) -> LayerTables:
+    """Enumerate all input codes of every cell through the trained MLPs."""
+    f_in, i_in = int_bits(params["q_in"], layer.q_in)
+    f_out, i_out = int_bits(params["q_out"], layer.q_out)
+    k_in = 1 if layer.q_in.signed else 0
+    k_out = 1 if layer.q_out.signed else 0
+    m = np.maximum(f_in + i_in + k_in, 0)
+    n = np.maximum(f_out + i_out + k_out, 0)
+    max_m = int(m.max()) if m.size else 0
+    n_entries = max(2 ** max_m, 1)
+
+    # Input value for entry e of cell (j, i): interpret e as an m-bit
+    # two's-complement code on the (f_in, i_in) grid.
+    e = np.arange(n_entries, dtype=np.int64)[:, None, None]     # (E, 1, 1)
+    size = np.where(m > 0, 2 ** m, 1)[None]                     # (1, ci, co)
+    code = np.mod(e, size)
+    if layer.q_in.signed:
+        half = size // 2
+        code = np.where(code >= half, code - size, code)
+    x = int_to_float(code, f_in[None])                          # (E, ci, co)
+
+    # one batched einsum pass over all cells & entries (paper §IV-B).
+    # float32 matches the forward pass exactly (same dtype ⇒ same rounding);
+    # the *outputs* are integers after quantization, so exactness holds.
+    y = layer.cell_mlp(params, jnp.asarray(x, jnp.float32))
+    if layer.use_batchnorm:
+        scale, bias = layer.bn_affine(params)
+        y = y * scale + bias
+    y = np.asarray(jax.device_get(y), np.float64)
+
+    out_codes = quantize_to_int(y, f_out[None], i_out[None],
+                                layer.q_out.signed, "SAT")       # (E, ci, co)
+    # pruned cells emit exactly 0
+    live = (m > 0) & (n > 0)
+    out_codes = np.where(live[None], out_codes, 0)
+    return LayerTables(
+        f_in=f_in, i_in=i_in, f_out=f_out, i_out=i_out,
+        in_width=m.astype(np.int32), out_width=n.astype(np.int32),
+        codes=np.transpose(out_codes, (1, 2, 0)).astype(np.int64),
+    )

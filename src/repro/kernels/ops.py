@@ -1,0 +1,70 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+* auto-selects ``interpret=True`` off-TPU (this container is CPU-only; the
+  kernel body then runs as pure-Python/jnp and is validated against ref.py),
+* attaches a ``custom_vjp`` to the fused LUT-Dense forward whose backward is
+  the VJP of the einsum reference — so the fused kernel is a drop-in for the
+  training path as well as serving.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.fake_quant import fake_quant_fused
+from repro.kernels.lut_dense import lut_dense_fused
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# --------------------------------------------------------------------------- #
+# lut_dense: fused forward, reference backward
+# --------------------------------------------------------------------------- #
+@jax.custom_vjp
+def lut_dense(x, w0, b0, w_out, b_out, f_in, i_in, f_out, i_out):
+    return lut_dense_fused(x, w0, b0, w_out, b_out, f_in, i_in, f_out, i_out,
+                           interpret=not _on_tpu())
+
+
+def _ld_fwd(x, w0, b0, w_out, b_out, f_in, i_in, f_out, i_out):
+    y = lut_dense(x, w0, b0, w_out, b_out, f_in, i_in, f_out, i_out)
+    return y, (x, w0, b0, w_out, b_out, f_in, i_in, f_out, i_out)
+
+
+def _ld_bwd(res, g):
+    x, w0, b0, w_out, b_out, f_in, i_in, f_out, i_out = res
+    # STE through both quantizers (standard QAT backward): differentiate the
+    # un-quantized einsum chain. Bit-width arrays are integers here (eval-side
+    # parameters); their training gradients live in core.quant, not the kernel.
+    def smooth(x, w0, b0, w_out, b_out):
+        h = jnp.tanh(x[:, :, None, None] * w0[None] + b0[None])
+        y = jnp.sum(h * w_out[None], axis=2) + b_out[None]
+        return jnp.sum(y, axis=1)
+
+    _, vjp = jax.vjp(smooth, x, w0, b0, w_out, b_out)
+    dx, dw0, db0, dwo, dbo = vjp(g)
+    z = lambda a: jnp.zeros_like(a)
+    return dx, dw0, db0, dwo, dbo, z(f_in), z(i_in), z(f_out), z(i_out)
+
+
+lut_dense.defvjp(_ld_fwd, _ld_bwd)
+
+
+# --------------------------------------------------------------------------- #
+# fake_quant
+# --------------------------------------------------------------------------- #
+@functools.partial(jax.jit, static_argnames=("signed", "overflow"))
+def fake_quant(x, f, i, *, signed: bool = True, overflow: str = "SAT"):
+    return fake_quant_fused(x, f, i, signed=signed, overflow=overflow,
+                            interpret=not _on_tpu())
+
+
+# re-exports of the oracles for test convenience
+lut_dense_ref = _ref.lut_dense_ref
+fake_quant_ref = _ref.fake_quant_ref

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth every kernel is validated against (shape/dtype
+sweeps in tests/test_kernels.py).  They mirror the einsum formulation of
+Algorithm 1 — i.e. exactly what the paper's GPU implementation computes — in
+*eval* mode: bit-width parameters are already-rounded integers passed as
+arrays, so oracle and kernel share one definition of the quantization grid.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def fake_quant_ref(x: Array, f: Array, i: Array, signed: bool, overflow: str) -> Array:
+    """Fixed-point projection with integer (f, i) bit-width arrays."""
+    x = x.astype(jnp.float32)
+    f = jnp.broadcast_to(f, x.shape).astype(jnp.float32)
+    i = jnp.broadcast_to(i, x.shape).astype(jnp.float32)
+    scale = jnp.exp2(-f)
+    hi = jnp.exp2(i) - scale
+    lo = -jnp.exp2(i) if signed else jnp.zeros_like(hi)
+    q = jnp.round(x / scale) * scale
+    if overflow == "SAT":
+        q = jnp.clip(q, lo, hi)
+    else:
+        span = hi - lo + scale
+        q = lo + jnp.mod(q - lo, span)
+    width = f + i + (1.0 if signed else 0.0)
+    return jnp.where(width > 0.0, q, 0.0)
+
+
+def lut_dense_ref(
+    x: Array,            # (B, C_in)
+    w0: Array,           # (C_in, H, C_out)   first-level MLP weights
+    b0: Array,           # (C_in, H, C_out)
+    w_out: Array,        # (C_in, H, C_out)   output projection
+    b_out: Array,        # (C_in, C_out)
+    f_in: Array,         # (C_in, C_out) int widths of the WRAP input quantizer
+    i_in: Array,
+    f_out: Array,        # (C_in, C_out) int widths of the SAT output quantizer
+    i_out: Array,
+) -> Array:
+    """Eval-mode LUT-Dense forward (Eq. 1 / Algorithm 1), single hidden layer.
+
+    Layout note: weights use (C_in, H, C_out) so the kernel keeps C_out on the
+    TPU lane dimension; the training layer stores (C_in, C_out, H) and ops.py
+    transposes once at call time.
+    """
+    xb = jnp.broadcast_to(x[:, :, None], x.shape + (w0.shape[-1],))  # (B, Ci, Co)
+    xq = fake_quant_ref(xb, f_in[None], i_in[None], True, "WRAP")
+    h = jnp.tanh(xq[:, :, None, :] * w0[None] + b0[None])            # (B, Ci, H, Co)
+    y = jnp.sum(h * w_out[None], axis=2) + b_out[None]               # (B, Ci, Co)
+    yq = fake_quant_ref(y, f_out[None], i_out[None], True, "SAT")
+    return jnp.sum(yq, axis=1)                                       # (B, Co)

@@ -1,0 +1,210 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import/init: jax locks the device count on first use.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell we build the step function exactly as the real launcher would
+(same factories, same sharding derivation), lower it against
+ShapeDtypeStructs (no allocation at the full configs), compile, and record
+
+* ``compiled.memory_analysis()``   — proves the cell fits per-device HBM,
+* ``compiled.cost_analysis()``     — HLO FLOPs / bytes for §Roofline,
+* collective bytes parsed from the optimized HLO text (all-gather /
+  all-reduce / reduce-scatter / all-to-all / collective-permute operand
+  sizes) — the third roofline term.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch olmo_1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only] \
+        --out results/dryrun.json
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+
+def _collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum operand bytes of every collective op in the optimized HLO.
+
+    Parses result-shape annotations like
+      %all-reduce.5 = bf16[16,1024]{1,0} all-reduce(...)
+    Tuple-shaped collectives contribute every element.  Sizes are *global*
+    logical bytes of the collective's result; per-device wire cost is
+    derived in the roofline module (benchmarks/roofline.py).
+    """
+    dt_bytes = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8}
+    out = {k: 0.0 for k in ("all-gather", "all-reduce", "reduce-scatter",
+                            "all-to-all", "collective-permute")}
+    counts = {k: 0 for k in out}
+    shape_re = re.compile(r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)"
+                          r"\[([0-9,]*)\]")
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*(\([^)]*\)|\S+)\s+"
+                      r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)(-start)?\(", line)
+        if not m:
+            continue
+        op = m.group(2)
+        total = 0.0
+        for dt, dims in shape_re.findall(m.group(1)):
+            n = 1.0
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * dt_bytes[dt]
+        out[op] += total
+        counts[op] += 1
+    out["n_collectives"] = float(sum(counts.values()))
+    return out
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             verbose: bool = True) -> Dict:
+    import jax
+    from repro.configs.base import SHAPES, get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.registry import build_model
+    from repro.nn.params import param_shapes
+    from repro.train import steps as steps_mod
+
+    t0 = time.time()
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg, mesh)
+
+    defs = model.defs()
+    p_shapes = param_shapes(defs)
+    if spec.mode != "train":
+        # serving runs from bf16 checkpoints: halves weight residency + reads
+        import jax.numpy as jnp
+        p_shapes = jax.tree.map(
+            lambda s: (jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+                       if s.dtype == jnp.float32 else s), p_shapes)
+    ps = steps_mod.param_shardings(model, mesh)
+    bs = steps_mod.batch_shardings(model, spec.seq_len, spec.global_batch,
+                                   spec.mode, mesh)
+    in_specs = model.input_specs(spec.seq_len, spec.global_batch, spec.mode)
+
+    if spec.mode == "train":
+        step_fn, _ = steps_mod.make_train_step(model, mesh, donate=False,
+                                               batch_shards=bs)
+        from repro.optim.adam import adam_init
+        o_shapes = jax.eval_shape(adam_init, p_shapes)
+        lowered = step_fn.lower(p_shapes, o_shapes, in_specs)
+    elif spec.mode == "prefill":
+        fn = steps_mod.make_prefill(model, mesh, batch_shards=bs)
+        lowered = fn.lower(p_shapes, in_specs)
+    else:  # decode
+        cache_shapes = param_shapes(model.cache_defs(spec.global_batch,
+                                                     spec.seq_len))
+        fn = steps_mod.make_decode_step(model, spec.global_batch,
+                                        spec.seq_len, mesh)
+        lowered = fn.lower(p_shapes, cache_shapes, in_specs["tokens"])
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    coll = _collective_bytes(hlo_text)
+
+    # Loop-aware per-device accounting (XLA's cost_analysis counts while
+    # bodies once — see benchmarks/hlo_cost.py and EXPERIMENTS.md §Dry-run).
+    try:
+        from benchmarks.hlo_cost import analyze_text
+        la = analyze_text(hlo_text)
+    except Exception as e:  # noqa: BLE001
+        la = {"flops": -1, "hbm_bytes": -1, "coll_bytes": -1,
+              "coll": {}, "warnings": [repr(e)]}
+
+    n_dev = mesh.devices.size
+    result = {
+        "arch": arch, "shape": shape,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "n_devices": n_dev,
+        "xla_flops": float(cost.get("flops", -1)),
+        "xla_bytes": float(cost.get("bytes accessed", -1)),
+        "flops": la["flops"],            # per-device, loop-aware
+        "hbm_bytes": la["hbm_bytes"],    # per-device, loop-aware
+        "coll_bytes": la["coll_bytes"],  # per-device, loop-aware
+        "coll": la["coll"],
+        "coll_once": coll,               # legacy single-pass parse
+        "warnings": la["warnings"],
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+    }
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "generated_code_size_in_bytes"):
+        result[attr] = int(getattr(mem, attr, -1))
+    # per-device steady-state estimate: args (params+opt live here) + temps
+    result["per_device_bytes"] = (result["temp_size_in_bytes"]
+                                  + result["argument_size_in_bytes"]) // n_dev
+    if verbose:
+        print(f"[dryrun] {arch:15s} {shape:12s} mesh={result['mesh']:9s} "
+              f"flops/dev={result['flops']:.3e} bytes/dev={result['hbm_bytes']:.3e} "
+              f"coll/dev={result['coll_bytes']:.3e} "
+              f"compile={t_compile:.0f}s")
+        print(f"         memory_analysis: args={result['argument_size_in_bytes']:.3e} "
+              f"temps={result['temp_size_in_bytes']:.3e} "
+              f"out={result['output_size_in_bytes']:.3e}")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the 2x16x16 multi-pod mesh")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL results here")
+    args = ap.parse_args()
+
+    from repro.configs.base import ARCH_IDS, applicable_shapes, get_config
+
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in applicable_shapes(get_config(a)):
+                cells.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required (or --all)")
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results, failures = [], []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                r = run_cell(arch, shape, mp)
+                results.append(r)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(r) + "\n")
+            except Exception as e:  # noqa: BLE001 — report, keep sweeping
+                failures.append((arch, shape, mp, repr(e)[:300]))
+                print(f"[dryrun] FAIL {arch} {shape} multi_pod={mp}: {e!r}",
+                      file=sys.stderr)
+    print(f"\n[dryrun] {len(results)} cells OK, {len(failures)} failed")
+    for f in failures:
+        print("  FAIL:", *f)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Serving launcher: batched prefill + decode loop for any arch config.
+
+Demonstrates the inference path end-to-end on whatever devices exist (the
+production-mesh variant of the same step functions is exercised by
+launch/dryrun.py).  Requests are batched, prefilled once, then decoded
+autoregressively with greedy sampling against the pre-allocated KV cache.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen15_05b --smoke \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.configs.base import get_config, get_smoke
+    from repro.models.registry import build_model
+    from repro.nn.params import init_params
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    params = init_params(model.defs(), jax.random.PRNGKey(args.seed))
+
+    total = args.prompt_len + args.gen
+    rng = np.random.default_rng(args.seed)
+    batch = {}
+    for k, v in model.input_specs(args.prompt_len, args.batch, "prefill").items():
+        if v.dtype == jnp.int32:
+            batch[k] = jnp.asarray(
+                rng.integers(1, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
+        else:
+            batch[k] = jnp.asarray(rng.normal(0, 1, v.shape), v.dtype)
+
+    t0 = time.time()
+    prefill = jax.jit(model.prefill)
+    logits, cache = prefill(params, batch)
+    # grow KV caches from prompt_len to the full generation horizon
+    grown = {}
+    for k, v in cache.items():
+        if hasattr(v, "ndim") and v.ndim == 5 and v.shape[3] == args.prompt_len:
+            pad = [(0, 0)] * 5
+            pad[3] = (0, total - args.prompt_len)
+            grown[k] = jnp.pad(v, pad)
+        else:
+            grown[k] = v
+    cache = grown
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+
+    decode = jax.jit(model.decode_step, donate_argnums=(1,))
+    tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out_tokens = [tokens]
+    t0 = time.time()
+    for _ in range(args.gen - 1):
+        logits, cache = decode(params, cache, tokens)
+        tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out_tokens.append(tokens)
+    jax.block_until_ready(tokens)
+    t_decode = time.time() - t0
+
+    gen = np.stack([np.asarray(t) for t in out_tokens], axis=1)
+    print(f"[serve] arch={cfg.name} batch={args.batch} "
+          f"prefill({args.prompt_len} tok)={t_prefill*1e3:.1f} ms  "
+          f"decode={t_decode/max(args.gen-1,1)*1e3:.2f} ms/tok")
+    print(f"[serve] sample generations (token ids): {gen[0][:12].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Model registry: family -> model class."""
+
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig
+
+
+def build_model(cfg: ArchConfig, mesh=None):
+    if cfg.family in ("lm", "moe", "vlm"):
+        from repro.models.lm import DecoderLM
+        return DecoderLM(cfg, mesh)
+    if cfg.family == "hybrid":
+        from repro.models.zamba import ZambaHybrid
+        return ZambaHybrid(cfg, mesh)
+    if cfg.family == "ssm":
+        from repro.models.rwkv import RWKV6LM
+        return RWKV6LM(cfg, mesh)
+    if cfg.family == "encdec":
+        from repro.models.whisper import WhisperEncDec
+        return WhisperEncDec(cfg, mesh)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,159 @@
+"""RWKV-6 "Finch" LM: attention-free, O(1)-state decode.
+
+Layer scan over stacked params; inside each layer the WKV recurrence scans
+over time (nn/ssm.py).  Decode threads (wkv, token-shift) states — the
+long_500k cell costs the same per token as a 1k context.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn import ssm
+from repro.nn.layers import embed_lookup, layer_norm
+from repro.nn.params import PDef
+from repro.parallel import sharding as shd
+
+Array = jax.Array
+
+
+class RWKV6LM:
+    def __init__(self, cfg: ArchConfig, mesh=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.compute_dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    def defs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        L, d = cfg.n_layers, cfg.d_model
+        blocks = dict(ssm.rwkv6_defs(L, d, cfg.d_ff))
+        blocks["norm0"] = PDef((L, d), ("layers", None), init="zeros")
+        blocks["norm0_b"] = PDef((L, d), ("layers", None), init="zeros")
+        blocks["norm1"] = PDef((L, d), ("layers", None), init="zeros")
+        blocks["norm1_b"] = PDef((L, d), ("layers", None), init="zeros")
+        return {
+            "embed": PDef((cfg.vocab, d), ("vocab", "embed")),
+            "ln_in": PDef((d,), (None,), init="zeros"),
+            "ln_in_b": PDef((d,), (None,), init="zeros"),
+            "blocks": blocks,
+            "final_norm": PDef((d,), (None,), init="zeros"),
+            "final_norm_b": PDef((d,), (None,), init="zeros"),
+            "head": PDef((d, cfg.vocab), ("embed", "vocab")),
+        }
+
+    def _layer(self, pl, x, state):
+        h = layer_norm(x, 1.0 + pl["norm0"], pl["norm0_b"])
+        a, st_t = ssm.rwkv6_time_mix(pl, h, state)
+        x = x + a
+        h2 = layer_norm(x, 1.0 + pl["norm1"], pl["norm1_b"])
+        c, st_c = ssm.rwkv6_channel_mix(pl, h2, state)
+        x = x + c
+        if self.mesh is not None:
+            x = shd.constrain(x, self.mesh, "batch", None, None)
+        return x, {**st_t, **st_c}
+
+    def hidden_states(self, params, batch):
+        x = embed_lookup(params["embed"], batch["tokens"], self.compute_dtype)
+        x = layer_norm(x, 1.0 + params["ln_in"], params["ln_in_b"])
+
+        def body(carry, pl):
+            y, _ = self._layer(pl, carry, None)
+            return y, None
+
+        body_fn = jax.checkpoint(body) if self.cfg.remat else body
+        x, _ = jax.lax.scan(body_fn, x, params["blocks"])
+        x = layer_norm(x, 1.0 + params["final_norm"], params["final_norm_b"])
+        return x, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        from repro.models.lm import LOSS_CHUNK
+        x, ebops, aux = self.hidden_states(params, batch)
+        w = params["head"].astype(self.compute_dtype)
+        labels = batch["labels"]
+        b, s, d = x.shape
+        c = min(LOSS_CHUNK, s)
+        nc = s // c
+        xc = x.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+        lc = labels.reshape(b, nc, c).transpose(1, 0, 2)
+
+        def ce_chunk(carry, inp):
+            xk, lk = inp
+            logits = jnp.einsum("bcd,dv->bcv", xk, w).astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.sum(logits * jax.nn.one_hot(lk, logits.shape[-1],
+                                                   dtype=jnp.float32), axis=-1)
+            return carry + jnp.sum(lse - gold), None
+
+        if self.cfg.ce_remat:
+            ce_chunk = jax.checkpoint(ce_chunk)
+        total, _ = jax.lax.scan(ce_chunk, jnp.zeros((), jnp.float32), (xc, lc))
+        ce = total / (b * s)
+        return ce, {"ce": ce, "ebops": ebops, "aux_loss": aux}
+
+    # -------------------------------------------------------------- serving
+    def cache_defs(self, batch: int, t: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        L, d = cfg.n_layers, cfg.d_model
+        h = d // ssm.RWKV_HEAD
+        return {
+            "wkv": PDef((L, batch, h, ssm.RWKV_HEAD, ssm.RWKV_HEAD),
+                        ("layers", "batch", "heads", None, None),
+                        init="zeros", dtype=jnp.float32),
+            "shift_t": PDef((L, batch, 1, d), ("layers", "batch", None, None),
+                            init="zeros", dtype=self.compute_dtype),
+            "shift_c": PDef((L, batch, 1, d), ("layers", "batch", None, None),
+                            init="zeros", dtype=self.compute_dtype),
+            "index": PDef((), (), init="zeros", dtype=jnp.int32),
+        }
+
+    def decode_step(self, params, cache, tokens: Array):
+        x = embed_lookup(params["embed"], tokens[:, None], self.compute_dtype)
+        x = layer_norm(x, 1.0 + params["ln_in"], params["ln_in_b"])
+
+        def body(carry, inp):
+            pl, wkv, sh_t, sh_c = inp
+            y, st = self._layer(pl, carry,
+                                {"wkv": wkv, "shift_t": sh_t, "shift_c": sh_c})
+            return y, (st["wkv"], st["shift_t"], st["shift_c"])
+
+        x, (wkvs, sht, shc) = jax.lax.scan(
+            body, x, (params["blocks"], cache["wkv"], cache["shift_t"],
+                      cache["shift_c"]))
+        x = layer_norm(x, 1.0 + params["final_norm"], params["final_norm_b"])
+        logits = jnp.einsum("bd,dv->bv", x[:, 0].astype(jnp.float32),
+                            params["head"].astype(jnp.float32))
+        return logits, {"wkv": wkvs, "shift_t": sht, "shift_c": shc,
+                        "index": cache["index"] + 1}
+
+    def prefill(self, params, batch):
+        x = embed_lookup(params["embed"], batch["tokens"], self.compute_dtype)
+        x = layer_norm(x, 1.0 + params["ln_in"], params["ln_in_b"])
+        b, s = batch["tokens"].shape
+        d = self.cfg.d_model
+        h = d // ssm.RWKV_HEAD
+        zero = {"wkv": jnp.zeros((b, h, ssm.RWKV_HEAD, ssm.RWKV_HEAD), jnp.float32),
+                "shift_t": jnp.zeros((b, 1, d), self.compute_dtype),
+                "shift_c": jnp.zeros((b, 1, d), self.compute_dtype)}
+
+        def body(carry, pl):
+            y, st = self._layer(pl, carry, zero)
+            return y, (st["wkv"], st["shift_t"], st["shift_c"])
+
+        x, (wkvs, sht, shc) = jax.lax.scan(body, x, params["blocks"])
+        x = layer_norm(x, 1.0 + params["final_norm"], params["final_norm_b"])
+        logits = jnp.einsum("bd,dv->bv", x[:, -1].astype(jnp.float32),
+                            params["head"].astype(jnp.float32))
+        return logits, {"wkv": wkvs, "shift_t": sht, "shift_c": shc,
+                        "index": jnp.asarray(s, jnp.int32)}
+
+    def input_specs(self, seq_len: int, batch: int, mode: str) -> Dict[str, Any]:
+        tok = jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)
+        if mode == "train":
+            return {"tokens": tok, "labels": tok}
+        if mode == "prefill":
+            return {"tokens": tok}
+        return {"tokens": jax.ShapeDtypeStruct((batch,), jnp.int32)}

@@ -1,0 +1,234 @@
+"""Whisper-style encoder-decoder (audio backbone; conv frontend stubbed).
+
+Per the assignment the modality frontend is a STUB: ``input_specs`` supplies
+precomputed frame embeddings (B, enc_ctx, D).  Encoder layers are
+bidirectional self-attention + MLP; decoder layers add causal self-attention
+with KV cache and cross-attention onto the encoder output (cross-K/V
+precomputed once into the cache at prefill).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn import attention as attn
+from repro.nn import mlp as mlpm
+from repro.nn.layers import embed_lookup, layer_norm, sinusoidal_positions
+from repro.nn.params import PDef
+
+Array = jax.Array
+
+MAX_DEC_POS = 32768 + 8  # covers the decode_32k cell
+
+
+class WhisperEncDec:
+    def __init__(self, cfg: ArchConfig, mesh=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        base = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                    use_rope=False, q_chunk=cfg.q_chunk,
+                    remat_chunks=cfg.flash_remat)
+        self.enc_attn = attn.AttnCfg(causal=False, **base)
+        self.dec_attn = attn.AttnCfg(causal=True, **base)
+        self.compute_dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    def defs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        d = cfg.d_model
+
+        def block_defs(n_layers, cross: bool):
+            b = {}
+            b.update(attn.attn_defs(n_layers, d, cfg.n_heads, cfg.n_kv_heads, cfg.hd))
+            if cross:
+                cr = attn.attn_defs(n_layers, d, cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+                b.update({f"x_{k}": v for k, v in cr.items()})
+            b.update(mlpm.mlp_defs(n_layers, d, cfg.d_ff, cfg.quant))
+            n_norms = 3 if cross else 2
+            for k in range(n_norms):
+                b[f"norm{k}"] = PDef((n_layers, d), ("layers", None), init="zeros")
+                b[f"norm{k}_b"] = PDef((n_layers, d), ("layers", None), init="zeros")
+            return b
+
+        return {
+            "embed": PDef((cfg.vocab, d), ("vocab", "embed")),
+            "dec_pos": PDef((MAX_DEC_POS, d), (None, "embed"), scale=0.02),
+            "enc_blocks": block_defs(cfg.n_enc_layers, cross=False),
+            "dec_blocks": block_defs(cfg.n_layers, cross=True),
+            "enc_norm": PDef((d,), (None,), init="zeros"),
+            "enc_norm_b": PDef((d,), (None,), init="zeros"),
+            "dec_norm": PDef((d,), (None,), init="zeros"),
+            "dec_norm_b": PDef((d,), (None,), init="zeros"),
+        }
+
+    def _ln(self, pl, idx, x):
+        return layer_norm(x, 1.0 + pl[f"norm{idx}"], pl[f"norm{idx}_b"])
+
+    # ---------------------------------------------------------------- encode
+    def encode(self, params, frames: Array) -> Array:
+        """frames (B, enc_ctx, D) precomputed (stub frontend) -> encoder output."""
+        x = frames.astype(self.compute_dtype)
+        pos = sinusoidal_positions(x.shape[1], x.shape[2]).astype(x.dtype)
+        x = x + pos[None]
+
+        def body(carry, pl):
+            h = self._ln(pl, 0, carry)
+            a = attn.multihead_attention(pl, h, self.enc_attn)
+            x = carry + a
+            h2 = self._ln(pl, 1, x)
+            m, _ = mlpm.mlp_apply(pl, h2, self.cfg.act, self.cfg.quant)
+            return x + m, None
+
+        body_fn = jax.checkpoint(body) if self.cfg.remat else body
+        x, _ = jax.lax.scan(body_fn, x, params["enc_blocks"])
+        return layer_norm(x, 1.0 + params["enc_norm"], params["enc_norm_b"])
+
+    # ---------------------------------------------------------------- decode
+    def _dec_block(self, pl, x, enc_out, positions, cache=None, index=None):
+        h = self._ln(pl, 0, x)
+        if cache is None:
+            a = attn.multihead_attention(pl, h, self.dec_attn, positions=positions)
+            new_self = None
+        else:
+            a, kc, vc = attn.decode_attention(pl, h, self.dec_attn,
+                                              cache["k"], cache["v"], index)
+            new_self = (kc, vc)
+        x = x + a
+        h2 = self._ln(pl, 1, x)
+        if cache is None:
+            c = attn.multihead_attention(pl, h2, self.dec_attn, kv=None if enc_out is None
+                                         else self._cross_kv(pl, enc_out), prefix="x_")
+        else:
+            xq, _, _ = attn.project_qkv(pl, h2, self.dec_attn, None, prefix="x_")
+            out = attn.attention_core(xq, cache["xk"].transpose(0, 2, 1, 3),
+                                      cache["xv"].transpose(0, 2, 1, 3),
+                                      self.dec_attn, causal=False)
+            c = jnp.einsum("bsnh,nhd->bsd", out, pl["x_wo"].astype(x.dtype))
+        x = x + c
+        h3 = self._ln(pl, 2, x)
+        m, eb = mlpm.mlp_apply(pl, h3, self.cfg.act, self.cfg.quant)
+        return x + m, new_self, eb
+
+    def _cross_kv(self, pl, enc_out):
+        k = jnp.einsum("btd,dkh->btkh", enc_out, pl["x_wk"].astype(enc_out.dtype))
+        v = jnp.einsum("btd,dkh->btkh", enc_out, pl["x_wv"].astype(enc_out.dtype))
+        return k, v
+
+    def hidden_states(self, params, batch):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = embed_lookup(params["embed"], tokens, self.compute_dtype)
+        x = x + params["dec_pos"][:s].astype(x.dtype)[None]
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+        def body(carry, pl):
+            y, _, eb = self._dec_block(pl, carry, enc_out, positions)
+            return y, eb
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, ebs = jax.lax.scan(body_fn, x, params["dec_blocks"])
+        x = layer_norm(x, 1.0 + params["dec_norm"], params["dec_norm_b"])
+        return x, jnp.sum(ebs), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        from repro.models.lm import LOSS_CHUNK
+        x, ebops, aux = self.hidden_states(params, batch)
+        w = params["embed"].T.astype(self.compute_dtype)   # tied head
+        labels = batch["labels"]
+        b, s, d = x.shape
+        c = min(LOSS_CHUNK, s)
+        nc = s // c
+        xc = x.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+        lc = labels.reshape(b, nc, c).transpose(1, 0, 2)
+
+        def ce_chunk(carry, inp):
+            xk, lk = inp
+            logits = jnp.einsum("bcd,dv->bcv", xk, w).astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.sum(logits * jax.nn.one_hot(lk, logits.shape[-1],
+                                                   dtype=jnp.float32), axis=-1)
+            return carry + jnp.sum(lse - gold), None
+
+        if self.cfg.ce_remat:
+            ce_chunk = jax.checkpoint(ce_chunk)
+        total, _ = jax.lax.scan(ce_chunk, jnp.zeros((), jnp.float32), (xc, lc))
+        ce = total / (b * s)
+        return ce, {"ce": ce, "ebops": ebops, "aux_loss": aux}
+
+    # -------------------------------------------------------------- serving
+    def cache_defs(self, batch: int, t: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        L = cfg.n_layers
+        kv = ("layers", "batch", "kv_heads", "kv_seq", None)
+        return {
+            "k": PDef((L, batch, cfg.n_kv_heads, t, cfg.hd), kv,
+                      init="zeros", dtype=self.compute_dtype),
+            "v": PDef((L, batch, cfg.n_kv_heads, t, cfg.hd), kv,
+                      init="zeros", dtype=self.compute_dtype),
+            "xk": PDef((L, batch, cfg.n_kv_heads, cfg.enc_ctx, cfg.hd), kv,
+                       init="zeros", dtype=self.compute_dtype),
+            "xv": PDef((L, batch, cfg.n_kv_heads, cfg.enc_ctx, cfg.hd), kv,
+                       init="zeros", dtype=self.compute_dtype),
+            "index": PDef((), (), init="zeros", dtype=jnp.int32),
+        }
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = embed_lookup(params["embed"], tokens, self.compute_dtype)
+        x = x + params["dec_pos"][:s].astype(x.dtype)[None]
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+        def body(carry, pl):
+            h = self._ln(pl, 0, carry)
+            _, k, v = attn.project_qkv(pl, h, self.dec_attn, positions)
+            xk, xv = self._cross_kv(pl, enc_out)
+            y, _, _ = self._dec_block(pl, carry, enc_out, positions)
+            tr = lambda a: jnp.transpose(a, (0, 2, 1, 3)).astype(self.compute_dtype)
+            return y, (tr(k), tr(v), tr(xk), tr(xv))
+
+        x, (ks, vs, xks, xvs) = jax.lax.scan(body, x, params["dec_blocks"])
+        x = layer_norm(x, 1.0 + params["dec_norm"], params["dec_norm_b"])
+        logits = jnp.einsum("bd,dv->bv", x[:, -1].astype(jnp.float32),
+                            params["embed"].T.astype(jnp.float32))
+        cache = {"k": ks, "v": vs, "xk": xks, "xv": xvs,
+                 "index": jnp.asarray(s, jnp.int32)}
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens: Array):
+        index = cache["index"]
+        x = embed_lookup(params["embed"], tokens[:, None], self.compute_dtype)
+        x = x + jnp.take(params["dec_pos"], index[None], axis=0).astype(x.dtype)[None]
+
+        def body(carry, inp):
+            pl, kc, vc, xkc, xvc = inp
+            y, new_self, _ = self._dec_block(
+                pl, carry, None, None,
+                cache={"k": kc, "v": vc, "xk": xkc, "xv": xvc}, index=index)
+            return y, new_self
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                      cache["xk"], cache["xv"]))
+        x = layer_norm(x, 1.0 + params["dec_norm"], params["dec_norm_b"])
+        logits = jnp.einsum("bd,dv->bv", x[:, 0].astype(jnp.float32),
+                            params["embed"].T.astype(jnp.float32))
+        return logits, {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"],
+                        "index": index + 1}
+
+    def input_specs(self, seq_len: int, batch: int, mode: str) -> Dict[str, Any]:
+        cfg = self.cfg
+        frames = jax.ShapeDtypeStruct((batch, cfg.enc_ctx, cfg.d_model), jnp.bfloat16)
+        tok = jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)
+        if mode == "train":
+            return {"frames": frames, "tokens": tok, "labels": tok}
+        if mode == "prefill":
+            return {"frames": frames, "tokens": tok}
+        return {"tokens": jax.ShapeDtypeStruct((batch,), jnp.int32)}

@@ -1,0 +1,234 @@
+"""Zamba2-style hybrid: Mamba2 (SSD) backbone + one *shared* attention block.
+
+The scan runs over the 38 Mamba2 layers; every ``attn_every``-th layer also
+applies the single shared attention+GLU block (parameter reuse — Zamba's
+signature).  Decode carries per-layer SSM/conv states plus one KV cache per
+shared-block *application* (n_app = ceil(L / attn_every)), indexed inside
+the scan with a running application counter — so the 500k-context cell only
+pays full-length KV for the handful of attention applications.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn import attention as attn
+from repro.nn import mlp as mlpm
+from repro.nn import ssm
+from repro.nn.layers import embed_lookup, rms_norm
+from repro.nn.params import PDef
+from repro.parallel import sharding as shd
+
+Array = jax.Array
+
+
+class ZambaHybrid:
+    def __init__(self, cfg: ArchConfig, mesh=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.attn_cfg = attn.AttnCfg(
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+            rope_theta=cfg.rope_theta, causal=True, q_chunk=cfg.q_chunk,
+            remat_chunks=cfg.flash_remat)
+        self.compute_dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        self.n_app = -(-cfg.n_layers // cfg.attn_every)
+
+    def defs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        L, d = cfg.n_layers, cfg.d_model
+        blocks = dict(ssm.mamba2_defs(L, d, cfg.ssm_state))
+        blocks["norm0"] = PDef((L, d), ("layers", None), init="zeros")
+        shared = {}
+        shared.update(attn.attn_defs(1, d, cfg.n_heads, cfg.n_kv_heads, cfg.hd))
+        shared.update(mlpm.glu_defs(1, d, cfg.d_ff, cfg.quant))
+        shared["norm0"] = PDef((1, d), ("layers", None), init="zeros")
+        shared["norm1"] = PDef((1, d), ("layers", None), init="zeros")
+        return {
+            "embed": PDef((cfg.vocab, d), ("vocab", "embed")),
+            "blocks": blocks,
+            "shared": shared,
+            "final_norm": PDef((d,), (None,), init="zeros"),
+            "head": PDef((d, cfg.vocab), ("embed", "vocab")),
+        }
+
+    def _apply_flags(self) -> Array:
+        idx = jnp.arange(self.cfg.n_layers)
+        return ((idx + 1) % self.cfg.attn_every == 0).astype(jnp.int32)
+
+    def _shared_block(self, params, x, positions, cache_kv=None, index=None):
+        sp = jax.tree.map(lambda a: a[0], params["shared"])
+        h = rms_norm(x, sp["norm0"])
+        if cache_kv is None:
+            a = attn.multihead_attention(sp, h, self.attn_cfg, positions=positions)
+            new_kv = cache_kv
+        else:
+            kc, vc = cache_kv
+            a, kc, vc = attn.decode_attention(sp, h, self.attn_cfg, kc, vc, index)
+            new_kv = (kc, vc)
+        x = x + a
+        h2 = rms_norm(x, sp["norm1"])
+        m, eb = mlpm.glu_apply(sp, h2, self.cfg.act, self.cfg.quant)
+        return x + m, new_kv, eb
+
+    # ------------------------------------------------------------------ fwd
+    def hidden_states(self, params, batch):
+        cfg = self.cfg
+        x = embed_lookup(params["embed"], batch["tokens"], self.compute_dtype)
+        b, s = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        flags = self._apply_flags()
+
+        def body(carry, inp):
+            x = carry
+            pl, flag = inp
+            h = rms_norm(x, pl["norm0"])
+            m, _ = ssm.mamba2_apply(pl, h, cfg.ssm_state)
+            x = x + m
+            xa, _, eb = self._shared_block(params, x, positions)
+            x = jnp.where(flag > 0, xa, x)
+            if self.mesh is not None:
+                x = shd.constrain(x, self.mesh, "batch", None, None)
+            return x, eb * flag
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, ebs = jax.lax.scan(body_fn, x, (params["blocks"], flags))
+        x = rms_norm(x, params["final_norm"])
+        return x, jnp.sum(ebs), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        from repro.models.lm import LOSS_CHUNK
+        x, ebops, aux = self.hidden_states(params, batch)
+        w = params["head"].astype(self.compute_dtype)
+        labels = batch["labels"]
+        b, s, d = x.shape
+        c = min(LOSS_CHUNK, s)
+        nc = s // c
+        xc = x.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+        lc = labels.reshape(b, nc, c).transpose(1, 0, 2)
+
+        def ce_chunk(carry, inp):
+            xk, lk = inp
+            logits = jnp.einsum("bcd,dv->bcv", xk, w).astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.sum(logits * jax.nn.one_hot(lk, logits.shape[-1],
+                                                   dtype=jnp.float32), axis=-1)
+            return carry + jnp.sum(lse - gold), None
+
+        if self.cfg.ce_remat:
+            ce_chunk = jax.checkpoint(ce_chunk)
+        total, _ = jax.lax.scan(ce_chunk, jnp.zeros((), jnp.float32), (xc, lc))
+        ce = total / (b * s)
+        return ce, {"ce": ce, "ebops": ebops, "aux_loss": aux}
+
+    # -------------------------------------------------------------- serving
+    def cache_defs(self, batch: int, t: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        di = 2 * cfg.d_model
+        h = di // ssm.MAMBA_HEAD
+        L = cfg.n_layers
+        return {
+            "ssm": PDef((L, batch, h, ssm.MAMBA_HEAD, cfg.ssm_state),
+                        ("layers", "batch", "ffn", None, None),
+                        init="zeros", dtype=jnp.float32),
+            "conv": PDef((L, batch, ssm.CONV_K - 1, di + 2 * cfg.ssm_state),
+                         ("layers", "batch", None, None),
+                         init="zeros", dtype=self.compute_dtype),
+            "k": PDef((self.n_app, batch, cfg.n_kv_heads, t, cfg.hd),
+                      ("layers", "batch", "kv_heads", "kv_seq", None),
+                      init="zeros", dtype=self.compute_dtype),
+            "v": PDef((self.n_app, batch, cfg.n_kv_heads, t, cfg.hd),
+                      ("layers", "batch", "kv_heads", "kv_seq", None),
+                      init="zeros", dtype=self.compute_dtype),
+            "index": PDef((), (), init="zeros", dtype=jnp.int32),
+        }
+
+    def decode_step(self, params, cache, tokens: Array):
+        cfg = self.cfg
+        index = cache["index"]
+        x = embed_lookup(params["embed"], tokens[:, None], self.compute_dtype)
+        flags = self._apply_flags()
+
+        def body(carry, inp):
+            x, kcs, vcs, app = carry
+            pl, flag, sstate, cstate = inp
+            h = rms_norm(x, pl["norm0"])
+            m, new_state = ssm.mamba2_apply(pl, h, cfg.ssm_state,
+                                            state={"ssm": sstate, "conv": cstate})
+            x = x + m
+            kc = jax.lax.dynamic_index_in_dim(kcs, app, 0, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(vcs, app, 0, keepdims=False)
+            xa, (kc2, vc2), _ = self._shared_block(params, x, None,
+                                                   cache_kv=(kc, vc), index=index)
+            x = jnp.where(flag > 0, xa, x)
+            kcs = jax.lax.dynamic_update_index_in_dim(
+                kcs, jnp.where(flag > 0, kc2, kc), app, 0)
+            vcs = jax.lax.dynamic_update_index_in_dim(
+                vcs, jnp.where(flag > 0, vc2, vc), app, 0)
+            return (x, kcs, vcs, app + flag), (new_state["ssm"], new_state["conv"])
+
+        (x, kcs, vcs, _), (ssm_s, conv_s) = jax.lax.scan(
+            body, (x, cache["k"], cache["v"], jnp.zeros((), jnp.int32)),
+            (params["blocks"], flags, cache["ssm"], cache["conv"]))
+        x = rms_norm(x, params["final_norm"])
+        logits = jnp.einsum("bd,dv->bv", x[:, 0].astype(jnp.float32),
+                            params["head"].astype(jnp.float32))
+        return logits, {"ssm": ssm_s, "conv": conv_s, "k": kcs, "v": vcs,
+                        "index": index + 1}
+
+    def prefill(self, params, batch):
+        """Prefill = full forward + state extraction via decode-style scan.
+
+        For the dry-run cells we run the chunk-parallel forward for logits
+        and rebuild caches by a final-token pass; states mid-sequence are
+        produced by the scan inside mamba2_apply.
+        """
+        cfg = self.cfg
+        b, s = batch["tokens"].shape
+        x = embed_lookup(params["embed"], batch["tokens"], self.compute_dtype)
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        flags = self._apply_flags()
+        di = 2 * cfg.d_model
+        h = di // ssm.MAMBA_HEAD
+
+        def body(carry, inp):
+            x, kcs, vcs, app = carry
+            pl, flag = inp
+            hh = rms_norm(x, pl["norm0"])
+            zero = {"ssm": jnp.zeros((b, h, ssm.MAMBA_HEAD, cfg.ssm_state), jnp.float32),
+                    "conv": jnp.zeros((b, ssm.CONV_K - 1, di + 2 * cfg.ssm_state), x.dtype)}
+            m, st = ssm.mamba2_apply(pl, hh, cfg.ssm_state, state=zero)
+            x = x + m
+            sp = jax.tree.map(lambda a: a[0], params["shared"])
+            hn = rms_norm(x, sp["norm0"])
+            _, k, v = attn.project_qkv(sp, hn, self.attn_cfg, positions)
+            xa, _, _ = self._shared_block(params, x, positions)
+            x = jnp.where(flag > 0, xa, x)
+            kcs = jax.lax.dynamic_update_index_in_dim(
+                kcs, jnp.transpose(k, (0, 2, 1, 3)).astype(self.compute_dtype), app, 0)
+            vcs = jax.lax.dynamic_update_index_in_dim(
+                vcs, jnp.transpose(v, (0, 2, 1, 3)).astype(self.compute_dtype), app, 0)
+            return (x, kcs, vcs, app + flag), (st["ssm"], st["conv"])
+
+        kcs0 = jnp.zeros((self.n_app, b, cfg.n_kv_heads, s, cfg.hd), self.compute_dtype)
+        vcs0 = jnp.zeros_like(kcs0)
+        (x, kcs, vcs, _), (ssm_s, conv_s) = jax.lax.scan(
+            body, (x, kcs0, vcs0, jnp.zeros((), jnp.int32)),
+            (params["blocks"], flags))
+        x = rms_norm(x, params["final_norm"])
+        logits = jnp.einsum("bd,dv->bv", x[:, -1].astype(jnp.float32),
+                            params["head"].astype(jnp.float32))
+        cache = {"ssm": ssm_s, "conv": conv_s, "k": kcs, "v": vcs,
+                 "index": jnp.asarray(s, jnp.int32)}
+        return logits, cache
+
+    def input_specs(self, seq_len: int, batch: int, mode: str) -> Dict[str, Any]:
+        tok = jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)
+        if mode == "train":
+            return {"tokens": tok, "labels": tok}
+        if mode == "prefill":
+            return {"tokens": tok}
+        return {"tokens": jax.ShapeDtypeStruct((batch,), jnp.int32)}

@@ -1,0 +1,1 @@
+from repro.nn.base import Aux, merge_aux  # noqa: F401

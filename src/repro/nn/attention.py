@@ -1,0 +1,217 @@
+"""Grouped-query attention with q-chunked (flash-style) scoring.
+
+Covers every attention variant in the assigned zoo:
+
+* GQA with arbitrary (n_heads, n_kv_heads) grouping,
+* qk-norm (qwen3), QKV bias (qwen1.5), sliding windows + local:global layer
+  mixes (gemma3; the window is a *traced* per-layer scalar so local and
+  global layers share one scanned code path),
+* bidirectional encoder attention and cross-attention (whisper),
+* decode steps against pre-allocated (B, K, T, hd) KV caches.
+
+Scores are computed per query chunk inside a ``lax.scan`` so the full
+(S × S) score matrix never materialises — at the 32k-prefill cells the peak
+intermediate is (B, qc, N, T) per chunk instead of (B, N, S, S) per layer.
+Softmax runs in fp32.
+
+TP plan: head dims shard over ``model`` when the head counts divide the mesh
+(parallel.sharding.heads_shardable); otherwise K/V stay replicated and
+long-context cells shard the KV *sequence* of the cache over ``model``
+instead (SP) — softmax/contraction over the sharded axis lowers to
+all-reduces, which the dry-run's collective roofline term accounts for.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import rms_norm, rope
+from repro.nn.params import PDef
+
+Array = jax.Array
+NEG_INF = -1e30
+NO_WINDOW = (1 << 31) - 1  # "global" sentinel for traced int32 window scalars
+
+
+# --------------------------------------------------------------------- defs
+def attn_defs(n_layers: int, d: int, n_heads: int, n_kv: int, head_dim: int,
+              qk_norm: bool = False, qkv_bias: bool = False) -> dict:
+    L = n_layers
+    defs = {
+        "wq": PDef((L, d, n_heads, head_dim), ("layers", "embed", "heads", None)),
+        "wk": PDef((L, d, n_kv, head_dim), ("layers", "embed", "kv_heads", None)),
+        "wv": PDef((L, d, n_kv, head_dim), ("layers", "embed", "kv_heads", None)),
+        "wo": PDef((L, n_heads, head_dim, d), ("layers", "heads", None, "embed")),
+    }
+    if qkv_bias:
+        defs["bq"] = PDef((L, n_heads, head_dim), ("layers", "heads", None), init="zeros")
+        defs["bk"] = PDef((L, n_kv, head_dim), ("layers", "kv_heads", None), init="zeros")
+        defs["bv"] = PDef((L, n_kv, head_dim), ("layers", "kv_heads", None), init="zeros")
+    if qk_norm:
+        defs["q_scale"] = PDef((L, head_dim), ("layers", None), init="zeros")
+        defs["k_scale"] = PDef((L, head_dim), ("layers", None), init="zeros")
+    return defs
+
+
+def cache_defs(n_layers: int, batch: int, t: int, n_kv: int, head_dim: int,
+               dtype=jnp.bfloat16) -> dict:
+    """Stacked KV cache PDefs: kv_heads shard over model when divisible,
+    else the sequence dim takes the mesh (SP for long contexts)."""
+    sh = (n_layers, batch, n_kv, t, head_dim)
+    ax = ("layers", "batch", "kv_heads", "kv_seq", None)
+    return {"k": PDef(sh, ax, init="zeros", dtype=dtype),
+            "v": PDef(sh, ax, init="zeros", dtype=dtype)}
+
+
+class AttnCfg(NamedTuple):
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    causal: bool = True
+    use_rope: bool = True
+    q_chunk: int = 128
+    # flash-attention-style backward: recompute per-chunk scores/probs in the
+    # VJP instead of carrying (nc, B, qc, K, G, T) prob buffers through the
+    # scan — the dominant HBM-traffic term of the baseline lowering
+    # (EXPERIMENTS.md §Perf, hillclimb #1).
+    remat_chunks: bool = True
+
+
+def project_qkv(p, x, cfg: AttnCfg, positions: Optional[Array], prefix: str = ""):
+    wq, wk, wv = p[prefix + "wq"], p[prefix + "wk"], p[prefix + "wv"]
+    q = jnp.einsum("bsd,dnh->bsnh", x, wq.astype(x.dtype))
+    k = jnp.einsum("bsd,dkh->bskh", x, wk.astype(x.dtype))
+    v = jnp.einsum("bsd,dkh->bskh", x, wv.astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p[prefix + "bq"].astype(x.dtype)
+        k = k + p[prefix + "bk"].astype(x.dtype)
+        v = v + p[prefix + "bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = rms_norm(q, p[prefix + "q_scale"])
+        k = rms_norm(k, p[prefix + "k_scale"])
+    if cfg.use_rope and positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_core(q: Array, k: Array, v: Array, cfg: AttnCfg, *,
+                   q_positions: Optional[Array] = None,
+                   window: Union[int, Array, None] = None,
+                   causal: Optional[bool] = None) -> Array:
+    """q (B,S,N,hd) × k,v (B,T,K,hd) -> (B,S,N,hd), q-chunked.
+
+    ``window`` may be a traced scalar (NO_WINDOW = global attention).
+    """
+    b, s, n, hd = q.shape
+    t = k.shape[1]
+    kvh = cfg.n_kv
+    g = n // kvh
+    causal = cfg.causal if causal is None else causal
+    win = jnp.asarray(NO_WINDOW if window is None else window, jnp.int32)
+
+    qc = min(cfg.q_chunk, s)
+    pad = -s % qc
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (s + pad) // qc
+    qr = q.reshape(b, nc, qc, kvh, g, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    q_pos = (q_positions if q_positions is not None
+             else jnp.broadcast_to(jnp.arange(s), (b, s)))
+    if pad:
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=0)
+    qp = q_pos.reshape(b, nc, qc).transpose(1, 0, 2)              # (nc, B, qc)
+    k_pos = jnp.arange(t)
+
+    def chunk(carry, inp):
+        qck, qpk = inp                                            # (B,qc,K,G,hd), (B,qc)
+        sc = jnp.einsum("bqkgh,btkh->bqkgt", qck, k,
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+        mask = jnp.ones((b, qc, t), bool)
+        if causal:
+            mask &= k_pos[None, None, :] <= qpk[:, :, None]
+        mask &= qpk[:, :, None] - k_pos[None, None, :] < win
+        sc = jnp.where(mask[:, :, None, None, :], sc, NEG_INF)
+        pr = jax.nn.softmax(sc, axis=-1)
+        out = jnp.einsum("bqkgt,btkh->bqkgh", pr.astype(v.dtype), v)
+        return carry, out
+
+    if cfg.remat_chunks:
+        chunk = jax.checkpoint(chunk)
+    _, outs = jax.lax.scan(chunk, None, (qr, qp))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s + pad, n, hd)
+    return out[:, :s]
+
+
+def multihead_attention(
+    p: dict, x: Array, cfg: AttnCfg, *,
+    positions: Optional[Array] = None,
+    window: Union[int, Array, None] = None,
+    kv: Optional[Tuple[Array, Array]] = None,     # cross-attention K/V source
+    prefix: str = "",
+    return_kv: bool = False,
+    kv_constrain=None,
+):
+    """Full-sequence attention (training / prefill). x: (B,S,D) -> (B,S,D).
+
+    ``kv_constrain(tensor, *logical_axes)``, when given, shards K/V along the
+    *sequence* axis over the `model` mesh axis (SP attention) — used when the
+    head count doesn't divide the mesh (qwen3: 40, arctic: 56 on a 16-way
+    axis), so the (B,qc,K,G,T) score chain shards by T instead of being
+    replicated; softmax/out reductions over T lower to small all-reduces.
+    """
+    q, k_self, v_self = project_qkv(p, x, cfg, positions, prefix)
+    k, v = (k_self, v_self) if kv is None else kv
+    if kv_constrain is not None:
+        k = kv_constrain(k, "batch", "model", None, None)
+        v = kv_constrain(v, "batch", "model", None, None)
+    out = attention_core(q, k, v, cfg, q_positions=positions, window=window,
+                         causal=cfg.causal if kv is None else False)
+    y = jnp.einsum("bsnh,nhd->bsd", out, p[prefix + "wo"].astype(x.dtype))
+    if return_kv:
+        return y, (k_self, v_self)
+    return y
+
+
+def decode_attention(
+    p: dict, x: Array, cfg: AttnCfg, k_cache: Array, v_cache: Array,
+    index: Array, *, window: Union[int, Array, None] = None,
+    prefix: str = "", update_cache: bool = True,
+) -> Tuple[Array, Array, Array]:
+    """Single-token decode against a full-length (B, K, T, hd) KV cache.
+
+    Window layers simply mask old positions — the cache stays full-length so
+    local and global layers share one stacked layout (memory waste on local
+    layers is bounded by the cache the global layers need anyway).
+    """
+    b = x.shape[0]
+    n, kvh, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    g = n // kvh
+    win = jnp.asarray(NO_WINDOW if window is None else window, jnp.int32)
+    pos = jnp.broadcast_to(index, (b, 1))
+    q, k_new, v_new = project_qkv(p, x, cfg, pos, prefix)         # (B,1,*,hd)
+
+    t = k_cache.shape[2]
+    if update_cache:
+        k_upd = jnp.transpose(k_new, (0, 2, 1, 3)).astype(k_cache.dtype)
+        v_upd = jnp.transpose(v_new, (0, 2, 1, 3)).astype(v_cache.dtype)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_upd, index, axis=2)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_upd, index, axis=2)
+
+    qh = q.reshape(b, kvh, g, hd)
+    sc = jnp.einsum("bkgh,bkth->bkgt", qh, k_cache.astype(x.dtype),
+                    preferred_element_type=jnp.float32) * (hd ** -0.5)
+    tpos = jnp.arange(t)
+    mask = (tpos[None, :] <= index) & (index - tpos[None, :] < win)
+    sc = jnp.where(mask[:, None, None, :], sc, NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgt,bkth->bkgh", pr.astype(x.dtype), v_cache.astype(x.dtype))
+    y = jnp.einsum("bnh,nhd->bd", out.reshape(b, n, hd), p[prefix + "wo"].astype(x.dtype))
+    return y[:, None, :], k_cache, v_cache

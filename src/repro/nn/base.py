@@ -1,0 +1,51 @@
+"""Minimal functional module protocol used across the framework.
+
+No flax offline, so layers follow a simple convention:
+
+* a layer object is an immutable dataclass of hyper-parameters,
+* ``layer.init(key) -> params`` builds a pytree of arrays,
+* ``layer.apply(params, x, *, train=False) -> (y, Aux)`` is pure.
+
+``Aux`` carries cross-cutting scalars (EBOPs for the β-regulariser, auxiliary
+losses such as MoE load-balance) plus non-gradient state updates
+(batch-norm moving stats) that the train loop merges back into params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Aux:
+    ebops: jax.Array | float = 0.0
+    aux_loss: jax.Array | float = 0.0
+    updates: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @staticmethod
+    def zero() -> "Aux":
+        return Aux(ebops=jnp.zeros((), jnp.float32), aux_loss=jnp.zeros((), jnp.float32))
+
+
+def merge_aux(*auxes: Aux) -> Aux:
+    """Sum EBOPs / aux losses and union state updates."""
+    ebops = sum(jnp.asarray(a.ebops, jnp.float32) for a in auxes) if auxes else 0.0
+    aux_loss = sum(jnp.asarray(a.aux_loss, jnp.float32) for a in auxes) if auxes else 0.0
+    updates: Dict[str, Any] = {}
+    for a in auxes:
+        updates.update(a.updates)
+    return Aux(ebops=ebops, aux_loss=aux_loss, updates=updates)
+
+
+def scoped_updates(scope: str, aux: Aux) -> Aux:
+    """Prefix the state-update paths of ``aux`` with ``scope/``."""
+    return Aux(
+        ebops=aux.ebops,
+        aux_loss=aux.aux_loss,
+        updates={f"{scope}/{k}": v for k, v in aux.updates.items()},
+    )

@@ -1,0 +1,101 @@
+"""Basic NN building blocks (norms, embeddings, positional encodings).
+
+All functions are pure; parameter shapes come from PDef builders so init and
+sharding stay in sync (see nn/params.py).  Norms always compute in fp32 and
+cast back — standard mixed-precision hygiene for bf16 activations.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.params import PDef
+
+Array = jax.Array
+
+
+# ------------------------------------------------------------------- norms
+def rms_norm(x: Array, scale: Optional[Array], eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    if scale is not None:
+        y = y * (1.0 + scale.astype(jnp.float32))
+    return y.astype(dt)
+
+
+def layer_norm(x: Array, scale: Optional[Array], bias: Optional[Array],
+               eps: float = 1e-5) -> Array:
+    """LayerNorm; with scale=bias=None this is OLMo's non-parametric LN."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def norm_defs(n_layers: int, d: int, norm_type: str, nonparam: bool,
+              n_norms: int = 2) -> dict:
+    """Per-block norm params, stacked over layers. Empty dict if non-parametric."""
+    if nonparam:
+        return {}
+    out = {}
+    for k in range(n_norms):
+        out[f"norm{k}"] = PDef((n_layers, d), ("layers", None), init="zeros")
+        if norm_type == "layernorm":
+            out[f"norm{k}_bias"] = PDef((n_layers, d), ("layers", None), init="zeros")
+    return out
+
+
+def apply_norm(p_block: dict, idx: int, x: Array, norm_type: str,
+               nonparam: bool) -> Array:
+    if norm_type == "rmsnorm":
+        return rms_norm(x, None if nonparam else p_block[f"norm{idx}"])
+    scale = None if nonparam else 1.0 + p_block[f"norm{idx}"]
+    bias = None if nonparam else p_block[f"norm{idx}_bias"]
+    return layer_norm(x, scale, bias)
+
+
+# --------------------------------------------------------------- embeddings
+def embed_defs(vocab: int, d: int) -> PDef:
+    return PDef((vocab, d), ("vocab", "embed"), init="normal", scale=1.0)
+
+
+def embed_lookup(table: Array, ids: Array, compute_dtype) -> Array:
+    return jnp.take(table, ids, axis=0).astype(compute_dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> Array:
+    pos = jnp.arange(n)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    inv = jnp.exp(-jnp.log(10000.0) * dim / (d // 2))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# -------------------------------------------------------------------- rope
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotary embedding. x: (..., S, N, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = jnp.exp(-jnp.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq          # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                               # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+def activation_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu,
+            "tanh": jnp.tanh, "relu2": lambda x: jnp.square(jax.nn.relu(x))}[name]

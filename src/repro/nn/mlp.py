@@ -1,0 +1,104 @@
+"""Feed-forward blocks: GLU (llama-style), plain MLP, + optional HGQ fake-quant.
+
+When an architecture enables the paper's technique (``quant="hgq"``), each
+projection passes through HGQ fake-quantizers (channel-granularity on
+weights, tensor-granularity on activations — element-wise granularity is the
+paper-task setting; LM-scale uses the coarser grain to keep quantizer
+parameter count negligible) and contributes MAC EBOPs to the β-regularised
+loss, exactly as the paper's hybrid models treat their matmul layers.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ebops import ebops_mac
+from repro.core.quant import QuantConfig, bitwidth, fake_quant, init_quantizer
+from repro.nn.layers import activation_fn
+from repro.nn.params import PDef
+
+Array = jax.Array
+
+QW_LM = QuantConfig(granularity="tensor", signed=True, overflow="SAT",
+                    init_f=6.0, init_i=1.0)
+QA_LM = QuantConfig(granularity="tensor", signed=True, overflow="SAT",
+                    init_f=6.0, init_i=3.0)
+
+
+def maybe_quant(p: dict, name: str, w: Array, x: Array, quant: str):
+    """Apply HGQ fake-quant to (w, x) if enabled; returns (wq, xq, ebops).
+
+    LM-scale models use per-tensor (per-layer) bit-width grains so the
+    quantizer parameter count is negligible; the paper-task models in
+    core/ use the full element-wise grain.
+    """
+    if quant != "hgq":
+        return w, x, jnp.zeros((), jnp.float32)
+    qw = {"f": p[f"{name}_qwf"], "i": p[f"{name}_qwi"]}
+    qa = {"f": p[f"{name}_qaf"], "i": p[f"{name}_qai"]}
+    wq = fake_quant(qw, w, QW_LM, train=True)
+    xq = fake_quant(qa, x, QA_LM, train=True)
+    eb = (bitwidth(qw, QW_LM) * bitwidth(qa, QA_LM)
+          * jnp.asarray(float(w.size), jnp.float32))
+    return wq.astype(x.dtype), xq, jnp.sum(eb)
+
+
+def quant_proj_defs(n_layers: int, names: Tuple[str, ...], quant: str) -> dict:
+    if quant != "hgq":
+        return {}
+    defs = {}
+    for nm in names:
+        defs[f"{nm}_qwf"] = PDef((n_layers,), ("layers",), init="const",
+                                 scale=6.0, dtype=jnp.float32)
+        defs[f"{nm}_qwi"] = PDef((n_layers,), ("layers",), init="const",
+                                 scale=1.0, dtype=jnp.float32)
+        defs[f"{nm}_qaf"] = PDef((n_layers,), ("layers",), init="const",
+                                 scale=6.0, dtype=jnp.float32)
+        defs[f"{nm}_qai"] = PDef((n_layers,), ("layers",), init="const",
+                                 scale=3.0, dtype=jnp.float32)
+    return defs
+
+
+# ---------------------------------------------------------------------- GLU
+def glu_defs(n_layers: int, d: int, d_ff: int, quant: str = "none") -> dict:
+    defs = {
+        "w_gate": PDef((n_layers, d, d_ff), ("layers", "embed", "ffn")),
+        "w_up": PDef((n_layers, d, d_ff), ("layers", "embed", "ffn")),
+        "w_down": PDef((n_layers, d_ff, d), ("layers", "ffn", "embed")),
+    }
+    defs.update(quant_proj_defs(n_layers, ("gate", "up", "down"), quant))
+    return defs
+
+
+def glu_apply(p: dict, x: Array, act: str, quant: str = "none") -> Tuple[Array, Array]:
+    f = activation_fn(act)
+    wg, xg, e1 = maybe_quant(p, "gate", p["w_gate"].astype(x.dtype), x, quant)
+    wu, _, e2 = maybe_quant(p, "up", p["w_up"].astype(x.dtype), x, quant)
+    h = f(jnp.einsum("bsd,df->bsf", xg, wg)) * jnp.einsum("bsd,df->bsf", xg, wu)
+    wd, hq, e3 = maybe_quant(p, "down", p["w_down"].astype(x.dtype), h, quant)
+    y = jnp.einsum("bsf,fd->bsd", hq, wd)
+    return y, e1 + e2 + e3
+
+
+# ----------------------------------------------------------------- plain MLP
+def mlp_defs(n_layers: int, d: int, d_ff: int, quant: str = "none") -> dict:
+    defs = {
+        "w1": PDef((n_layers, d, d_ff), ("layers", "embed", "ffn")),
+        "b1": PDef((n_layers, d_ff), ("layers", "ffn"), init="zeros"),
+        "w2": PDef((n_layers, d_ff, d), ("layers", "ffn", "embed")),
+        "b2": PDef((n_layers, d), ("layers", None), init="zeros"),
+    }
+    defs.update(quant_proj_defs(n_layers, ("w1", "w2"), quant))
+    return defs
+
+
+def mlp_apply(p: dict, x: Array, act: str, quant: str = "none") -> Tuple[Array, Array]:
+    f = activation_fn(act)
+    w1, xq, e1 = maybe_quant(p, "w1", p["w1"].astype(x.dtype), x, quant)
+    h = f(jnp.einsum("bsd,df->bsf", xq, w1) + p["b1"].astype(x.dtype))
+    w2, hq, e2 = maybe_quant(p, "w2", p["w2"].astype(x.dtype), h, quant)
+    y = jnp.einsum("bsf,fd->bsd", hq, w2) + p["b2"].astype(x.dtype)
+    return y, e1 + e2

@@ -1,0 +1,92 @@
+"""Mixture-of-Experts with GShard-style static dispatch (EP over `model`).
+
+Design choices for TPU + SPMD (vs the GPU-style ragged all-to-all):
+
+* capacity-based dispatch expressed as dense einsums with one-hot masks —
+  every shape is static, so the multi-pod dry-run lowers cleanly and the
+  compiler can overlap the dispatch collectives;
+* experts shard over the ``model`` mesh axis (EP); the dispatch tensor
+  (B, S, E, C) is sharding-constrained to (batch, -, model, -) so its
+  per-device footprint stays O(tokens · E/|model| · C);
+* top-k (k=2 for phi3.5-moe / arctic) with load-balance auxiliary loss
+  (Switch/GShard form) surfaced through Aux.aux_loss;
+* arctic's dense-residual branch is a parallel GLU added to the expert
+  output (config flag ``dense_residual``).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.params import PDef
+
+Array = jax.Array
+
+
+def moe_defs(n_layers: int, d: int, d_ff: int, n_experts: int) -> dict:
+    L, E = n_layers, n_experts
+    return {
+        "router": PDef((L, d, E), ("layers", "embed", None), scale=0.1),
+        "we_gate": PDef((L, E, d, d_ff), ("layers", "experts", "embed", "ffn")),
+        "we_up": PDef((L, E, d, d_ff), ("layers", "experts", "embed", "ffn")),
+        "we_down": PDef((L, E, d_ff, d), ("layers", "experts", "ffn", "embed")),
+    }
+
+
+def _top_k_dispatch(gates: Array, k: int, capacity: int):
+    """gates (B, S, E) -> dispatch/combine (B, S, E, C) + load-balance loss."""
+    b, s, e = gates.shape
+    orig = gates
+    dispatch = jnp.zeros((b, s, e, capacity), gates.dtype)
+    combine = jnp.zeros((b, s, e, capacity), gates.dtype)
+    # running count of tokens already routed to each expert (per batch group)
+    base = jnp.zeros((b, 1, e), jnp.int32)
+    for _ in range(k):
+        idx = jnp.argmax(gates, axis=-1)                        # (B, S)
+        onehot = jax.nn.one_hot(idx, e, dtype=gates.dtype)      # (B, S, E)
+        gate_k = jnp.sum(gates * onehot, axis=-1)               # (B, S)
+        # position of each token within its expert queue
+        pos = jnp.cumsum(onehot.astype(jnp.int32), axis=1) - 1 + base
+        base = base + jnp.sum(onehot.astype(jnp.int32), axis=1, keepdims=True)
+        my_pos = jnp.sum(pos * onehot.astype(jnp.int32), axis=-1)  # (B, S)
+        keep = my_pos < capacity
+        poh = jax.nn.one_hot(my_pos, capacity, dtype=gates.dtype)  # (B, S, C)
+        sel = onehot * keep[..., None].astype(gates.dtype)
+        dispatch = dispatch + sel[..., None] * poh[..., None, :]
+        combine = combine + (gate_k[..., None] * sel)[..., None] * poh[..., None, :]
+        gates = gates * (1.0 - onehot)                           # mask chosen
+    # GShard load-balance loss on the *first* choice distribution
+    me = jnp.mean(orig, axis=(0, 1))                             # (E,)
+    ce = jnp.mean(dispatch.sum(-1), axis=(0, 1))                 # fraction routed
+    aux = e * jnp.sum(me * ce)
+    return dispatch, combine, aux
+
+
+def moe_apply(p: dict, x: Array, act_fn, *, top_k: int, capacity_factor: float,
+              constrain=None) -> Tuple[Array, Array]:
+    """x (B, S, D) -> (y, aux_loss).  Experts shard over `model` via EP."""
+    b, s, d = x.shape
+    e = p["router"].shape[-1]
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(x.dtype))
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    capacity = max(int(s * top_k * capacity_factor / e), 1)
+    dispatch, combine, aux = _top_k_dispatch(gates, top_k, capacity)
+    dispatch = dispatch.astype(x.dtype)
+    combine = combine.astype(x.dtype)
+    if constrain is not None:  # (batch, -, model/EP, -)
+        dispatch = constrain(dispatch, "batch", None, "model", None)
+        combine = constrain(combine, "batch", None, "model", None)
+
+    xe = jnp.einsum("bsec,bsd->becd", dispatch, x)
+    if constrain is not None:
+        xe = constrain(xe, "batch", "model", None, None)
+    h = act_fn(jnp.einsum("becd,edf->becf", xe, p["we_gate"].astype(x.dtype)))
+    h = h * jnp.einsum("becd,edf->becf", xe, p["we_up"].astype(x.dtype))
+    ye = jnp.einsum("becf,efd->becd", h, p["we_down"].astype(x.dtype))
+    if constrain is not None:
+        ye = constrain(ye, "batch", "model", None, None)
+    y = jnp.einsum("becd,bsec->bsd", ye, combine)
+    return y, aux.astype(jnp.float32)

@@ -1,0 +1,71 @@
+"""Parameter-definition pytrees: one source of truth for shapes, init AND sharding.
+
+Every model builds a pytree of :class:`PDef` (shape + logical axis names +
+initializer).  From that single structure we derive
+
+* ``init_params``   — materialised arrays (for real training / smoke tests),
+* ``param_shapes``  — ShapeDtypeStructs (for the multi-pod dry-run; nothing is
+  ever allocated at the full configs),
+* ``param_specs``   — jax.sharding PartitionSpecs via the logical→mesh axis
+  rule table in :mod:`repro.parallel.sharding`.
+
+Keeping init and sharding derived from one structure is what makes the
+40-cell dry-run tractable: a new architecture only declares its PDefs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]          # logical axis name per dim
+    init: str = "normal"                     # normal | zeros | ones | uniform
+    scale: float = 1.0                       # stddev multiplier (normal)
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_pdef(x) -> bool:
+    return isinstance(x, PDef)
+
+
+def param_shapes(defs) -> Any:
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=is_pdef)
+
+
+def init_params(defs, key: jax.Array) -> Any:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_pdef)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for d, k in zip(leaves, keys):
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, d.dtype))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, d.dtype))
+        elif d.init == "normal":
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else max(d.shape[-1], 1)
+            std = d.scale * fan_in ** -0.5
+            out.append((jax.random.normal(k, d.shape) * std).astype(d.dtype))
+        elif d.init == "uniform":
+            out.append(jax.random.uniform(k, d.shape, d.dtype, -d.scale, d.scale))
+        elif d.init == "const":
+            out.append(jnp.full(d.shape, d.scale, d.dtype))
+        else:
+            raise ValueError(d.init)
+    return jax.tree.unflatten(treedef, out)
+
+
+def count_params(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_pdef)
+    return int(sum(np.prod(d.shape) for d in leaves))

@@ -1,0 +1,203 @@
+"""State-space sequence blocks: Mamba2 (SSD) and RWKV-6 "Finch".
+
+Both are implemented as exact recurrences under ``lax.scan`` over time with
+heads sharded over the ``model`` axis (the state tensors carry a head dim
+that is a multiple of the mesh).  Decode is O(1) per token against a carried
+recurrent state — this is what makes the ``long_500k`` cell runnable for
+zamba2 / rwkv6 while the pure-attention archs skip it.
+
+The chunked/blocked SSD formulation (matmul-rich, MXU-friendly) is the
+documented perf-iteration path; the scan form is the correctness baseline
+the chunked kernel is validated against (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import rms_norm
+from repro.nn.params import PDef
+
+Array = jax.Array
+
+MAMBA_HEAD = 64   # P: channels per SSD head
+RWKV_HEAD = 64    # head size of RWKV-6
+CONV_K = 4
+
+
+# =============================================================== Mamba2 (SSD)
+def mamba2_defs(n_layers: int, d: int, ssm_state: int, expand: int = 2) -> dict:
+    L, di, n = n_layers, expand * d, ssm_state
+    h = di // MAMBA_HEAD
+    return {
+        "w_xz": PDef((L, d, 2 * di), ("layers", "embed", "ffn")),
+        "w_bc": PDef((L, d, 2 * n), ("layers", "embed", None)),
+        "w_dt": PDef((L, d, h), ("layers", "embed", "ffn")),
+        "dt_bias": PDef((L, h), ("layers", "ffn"), init="zeros"),
+        "a_log": PDef((L, h), ("layers", "ffn"), init="zeros"),
+        "d_skip": PDef((L, h), ("layers", "ffn"), init="ones"),
+        "conv_w": PDef((L, CONV_K, di + 2 * n), ("layers", None, None), scale=0.5),
+        "conv_b": PDef((L, di + 2 * n), ("layers", None), init="zeros"),
+        "norm_y": PDef((L, di), ("layers", "ffn"), init="zeros"),
+        "w_out": PDef((L, di, d), ("layers", "ffn", "embed")),
+    }
+
+
+def _causal_conv1d(x: Array, w: Array, b: Array,
+                   carry: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Depthwise causal conv, kernel CONV_K.  x (B,S,C), w (K,C).
+
+    ``carry`` is the last K-1 inputs from the previous segment (decode).
+    Returns (y, new_carry).
+    """
+    bsz, s, c = x.shape
+    if carry is None:
+        carry = jnp.zeros((bsz, CONV_K - 1, c), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)
+    y = sum(xp[:, k:k + s] * w[k].astype(x.dtype) for k in range(CONV_K))
+    return jax.nn.silu(y + b.astype(x.dtype)), xp[:, -(CONV_K - 1):]
+
+
+def mamba2_apply(p: dict, x: Array, ssm_state: int,
+                 state: Optional[dict] = None
+                 ) -> Tuple[Array, Optional[dict]]:
+    """x (B, S, D) -> (y, new_state).  state={'ssm','conv'} enables decode."""
+    bsz, s, d = x.shape
+    di = p["w_xz"].shape[-1] // 2
+    n = ssm_state
+    h = di // MAMBA_HEAD
+
+    xz = jnp.einsum("bsd,de->bse", x, p["w_xz"].astype(x.dtype))
+    xs, z = xz[..., :di], xz[..., di:]
+    bc = jnp.einsum("bsd,de->bse", x, p["w_bc"].astype(x.dtype))
+    conv_in = jnp.concatenate([xs, bc], axis=-1)
+    conv_carry = state["conv"] if state is not None else None
+    conv_out, new_conv = _causal_conv1d(conv_in, p["conv_w"], p["conv_b"], conv_carry)
+    xs, bmat, cmat = (conv_out[..., :di], conv_out[..., di:di + n],
+                      conv_out[..., di + n:])
+
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(x.dtype)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))                     # (B,S,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                # (H,)
+    da = jnp.exp(dt * a)                                        # (B,S,H)
+
+    xh = xs.reshape(bsz, s, h, MAMBA_HEAD).astype(jnp.float32)
+    bmat = bmat.astype(jnp.float32)
+    cmat = cmat.astype(jnp.float32)
+
+    s0 = (state["ssm"] if state is not None
+          else jnp.zeros((bsz, h, MAMBA_HEAD, n), jnp.float32))
+
+    def step(carry, inp):
+        xt, bt, ct, dat, dtt = inp   # (B,H,P) (B,N) (B,N) (B,H) (B,H)
+        new = carry * dat[..., None, None] + \
+            (dtt[..., None] * xt)[..., None] * bt[:, None, None, :]
+        yt = jnp.einsum("bhpn,bn->bhp", new, ct)
+        return new, yt
+
+    xs_t = jnp.moveaxis(xh, 1, 0)
+    b_t = jnp.moveaxis(bmat, 1, 0)
+    c_t = jnp.moveaxis(cmat, 1, 0)
+    da_t = jnp.moveaxis(da, 1, 0)
+    dt_t = jnp.moveaxis(dt, 1, 0)
+    s_fin, ys = jax.lax.scan(step, s0, (xs_t, b_t, c_t, da_t, dt_t))
+    y = jnp.moveaxis(ys, 0, 1)                                  # (B,S,H,P)
+    y = y + p["d_skip"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_y"])
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(x.dtype))
+    new_state = {"ssm": s_fin, "conv": new_conv} if state is not None else None
+    return out, new_state
+
+
+# ================================================================== RWKV-6
+def rwkv6_defs(n_layers: int, d: int, d_ff: int, lora: int = 32) -> dict:
+    L = n_layers
+    h = d // RWKV_HEAD
+    return {
+        # time-mix
+        "mu": PDef((L, 5, d), ("layers", None, None), init="uniform", scale=0.5),
+        "w0": PDef((L, d), ("layers", None), init="zeros"),
+        "w_lora_a": PDef((L, d, lora), ("layers", "embed", None), scale=0.1),
+        "w_lora_b": PDef((L, lora, d), ("layers", None, None), scale=0.1),
+        "wr": PDef((L, d, h, RWKV_HEAD), ("layers", "embed", "heads", None)),
+        "wk": PDef((L, d, h, RWKV_HEAD), ("layers", "embed", "heads", None)),
+        "wv": PDef((L, d, h, RWKV_HEAD), ("layers", "embed", "heads", None)),
+        "wg": PDef((L, d, h, RWKV_HEAD), ("layers", "embed", "heads", None)),
+        "u_bonus": PDef((L, h, RWKV_HEAD), ("layers", "heads", None), init="zeros"),
+        "ln_x": PDef((L, h, RWKV_HEAD), ("layers", "heads", None), init="zeros"),
+        "w_o": PDef((L, h, RWKV_HEAD, d), ("layers", "heads", None, "embed")),
+        # channel-mix
+        "mu_ff": PDef((L, 2, d), ("layers", None, None), init="uniform", scale=0.5),
+        "wk_ff": PDef((L, d, d_ff), ("layers", "embed", "ffn")),
+        "wv_ff": PDef((L, d_ff, d), ("layers", "ffn", "embed")),
+        "wr_ff": PDef((L, d, d), ("layers", "embed", None)),
+    }
+
+
+def _token_shift(x: Array, carry: Optional[Array]) -> Tuple[Array, Array]:
+    """xx_t = x_{t-1}; carry is x_{-1} for decode segments."""
+    if carry is None:
+        carry = jnp.zeros_like(x[:, :1])
+    xx = jnp.concatenate([carry, x[:, :-1]], axis=1)
+    return xx, x[:, -1:]
+
+
+def rwkv6_time_mix(p: dict, x: Array, state: Optional[dict]
+                   ) -> Tuple[Array, dict]:
+    bsz, s, d = x.shape
+    h = p["wr"].shape[-2]
+    xx, new_shift = _token_shift(x, state.get("shift_t") if state else None)
+    dx = xx - x
+    mr, mk, mv, mw, mg = (p["mu"][i].astype(x.dtype) for i in range(5))
+    xr, xk, xv, xw, xg = (x + dx * m for m in (mr, mk, mv, mw, mg))
+
+    r = jnp.einsum("bsd,dnh->bsnh", xr, p["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,dnh->bsnh", xk, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dnh->bsnh", xv, p["wv"].astype(x.dtype))
+    g = jnp.einsum("bsd,dnh->bsnh", xg, p["wg"].astype(x.dtype))
+    # data-dependent decay (the Finch contribution): w_t = exp(-exp(.))
+    wlog = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "bsd,dr,re->bse", xw.astype(jnp.float32),
+        p["w_lora_a"].astype(jnp.float32), p["w_lora_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(wlog)).reshape(bsz, s, h, RWKV_HEAD)   # (B,S,H,hd)
+
+    u = p["u_bonus"].astype(jnp.float32)
+    s0 = (state["wkv"] if state else
+          jnp.zeros((bsz, h, RWKV_HEAD, RWKV_HEAD), jnp.float32))
+
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def step(carry, inp):
+        rt, kt, vt, wt = inp                       # (B,H,hd) each
+        kv = kt[..., :, None] * vt[..., None, :]   # (B,H,hd,hd)
+        yt = jnp.einsum("bhi,bhij->bhj", rt, carry + u[None, :, :, None] * kv)
+        new = wt[..., :, None] * carry + kv
+        return new, yt
+
+    s_fin, ys = jax.lax.scan(
+        step, s0,
+        (jnp.moveaxis(rf, 1, 0), jnp.moveaxis(kf, 1, 0),
+         jnp.moveaxis(vf, 1, 0), jnp.moveaxis(w, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1)                                  # (B,S,H,hd)
+    y = rms_norm(y, p["ln_x"]).astype(x.dtype) * jax.nn.silu(g)
+    out = jnp.einsum("bsnh,nhd->bsd", y, p["w_o"].astype(x.dtype))
+    return out, {"wkv": s_fin, "shift_t": new_shift}
+
+
+def rwkv6_channel_mix(p: dict, x: Array, state: Optional[dict]
+                      ) -> Tuple[Array, dict]:
+    xx, new_shift = _token_shift(x, state.get("shift_c") if state else None)
+    dx = xx - x
+    mk, mr = p["mu_ff"][0].astype(x.dtype), p["mu_ff"][1].astype(x.dtype)
+    xk, xr = x + dx * mk, x + dx * mr
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["wk_ff"].astype(x.dtype))))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv_ff"].astype(x.dtype))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr_ff"].astype(x.dtype)))
+    return r * kv, {"shift_c": new_shift}

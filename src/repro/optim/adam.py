@@ -1,0 +1,124 @@
+"""Adam/AdamW + cosine-annealing-with-restarts, from scratch (no optax offline).
+
+The paper trains every experiment with Adam and a cosine-annealing-with-
+restarts schedule (§V-A); the β EBOPs term rides on the loss, so the
+optimizer itself is standard.  Weight decay is decoupled (AdamW) and masked
+off bit-width/norm/bias parameters by a name-based predicate — bit-width
+parameters must not be decayed toward 0 or β would double-count pruning
+pressure.
+
+Optimizer state mirrors the parameter pytree, so whatever sharding the
+params have (TP/EP/FSDP) the Adam moments inherit it — this is what ZeRO-
+shards the 480B arch's state across the full fleet.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+
+
+NO_DECAY_KEYS = ("norm", "bias", "_q", "q_in", "q_out", "bn_", "b0", "b_out",
+                 "dt_bias", "a_log", "mu", "u_bonus", "ln_", "dec_pos")
+
+
+def _decay_mask(path: str) -> float:
+    return 0.0 if any(k in path for k in NO_DECAY_KEYS) else 1.0
+
+
+def _paths(tree) -> Any:
+    """Pytree of '/'-joined key paths, same structure as tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+             for kp, _ in flat]
+    return jax.tree_util.tree_unflatten(treedef, paths)
+
+
+def adam_init(params) -> dict:
+    return {
+        "m": jax.tree.map(jnp.zeros_like, params),
+        "v": jax.tree.map(jnp.zeros_like, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def adam_update(params, grads, opt_state, cfg: AdamConfig,
+                lr_schedule: Optional[Callable] = None):
+    """One AdamW step. Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    if cfg.clip_norm:
+        grads, gn = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gn = global_norm(grads)
+    lr = cfg.lr if lr_schedule is None else lr_schedule(step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    paths = _paths(params)
+
+    def upd(p, g, m, v, path):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * jnp.square(gf)
+        mh = m2 / bc1
+        vh = v2 / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * _decay_mask(path) * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"], paths)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {
+        "grad_norm": gn, "lr": jnp.asarray(lr, jnp.float32)}
+
+
+# ------------------------------------------------------------- lr schedules
+def cosine_restarts(base_lr: float, first_period: int = 1000,
+                    t_mult: int = 2, min_frac: float = 0.02,
+                    warmup: int = 100) -> Callable:
+    """SGDR: cosine annealing with (geometric) warm restarts + linear warmup."""
+
+    def sched(step):
+        s = jnp.maximum(step.astype(jnp.float32) - warmup, 0.0)
+        if t_mult == 1:
+            frac = jnp.mod(s, first_period) / first_period
+        else:
+            cyc = jnp.floor(jnp.log2(1.0 + s * (t_mult - 1) / first_period)
+                            / jnp.log2(float(t_mult)))
+            start = first_period * (t_mult ** cyc - 1) / (t_mult - 1)
+            length = first_period * t_mult ** cyc
+            frac = (s - start) / length
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * jnp.clip(frac, 0.0, 1.0)))
+        lr = base_lr * (min_frac + (1 - min_frac) * cos)
+        wu = jnp.clip(step.astype(jnp.float32) / max(warmup, 1), 0.0, 1.0)
+        return lr * wu
+
+    return sched

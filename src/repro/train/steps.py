@@ -1,0 +1,132 @@
+"""Step factories: sharded train / prefill / decode steps for any arch config.
+
+``make_train_step`` builds the full β-regularised HGQ-LUT objective
+(CE + β(step)·EBOPs + λ·MoE-aux), takes grads, clips, Adam-updates — all as
+one pjit-able function whose in/out shardings are derived from the model's
+PDefs (parallel/sharding.py).  The same factory serves the real training
+examples (CPU, 1 device) and the 512-device multi-pod dry-run: nothing in
+here knows the mesh size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.ebops import BetaSchedule
+from repro.nn.params import PDef, init_params, param_shapes
+from repro.optim.adam import AdamConfig, adam_init, adam_update
+from repro.parallel import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    adam: AdamConfig = AdamConfig()
+    beta: BetaSchedule = BetaSchedule(beta_init=0.0, beta_final=None)
+    moe_aux_coef: float = 0.01
+    lr_schedule: Optional[Callable] = None
+
+
+# --------------------------------------------------------------- shardings
+def batch_shardings(model, seq: int, batch: int, mode: str, mesh: Mesh):
+    specs = {}
+    for k, v in model.input_specs(seq, batch, mode).items():
+        spec = shd.batch_dim_spec(v.shape[0], mesh)
+        specs[k] = NamedSharding(mesh, P(spec, *([None] * (len(v.shape) - 1))))
+    return specs
+
+
+def param_shardings(model, mesh: Mesh, serve: bool = False):
+    fsdp = model.cfg.fsdp
+    if serve and model.cfg.serve_fsdp >= 0:
+        fsdp = bool(model.cfg.serve_fsdp)
+    return shd.param_shardings(model.defs(), mesh, fsdp=fsdp)
+
+
+def opt_shardings(model, mesh: Mesh):
+    ps = param_shardings(model, mesh)
+    return {"m": ps, "v": ps,
+            "step": NamedSharding(mesh, P())}
+
+
+def cache_shardings(model, batch: int, t: int, mesh: Mesh):
+    return shd.param_shardings(model.cache_defs(batch, t), mesh,
+                               fsdp=model.cfg.fsdp)
+
+
+# -------------------------------------------------------------- train step
+def make_train_step(model, mesh: Optional[Mesh] = None,
+                    hp: TrainHParams = TrainHParams(),
+                    donate: bool = True, batch_shards=None):
+    """Returns (step_fn, shardings dict).  step_fn(params, opt, batch)."""
+
+    def step_fn(params, opt_state, batch):
+        step = opt_state["step"]
+
+        def loss_fn(p):
+            ce, metrics = model.loss(p, batch)
+            beta = hp.beta(step)
+            total = (ce + beta * metrics["ebops"]
+                     + hp.moe_aux_coef * metrics["aux_loss"])
+            return total, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state, opt_metrics = adam_update(
+            params, grads, opt_state, hp.adam, hp.lr_schedule)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return params, opt_state, metrics
+
+    if mesh is None:
+        return jax.jit(step_fn, donate_argnums=(0, 1) if donate else ()), None
+
+    ps = param_shardings(model, mesh)
+    os_ = opt_shardings(model, mesh)
+    rep = NamedSharding(mesh, P())
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(ps, os_, batch_shards),
+        out_shardings=(ps, os_, None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return jitted, {"params": ps, "opt": os_}
+
+
+# -------------------------------------------------------------- serve steps
+def make_prefill(model, mesh: Optional[Mesh] = None, batch_shards=None):
+    fn = lambda params, batch: model.prefill(params, batch)
+    if mesh is None:
+        return jax.jit(fn)
+    ps = param_shardings(model, mesh, serve=True)
+    return jax.jit(fn, in_shardings=(ps, batch_shards))
+
+
+def make_decode_step(model, batch: int, t: int, mesh: Optional[Mesh] = None):
+    fn = lambda params, cache, tokens: model.decode_step(params, cache, tokens)
+    if mesh is None:
+        return jax.jit(fn, donate_argnums=(1,))
+    ps = param_shardings(model, mesh, serve=True)
+    cs = cache_shardings(model, batch, t, mesh)
+    bspec = shd.batch_dim_spec(batch, mesh)
+    toks = NamedSharding(mesh, P(bspec))
+    logits = NamedSharding(mesh, P(bspec, None))
+    return jax.jit(fn, in_shardings=(ps, cs, toks),
+                   out_shardings=(logits, cs), donate_argnums=(1,))
+
+
+# --------------------------------------------------------------- init utils
+def init_state(model, key, mesh: Optional[Mesh] = None):
+    """Materialise params + opt state (sharded if mesh given)."""
+    defs = model.defs()
+    if mesh is None:
+        params = init_params(defs, key)
+        return params, adam_init(params)
+    ps = shd.param_shardings(defs, mesh, fsdp=model.cfg.fsdp)
+    init_fn = jax.jit(lambda k: init_params(defs, k), out_shardings=ps)
+    params = init_fn(key)
+    opt = jax.jit(adam_init, out_shardings=opt_shardings(model, mesh))(params)
+    return params, opt

@@ -1,0 +1,10 @@
+import os
+
+# Smoke tests and benches must see exactly ONE device — the 512-device
+# override belongs to launch/dryrun.py only (it sets XLA_FLAGS itself,
+# before any jax import, in its own process).
+os.environ.pop("XLA_FLAGS", None)
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

@@ -1,0 +1,109 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels.ref import fake_quant_ref, lut_dense_ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _lut_inputs(b, ci, h, co, dtype, key=KEY):
+    ks = jax.random.split(key, 7)
+    x = (jax.random.normal(ks[0], (b, ci)) * 3).astype(dtype)
+    w0 = jax.random.normal(ks[1], (ci, h, co)).astype(jnp.float32)
+    b0 = (jax.random.normal(ks[2], (ci, h, co)) * 0.5).astype(jnp.float32)
+    wo = (jax.random.normal(ks[3], (ci, h, co)) * 0.3).astype(jnp.float32)
+    bo = (jax.random.normal(ks[4], (ci, co)) * 0.1).astype(jnp.float32)
+    fi = jax.random.randint(ks[5], (ci, co), 0, 7).astype(jnp.float32)
+    ii = jnp.full((ci, co), 3.0)
+    fo = jax.random.randint(ks[6], (ci, co), 0, 7).astype(jnp.float32)
+    io = jnp.full((ci, co), 3.0)
+    return x, w0, b0, wo, bo, fi, ii, fo, io
+
+
+LUT_SHAPES = [
+    (1, 1, 1, 1), (7, 3, 4, 5), (16, 16, 8, 20), (33, 5, 8, 19),
+    (128, 16, 8, 5), (256, 4, 2, 128), (300, 7, 8, 130),
+]
+
+
+def _assert_lut_close(out, ref, fo):
+    """Kernel and ref reduce over C_in in different orders; a pre-quant value
+    sitting exactly on a rounding boundary may flip by one grid step.  Allow
+    a vanishing fraction of single-step flips, bitwise match elsewhere."""
+    out, ref = np.asarray(out), np.asarray(ref)
+    diff = np.abs(out - ref)
+    step = 2.0 ** -float(np.min(np.asarray(fo)))
+    assert diff.max() <= step + 1e-5, diff.max()
+    assert (diff > 1e-5).mean() < 1e-3, f"{(diff > 1e-5).mean():.2e} mismatch"
+
+
+@pytest.mark.parametrize("b,ci,h,co", LUT_SHAPES)
+def test_lut_dense_shape_sweep(b, ci, h, co):
+    args = _lut_inputs(b, ci, h, co, jnp.float32)
+    ref = lut_dense_ref(*args)
+    out = ops.lut_dense(*args)
+    _assert_lut_close(out, ref, args[7])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lut_dense_dtypes(dtype):
+    args = _lut_inputs(24, 6, 8, 10, dtype)
+    ref = lut_dense_ref(*args)
+    out = ops.lut_dense(*args)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=(1e-5 if dtype == jnp.float32 else 0.3),
+                               rtol=1e-2)
+
+
+def test_lut_dense_backward_matches_einsum_grads():
+    args = _lut_inputs(16, 4, 4, 6, jnp.float32)
+    x, w0, b0, wo, bo, fi, ii, fo, io = args
+
+    def loss_kernel(w0):
+        return jnp.sum(ops.lut_dense(x, w0, b0, wo, bo, fi, ii, fo, io) ** 2)
+
+    g = jax.grad(loss_kernel)(w0)
+    assert g.shape == w0.shape
+    assert np.all(np.isfinite(np.asarray(g)))
+    assert float(jnp.linalg.norm(g)) > 0
+
+
+FQ_SHAPES = [(1,), (5,), (128,), (130,), (8, 128), (3, 5, 7), (1000,), (2, 3, 129)]
+
+
+@pytest.mark.parametrize("shape", FQ_SHAPES)
+@pytest.mark.parametrize("mode", ["SAT", "WRAP"])
+def test_fake_quant_shape_sweep(shape, mode):
+    x = jax.random.normal(KEY, shape) * 6
+    f = jnp.full(shape, 3.0)
+    i = jnp.full(shape, 2.0)
+    out = ops.fake_quant(x, f, i, overflow=mode)
+    ref = fake_quant_ref(x, f, i, True, mode)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@settings(max_examples=30, deadline=None)
+@given(b=st.integers(1, 40), ci=st.integers(1, 10), co=st.integers(1, 24),
+       seed=st.integers(0, 1000))
+def test_lut_dense_property_fuzz(b, ci, co, seed):
+    args = _lut_inputs(b, ci, 4, co, jnp.float32, jax.random.PRNGKey(seed))
+    ref = lut_dense_ref(*args)
+    out = ops.lut_dense(*args)
+    _assert_lut_close(out, ref, args[7])
+
+
+def test_fake_quant_heterogeneous_bits():
+    x = jax.random.normal(KEY, (16, 16)) * 4
+    f = jax.random.randint(KEY, (16, 16), -2, 8).astype(jnp.float32)
+    i = jax.random.randint(jax.random.PRNGKey(1), (16, 16), 0, 4).astype(jnp.float32)
+    for mode in ("SAT", "WRAP"):
+        out = ops.fake_quant(x, f, i, overflow=mode)
+        ref = fake_quant_ref(x, f, i, True, mode)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))

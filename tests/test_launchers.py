@@ -1,0 +1,32 @@
+"""Launcher smoke tests: serve loop + straggler watchdog run end-to-end."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+ENV.pop("XLA_FLAGS", None)
+
+
+@pytest.mark.slow
+def test_serve_launcher_decodes():
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen15_05b",
+         "--smoke", "--batch", "2", "--prompt-len", "16", "--gen", "8"],
+        env=ENV, cwd=REPO, capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "decode=" in r.stdout and "sample generations" in r.stdout
+
+
+@pytest.mark.slow
+def test_train_launcher_smoke():
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "rwkv6_16b",
+         "--smoke", "--steps", "4", "--batch", "2", "--seq", "32",
+         "--log-every", "2"],
+        env=ENV, cwd=REPO, capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "done: 4 steps" in r.stdout

@@ -1,0 +1,145 @@
+"""LUT-Dense / LUT-Conv behaviour tests (paper §III-A)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lut_layers import (LUTConv1D, LUTConv2D, LUTDense,
+                                   Q_IN_DEFAULT, Q_OUT_DEFAULT, im2col_1d,
+                                   im2col_2d)
+from repro.core.quant import QuantConfig
+
+KEY = jax.random.PRNGKey(0)
+
+WIDE = QuantConfig(granularity="element", signed=True, overflow="SAT",
+                   init_f=10.0, init_i=6.0)   # effectively unquantized
+
+
+def test_output_shape_and_finite():
+    layer = LUTDense(8, 12, hidden=8, use_batchnorm=True)
+    p = layer.init(KEY)
+    y, aux = layer.apply(p, jax.random.normal(KEY, (32, 8)), train=True)
+    assert y.shape == (32, 12)
+    assert np.all(np.isfinite(np.asarray(y)))
+    assert float(aux.ebops) > 0
+
+
+def test_eq1_sum_of_single_input_luts():
+    """Eq. (1): the layer is exactly Σ_j L-LUT_ij(x_j) — verify by zeroing
+    one input and checking only its cells' contribution changes."""
+    layer = LUTDense(4, 3, hidden=4, q_in=WIDE, q_out=WIDE)
+    p = layer.init(KEY)
+    x = jax.random.normal(KEY, (1, 4))
+    y0, _ = layer.apply(p, x, train=False)
+    # replace input j=2 only; with cell (2, i) contributions computed on the
+    # new value, the delta must equal cellwise difference
+    x2 = x.at[0, 2].set(0.7)
+    y1, _ = layer.apply(p, x2, train=False)
+    xb0 = jnp.broadcast_to(x[..., :, None], (1, 4, 3))
+    xb1 = jnp.broadcast_to(x2[..., :, None], (1, 4, 3))
+    from repro.core.quant import fake_quant
+    c0 = layer.cell_mlp(p, fake_quant(p["q_in"], xb0, layer.q_in, train=False))
+    c1 = layer.cell_mlp(p, fake_quant(p["q_in"], xb1, layer.q_in, train=False))
+    delta_cells = np.asarray(
+        (fake_quant(p["q_out"], c1, layer.q_out, train=False)
+         - fake_quant(p["q_out"], c0, layer.q_out, train=False))[0, 2])
+    np.testing.assert_allclose(np.asarray(y1 - y0)[0], delta_cells, atol=1e-5)
+
+
+def test_dense_layer_recovery():
+    """§III-A: setting L-LUT_ij(x) = w_ij·φ(x) + b_i/N reproduces a dense
+    layer exactly (universal-approximation argument, Eq. 3)."""
+    ci, co = 5, 3
+    w = np.asarray(jax.random.normal(KEY, (ci, co))) * 0.5
+    b = np.asarray(jax.random.normal(jax.random.PRNGKey(1), (co,))) * 0.1
+
+    layer = LUTDense(ci, co, hidden=1, q_in=WIDE, q_out=WIDE)
+    p = layer.init(KEY)
+    big = 1e4  # linearise tanh: tanh(x/big)*big ≈ x
+    p = dict(p)
+    p["w0"] = jnp.full((ci, co, 1), 1.0 / big)
+    p["b0"] = jnp.zeros((ci, co, 1))
+    p["w_out"] = jnp.asarray(w[..., None]) * big
+    p["b_out"] = jnp.broadcast_to(jnp.asarray(b)[None, :] / ci, (ci, co))
+
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(2), (16, ci)))
+    y, _ = layer.apply(p, jnp.asarray(x), train=False)
+    np.testing.assert_allclose(np.asarray(y), x @ w + b, atol=2e-3, rtol=1e-3)
+
+
+def test_pruning_via_zero_bits():
+    layer = LUTDense(4, 4, hidden=4)
+    p = layer.init(KEY)
+    p["q_out"]["f"] = jnp.full((4, 4), -10.0)   # all output widths <= 0
+    p["q_out"]["i"] = jnp.full((4, 4), 0.0)
+    y, aux = layer.apply(p, jax.random.normal(KEY, (8, 4)), train=False)
+    assert np.all(np.asarray(y) == 0)
+    assert float(aux.ebops) == 0.0
+
+
+def test_batchnorm_updates_and_fusion():
+    layer = LUTDense(6, 5, hidden=4, use_batchnorm=True)
+    p = layer.init(KEY)
+    x = jax.random.normal(KEY, (128, 6)) * 2
+    _, aux = layer.apply(p, x, train=True)
+    assert set(aux.updates) == {"bn_mean", "bn_var"}
+    p2 = dict(p)
+    p2.update(aux.updates)
+    # eval path uses moving stats; fused kernel must match einsum eval
+    y_eval, _ = layer.apply(p2, x, train=False)
+    y_fused = layer.apply_fused(p2, x)
+    np.testing.assert_allclose(np.asarray(y_eval), np.asarray(y_fused),
+                               atol=2e-5, rtol=1e-5)
+
+
+def test_im2col_1d_matches_manual():
+    x = jnp.arange(2 * 7 * 3, dtype=jnp.float32).reshape(2, 7, 3)
+    p = im2col_1d(x, kernel=3, stride=2)
+    assert p.shape == (2, 3, 9)
+    np.testing.assert_array_equal(np.asarray(p[0, 1]),
+                                  np.asarray(x[0, 2:5]).reshape(-1))
+
+
+def test_im2col_2d_shapes():
+    x = jnp.ones((2, 8, 8, 3))
+    p = im2col_2d(x, (3, 3), padding="SAME")
+    assert p.shape == (2, 8, 8, 27)
+    p2 = im2col_2d(x, (3, 3), padding="VALID")
+    assert p2.shape == (2, 6, 6, 27)
+
+
+def test_lutconv1d_equals_dense_on_patches():
+    conv = LUTConv1D(c_in=3, c_out=4, kernel=3)
+    p = conv.init(KEY)
+    x = jax.random.normal(KEY, (2, 10, 3))
+    y, _ = conv.apply(p, x, train=False)
+    patches = im2col_1d(x, 3)
+    y2, _ = conv.dense.apply(p, patches, train=False)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y2))
+
+
+def test_lutconv2d_runs():
+    conv = LUTConv2D(c_in=2, c_out=3, kernel=(3, 3), padding="SAME")
+    p = conv.init(KEY)
+    y, aux = conv.apply(p, jax.random.normal(KEY, (2, 6, 6, 2)), train=True)
+    assert y.shape == (2, 6, 6, 3)
+    assert np.all(np.isfinite(np.asarray(y)))
+
+
+def test_gradients_reach_all_params():
+    layer = LUTDense(5, 4, hidden=4, use_batchnorm=True)
+    p = layer.init(KEY)
+    x = jax.random.normal(KEY, (64, 5))
+
+    def loss(p):
+        y, aux = layer.apply(p, x, train=True)
+        return jnp.mean(y ** 2) + 1e-6 * aux.ebops
+
+    g = jax.grad(loss)(p)
+    for k in ("w0", "b0", "w_out", "b_out", "bn_scale"):
+        assert float(jnp.linalg.norm(g[k])) > 0, k
+    for k in ("q_in", "q_out"):
+        assert float(jnp.linalg.norm(g[k]["f"])) > 0, k

@@ -1,0 +1,156 @@
+"""Per-arch smoke tests (reduced configs) + serving-path consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, applicable_shapes, get_config, get_smoke
+from repro.models.registry import build_model
+from repro.nn.params import count_params, init_params
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(model, seq, b, mode, seed=0):
+    out = {}
+    for k, v in model.input_specs(seq, b, mode).items():
+        # per-key RNG: modality stubs must not depend on the token draw size
+        rng = np.random.default_rng([seed, sum(map(ord, k))])
+        if v.dtype == jnp.int32:
+            out[k] = jnp.asarray(rng.integers(1, 50, v.shape), jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.normal(0, 1, v.shape), v.dtype)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    """Reduced config: one forward/train step, shapes + no NaNs."""
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    params = init_params(model.defs(), KEY)
+    batch = _batch(model, 32, 2, "train")
+    loss, metrics = model.loss(params, batch)
+    assert np.isfinite(float(loss)), arch
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_declared_dims(arch):
+    """Full configs must match the assignment table exactly."""
+    expected = {
+        "olmo_1b": (16, 2048, 16, 16, 8192, 50304),
+        "qwen3_14b": (40, 5120, 40, 8, 17408, 151936),
+        "gemma3_12b": (48, 3840, 16, 8, 15360, 262144),
+        "qwen15_05b": (24, 1024, 16, 16, 2816, 151936),
+        "zamba2_12b": (38, 2048, 32, 32, 8192, 32000),
+        "phi35_moe": (32, 4096, 32, 8, 6400, 32064),
+        "arctic_480b": (35, 7168, 56, 8, 4864, 32000),
+        "internvl2_26b": (48, 6144, 48, 8, 16384, 92553),
+        "rwkv6_16b": (24, 2048, 32, 32, 7168, 65536),
+        "whisper_base": (6, 512, 8, 8, 2048, 51865),
+    }[arch]
+    cfg = get_config(arch)
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == expected
+
+
+def test_arch_family_flags():
+    assert get_config("olmo_1b").nonparam_norm
+    assert get_config("qwen3_14b").qk_norm
+    assert get_config("qwen15_05b").qkv_bias
+    assert get_config("gemma3_12b").global_period == 6
+    assert get_config("phi35_moe").n_experts == 16
+    assert get_config("arctic_480b").n_experts == 128
+    assert get_config("arctic_480b").dense_residual
+    assert get_config("zamba2_12b").ssm_state == 64
+    assert get_config("whisper_base").n_enc_layers == 6
+    assert get_config("internvl2_26b").n_patches == 256
+
+
+def test_param_counts_in_expected_range():
+    """Full-config parameter counts should be near the advertised sizes."""
+    targets = {"olmo_1b": (0.9, 1.5), "qwen3_14b": (13, 16),
+               "gemma3_12b": (10.5, 13.5), "qwen15_05b": (0.35, 0.65),
+               "zamba2_12b": (0.9, 1.5), "phi35_moe": (38, 45),
+               "arctic_480b": (450, 500), "internvl2_26b": (17, 27),
+               "rwkv6_16b": (1.3, 1.9), "whisper_base": (0.05, 0.13)}
+    for arch, (lo, hi) in targets.items():
+        n = count_params(build_model(get_config(arch)).defs()) / 1e9
+        assert lo <= n <= hi, f"{arch}: {n:.2f}B outside [{lo},{hi}]"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch):
+    """decode_step after prefill(S) must reproduce the full forward at S+1.
+
+    This is the core serving invariant: KV caches / recurrent states carry
+    exactly the information the full-sequence forward would recompute.
+    """
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    params = init_params(model.defs(), KEY)
+    B, S = 2, 12
+    rng = np.random.default_rng(1)
+    tokens = rng.integers(1, 50, (B, S + 1)).astype(np.int32)
+    batch_pf = _batch(model, S, B, "prefill", seed=1)
+    batch_pf["tokens"] = jnp.asarray(tokens[:, :S])
+    logits_pf, cache = model.prefill(params, batch_pf)
+
+    # grow self-KV caches by one slot so the decode step has room
+    grown = {}
+    for k, v in cache.items():
+        if hasattr(v, "ndim") and v.ndim == 5 and v.shape[3] == S and k in ("k", "v"):
+            pad = [(0, 0)] * 5
+            pad[3] = (0, 4)
+            grown[k] = jnp.pad(v, pad)
+        else:
+            grown[k] = v
+    logits_dec, _ = model.decode_step(params, grown, jnp.asarray(tokens[:, S]))
+
+    batch_full = _batch(model, S + 1, B, "prefill", seed=1)
+    batch_full["tokens"] = jnp.asarray(tokens)
+    logits_full, _ = model.prefill(params, batch_full)
+
+    np.testing.assert_allclose(np.asarray(logits_dec, np.float32),
+                               np.asarray(logits_full, np.float32),
+                               atol=0.15, rtol=0.05)
+
+
+def test_gemma_local_global_pattern():
+    cfg = get_smoke("gemma3_12b")
+    model = build_model(cfg)
+    w = np.asarray(model.layer_windows())
+    assert (w > 10**6).sum() == cfg.n_layers // cfg.global_period
+    assert (w == cfg.window).sum() == cfg.n_layers - cfg.n_layers // cfg.global_period
+
+
+def test_applicable_shapes_skip_rules():
+    """long_500k only for sub-quadratic archs (DESIGN.md §Arch-applicability)."""
+    runs_500k = {a for a in ARCH_IDS
+                 if "long_500k" in applicable_shapes(get_config(a))}
+    assert runs_500k == {"gemma3_12b", "zamba2_12b", "rwkv6_16b"}
+
+
+def test_vlm_patch_embeds_change_output():
+    cfg = get_smoke("internvl2_26b")
+    model = build_model(cfg)
+    params = init_params(model.defs(), KEY)
+    batch = _batch(model, 16, 2, "train")
+    l1, _ = model.loss(params, batch)
+    batch2 = dict(batch)
+    batch2["patch_embeds"] = batch["patch_embeds"] + 1.0
+    l2, _ = model.loss(params, batch2)
+    assert float(l1) != float(l2)
+
+
+def test_moe_load_balance_loss_nonzero():
+    cfg = get_smoke("phi35_moe")
+    model = build_model(cfg)
+    params = init_params(model.defs(), KEY)
+    _, metrics = model.loss(params, _batch(model, 32, 2, "train"))
+    assert float(metrics["aux_loss"]) > 0

@@ -1,0 +1,133 @@
+"""MoE dispatch invariants + SSM (Mamba2 / RWKV6) recurrence parity tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn import moe as moem
+from repro.nn import ssm
+from repro.nn.params import init_params
+
+KEY = jax.random.PRNGKey(0)
+
+
+# --------------------------------------------------------------------- MoE
+def test_dispatch_capacity_and_weights():
+    b, s, e, k, cap = 2, 16, 4, 2, 6
+    gates = jax.nn.softmax(jax.random.normal(KEY, (b, s, e)), -1)
+    dispatch, combine, aux = moem._top_k_dispatch(gates, k, cap)
+    d = np.asarray(dispatch)
+    c = np.asarray(combine)
+    # each (expert, slot) holds at most one token
+    assert d.sum(axis=1).max() <= 1.0 + 1e-6
+    # each token dispatched at most k times
+    assert d.sum(axis=(2, 3)).max() <= k + 1e-6
+    # combine weights equal the gate values where dispatched
+    g = np.asarray(gates)
+    sel = d > 0
+    gates_b = np.broadcast_to(g[..., None], d.shape)
+    np.testing.assert_allclose(c[sel], gates_b[sel], rtol=1e-5)
+    assert float(aux) > 0
+
+
+def test_capacity_drops_overflow_tokens():
+    b, s, e = 1, 8, 2
+    # force every token to expert 0
+    gates = jnp.zeros((b, s, e)).at[..., 0].set(1.0)
+    dispatch, _, _ = moem._top_k_dispatch(gates, 1, capacity=3)
+    assert float(dispatch[..., 0, :].sum()) == 3.0  # only 3 slots survive
+
+
+def test_moe_apply_shapes_and_grads():
+    defs = moem.moe_defs(1, 8, 16, 4)
+    params = jax.tree.map(lambda d: d, defs)
+    p = init_params(defs, KEY)
+    p = jax.tree.map(lambda a: a[0], p)  # single layer slice
+    x = jax.random.normal(KEY, (2, 16, 8))
+
+    def run(p):
+        y, aux = moem.moe_apply(p, x, jax.nn.silu, top_k=2, capacity_factor=2.0)
+        return jnp.mean(y ** 2) + 0.01 * aux
+
+    g = jax.grad(run)(p)
+    assert float(jnp.linalg.norm(g["router"])) > 0
+    assert float(jnp.linalg.norm(g["we_gate"])) > 0
+
+
+# ------------------------------------------------------------------ Mamba2
+def test_mamba2_fullseq_equals_stepwise():
+    """The SSD scan over a sequence == feeding tokens one-by-one with state."""
+    d, n = 32, 8
+    defs = ssm.mamba2_defs(1, d, n)
+    p = jax.tree.map(lambda a: a[0], init_params(defs, KEY))
+    x = jax.random.normal(KEY, (2, 6, d)) * 0.5
+
+    di = 2 * d
+    h = di // ssm.MAMBA_HEAD
+    zero = {"ssm": jnp.zeros((2, h, ssm.MAMBA_HEAD, n), jnp.float32),
+            "conv": jnp.zeros((2, ssm.CONV_K - 1, di + 2 * n), x.dtype)}
+    y_full, _ = ssm.mamba2_apply(p, x, n, state=zero)
+
+    state = dict(zero)
+    outs = []
+    for t in range(6):
+        y_t, state = ssm.mamba2_apply(p, x[:, t:t + 1], n, state=state)
+        outs.append(y_t)
+    y_step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_step),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ------------------------------------------------------------------- RWKV6
+def test_rwkv6_fullseq_equals_stepwise():
+    d, ff = 128, 256
+    defs = ssm.rwkv6_defs(1, d, ff)
+    p = jax.tree.map(lambda a: a[0], init_params(defs, KEY))
+    x = jax.random.normal(KEY, (2, 5, d)) * 0.3
+    h = d // ssm.RWKV_HEAD
+
+    zero = {"wkv": jnp.zeros((2, h, ssm.RWKV_HEAD, ssm.RWKV_HEAD), jnp.float32),
+            "shift_t": jnp.zeros((2, 1, d), x.dtype),
+            "shift_c": jnp.zeros((2, 1, d), x.dtype)}
+    y_full, _ = ssm.rwkv6_time_mix(p, x, zero)
+
+    state = dict(zero)
+    outs = []
+    for t in range(5):
+        y_t, st = ssm.rwkv6_time_mix(p, x[:, t:t + 1], state)
+        state["wkv"] = st["wkv"]
+        state["shift_t"] = st["shift_t"]
+        outs.append(y_t)
+    y_step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_step),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_rwkv6_channel_mix_stepwise():
+    d, ff = 64, 128
+    defs = ssm.rwkv6_defs(1, d, ff)
+    p = jax.tree.map(lambda a: a[0], init_params(defs, KEY))
+    x = jax.random.normal(KEY, (2, 4, d)) * 0.3
+    zero = {"shift_c": jnp.zeros((2, 1, d), x.dtype)}
+    y_full, _ = ssm.rwkv6_channel_mix(p, x, zero)
+    state = dict(zero)
+    outs = []
+    for t in range(4):
+        y_t, st = ssm.rwkv6_channel_mix(p, x[:, t:t + 1], state)
+        state["shift_c"] = st["shift_c"]
+        outs.append(y_t)
+    np.testing.assert_allclose(np.asarray(y_full),
+                               np.asarray(jnp.concatenate(outs, 1)),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_data_dependent_decay_in_range():
+    """RWKV6 'Finch': decay w_t = exp(-exp(.)) must stay in (0, 1)."""
+    d = 64
+    defs = ssm.rwkv6_defs(1, d, 128)
+    p = jax.tree.map(lambda a: a[0], init_params(defs, KEY))
+    x = jax.random.normal(KEY, (1, 8, d))
+    wlog = p["w0"] + jnp.einsum("bsd,dr,re->bse", x, p["w_lora_a"], p["w_lora_b"])
+    w = np.asarray(jnp.exp(-jnp.exp(wlog)))
+    assert (w > 0).all() and (w < 1).all()

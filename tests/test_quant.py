@@ -1,0 +1,119 @@
+"""HGQ quantizer unit + property tests (hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import (QuantConfig, bitwidth, fake_quant, init_quantizer,
+                              int_to_float, quantize_to_int)
+
+MODES = ["SAT", "WRAP"]
+
+
+def mk(f, i, overflow="SAT", signed=True, granularity="tensor"):
+    cfg = QuantConfig(granularity=granularity, signed=signed, overflow=overflow,
+                      init_f=f, init_i=i)
+    return cfg, init_quantizer(cfg, ())
+
+
+# ------------------------------------------------------------------ property
+@settings(max_examples=200, deadline=None)
+@given(x=st.floats(-100, 100, allow_nan=False),
+       f=st.integers(0, 8), i=st.integers(0, 6),
+       mode=st.sampled_from(MODES), signed=st.booleans())
+def test_projection_properties(x, f, i, mode, signed):
+    cfg, qp = mk(f, i, mode, signed)
+    q = float(fake_quant(qp, jnp.asarray(x, jnp.float32), cfg, train=False))
+    # 1) on-grid: q * 2^f is an integer
+    assert abs(q * 2.0 ** f - round(q * 2.0 ** f)) < 1e-4
+    # 2) in representable range
+    scale = 2.0 ** -f
+    hi = 2.0 ** i - scale
+    lo = -2.0 ** i if signed else 0.0
+    assert lo - 1e-6 <= q <= hi + 1e-6
+    # 3) idempotent
+    q2 = float(fake_quant(qp, jnp.asarray(q, jnp.float32), cfg, train=False))
+    assert q2 == pytest.approx(q, abs=1e-6)
+
+
+@settings(max_examples=100, deadline=None)
+@given(f=st.integers(0, 8), i=st.integers(0, 5),
+       mode=st.sampled_from(MODES), signed=st.booleans(),
+       seed=st.integers(0, 2**31 - 1))
+def test_bit_exact_integer_path(f, i, mode, signed, seed):
+    """fake_quant == int code -> float, element-wise, exactly."""
+    cfg, qp = mk(f, i, mode, signed)
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal(64) * 8).astype(np.float32)
+    fq = np.asarray(fake_quant(qp, jnp.asarray(x), cfg, train=False))
+    codes = quantize_to_int(x, f, i, signed, mode)
+    assert np.array_equal(fq, int_to_float(codes, f).astype(np.float32))
+
+
+@settings(max_examples=50, deadline=None)
+@given(f=st.integers(0, 6), i=st.integers(0, 4))
+def test_sat_clips_wrap_wraps(f, i):
+    cfg_s, qs = mk(f, i, "SAT")
+    cfg_w, qw = mk(f, i, "WRAP")
+    big = jnp.asarray(2.0 ** i + 1.5)
+    s = float(fake_quant(qs, big, cfg_s, train=False))
+    w = float(fake_quant(qw, big, cfg_w, train=False))
+    assert s == pytest.approx(2.0 ** i - 2.0 ** -f)      # saturated at hi
+    # WRAP must agree with modular integer arithmetic exactly
+    expected = float(int_to_float(
+        quantize_to_int(np.asarray(2.0 ** i + 1.5), f, i, True, "WRAP"), f))
+    assert w == pytest.approx(expected, abs=1e-9)
+    assert w < 2.0 ** i                                  # wrapped below hi
+
+
+# ---------------------------------------------------------------------- unit
+def test_zero_bit_prunes():
+    cfg = QuantConfig(granularity="tensor", init_f=-2, init_i=1)  # width <= 0
+    qp = init_quantizer(cfg, ())
+    x = jnp.asarray([1.0, -3.0, 0.5])
+    assert np.all(np.asarray(fake_quant(qp, x, cfg, train=False)) == 0)
+    assert float(bitwidth(qp, cfg)) == 0.0
+
+
+def test_bitwidth_gradients_flow():
+    cfg, qp = mk(4, 2, "SAT")
+    x = jnp.linspace(-3, 3, 64)
+
+    def loss(qp):
+        return jnp.sum(fake_quant(qp, x, cfg) ** 2)
+
+    g = jax.grad(loss)(qp)
+    assert float(jnp.abs(g["f"])) > 0        # rounding-error surrogate
+    # i gradient requires clipped samples
+    cfg2, qp2 = mk(4, 0, "SAT")
+    g2 = jax.grad(lambda q: jnp.sum(fake_quant(q, x, cfg2) ** 2))(qp2)
+    assert float(jnp.abs(g2["i"])) > 0
+
+
+def test_wrap_has_identity_ste():
+    cfg, qp = mk(3, 2, "WRAP")
+    x = jnp.asarray([0.3, 5.0, -7.2])       # includes wrapped elements
+    g = jax.grad(lambda x: jnp.sum(fake_quant(qp, x, cfg)))(x)
+    assert np.allclose(np.asarray(g), 1.0)
+
+
+def test_element_granularity_shapes():
+    cfg = QuantConfig(granularity="element")
+    qp = init_quantizer(cfg, (3, 4))
+    assert qp["f"].shape == (3, 4)
+    y = fake_quant(qp, jnp.ones((3, 4)), cfg)
+    assert y.shape == (3, 4)
+
+    cfgc = QuantConfig(granularity="channel")
+    qpc = init_quantizer(cfgc, (3, 4))
+    assert qpc["f"].shape == (4,)
+
+
+def test_train_vs_eval_same_projection():
+    cfg, qp = mk(5, 2, "SAT")
+    x = jnp.linspace(-5, 5, 101)
+    a = fake_quant(qp, x, cfg, train=True)
+    b = fake_quant(qp, x, cfg, train=False)
+    assert np.array_equal(np.asarray(a), np.asarray(b))

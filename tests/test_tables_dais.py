@@ -1,0 +1,116 @@
+"""Toolchain tests: truth tables, DAIS lowering, bit-exact interpretation, RTL."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dais import DaisProgram, Reg, compile_sequential
+from repro.core.hgq_layers import HGQDense
+from repro.core.lut_layers import LUTDense
+from repro.core.quant import int_to_float, quantize_to_int
+from repro.core.rtl import emit_verilog
+from repro.core.tables import extract_tables
+
+KEY = jax.random.PRNGKey(3)
+IN_F, IN_I = 4, 2
+
+
+def _quantized_inputs(n, ci, key=KEY):
+    x = np.asarray(jax.random.normal(key, (n, ci))) * 2
+    codes = quantize_to_int(x, IN_F, IN_I, True, "SAT")
+    return codes, int_to_float(codes, IN_F)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_tables_bit_exact_vs_eval(seed):
+    k = jax.random.PRNGKey(seed)
+    layer = LUTDense(6, 9, hidden=4, use_batchnorm=(seed % 2 == 0))
+    p = layer.init(k)
+    codes, xq = _quantized_inputs(256, 6, k)
+    ref, _ = layer.apply(p, jnp.asarray(xq), train=False)
+    t = extract_tables(layer, p)
+    out = t.lookup_codes(codes, IN_F) * 2.0 ** -t.common_f_out()
+    np.testing.assert_array_equal(np.asarray(ref, np.float64), out)
+
+
+def test_table_sizes_match_bitwidths():
+    layer = LUTDense(4, 3, hidden=4)
+    p = layer.init(KEY)
+    t = extract_tables(layer, p)
+    assert t.codes.shape[:2] == (4, 3)
+    assert t.codes.shape[2] == 2 ** t.in_width.max()
+    # pruned cells emit zero
+    assert t.n_luts() <= 12
+
+
+def test_dais_two_layer_bit_exact():
+    l1 = LUTDense(5, 8, hidden=4, use_batchnorm=True)
+    l2 = LUTDense(8, 3, hidden=4)
+    k1, k2 = jax.random.split(KEY)
+    p1, p2 = l1.init(k1), l2.init(k2)
+    codes, xq = _quantized_inputs(512, 5)
+    h, _ = l1.apply(p1, jnp.asarray(xq), train=False)
+    ref, _ = l2.apply(p2, h, train=False)
+    prog = compile_sequential([l1, l2], [p1, p2], IN_F, IN_I)
+    out = prog.run_float(xq)
+    np.testing.assert_array_equal(np.asarray(ref, np.float64), out)
+
+
+def test_dais_hybrid_bit_exact():
+    """Paper's hybrid flow: matmul (HGQ) layer feeding a LUT layer."""
+    h1 = HGQDense(6, 5, activation="relu")
+    l1 = LUTDense(5, 4, hidden=4)
+    k1, k2 = jax.random.split(KEY)
+    ph, pl = h1.init(k1), l1.init(k2)
+    codes, xq = _quantized_inputs(256, 6)
+    y, _ = h1.apply(ph, jnp.asarray(xq), train=False)
+    ref, _ = l1.apply(pl, y, train=False)
+    prog = compile_sequential([h1, l1], [ph, pl], IN_F, IN_I)
+    out = prog.run_float(xq)
+    np.testing.assert_array_equal(np.asarray(ref, np.float64), out)
+
+
+def test_interpreter_rejects_wide_registers():
+    prog = DaisProgram()
+    with pytest.raises(OverflowError):
+        prog.emit("CONST", (0,), Reg(f=0, width=65, signed=True))
+
+
+def test_requant_rounding_half_to_even():
+    from repro.core.dais import _requant
+    v = np.asarray([1, 2, 3, 5, -1, -3], np.int64)  # codes at f=1 (x/2)
+    out = _requant(v, src_f=1, f=0, i=4, signed=True, mode="SAT")
+    # 0.5->0, 1->1, 1.5->2, 2.5->2, -0.5->0, -1.5->-2 (ties to even)
+    np.testing.assert_array_equal(out, [0, 1, 2, 2, 0, -2])
+
+
+def test_verilog_emission_wellformed():
+    import re
+    l1 = LUTDense(3, 4, hidden=4)
+    p1 = l1.init(KEY)
+    prog = compile_sequential([l1], [p1], IN_F, IN_I)
+    v = emit_verilog(prog, name="dut")
+    assert v.startswith("module dut")
+    assert v.rstrip().endswith("endmodule")
+    assert len(re.findall(r"^module\b", v, re.M)) == \
+        len(re.findall(r"^endmodule\b", v, re.M)) == 1
+    n_fun = len(re.findall(r"\bfunction\b", v)) - len(re.findall(r"\bendfunction\b", v))
+    assert n_fun == 0
+    # one case-function per live L-LUT
+    t = prog.tables[0]
+    assert len(re.findall(r"\bendfunction\b", v)) == t.n_luts()
+    for k in range(4):
+        assert f"out_{k}" in v
+
+
+def test_conversion_speed_32x32():
+    """Paper §IV-B: ~100 ms conversion for a 32x32 LUT-layer on CPU."""
+    import time
+    layer = LUTDense(32, 32, hidden=8)
+    p = layer.init(KEY)
+    extract_tables(layer, p)  # warm
+    t0 = time.time()
+    extract_tables(layer, p)
+    dt = time.time() - t0
+    assert dt < 5.0, f"table extraction too slow: {dt:.2f}s"
