@@ -1,0 +1,107 @@
+"""Kernel micro-bench: einsum chain vs fused Pallas LUT-Dense, fwd + bwd.
+
+Writes ``BENCH_kernels.json`` with, per shape: forward and backward (full
+train-mode VJP over all 9 inputs) median walltime for both implementations,
+plus an analytic peak-HBM-intermediate estimate.  The structural point of the
+fused pair is the memory column: the einsum train path materialises the
+(B, C_in, H, C_out) hidden tensor in HBM twice (forward save + cotangent
+rebuild), while the fused forward and the recompute backward keep every
+per-``j`` intermediate in a (TB, H, TCO) VMEM tile.
+
+On this CPU-only container the fused kernels run in Pallas *interpret* mode
+(per-grid-instance Python), so walltime favours XLA's compiled einsum — the
+``interpret_mode`` flag is recorded so downstream trajectory tooling doesn't
+read CPU walltime as the TPU story.
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only kernels
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.kernels import ops
+from repro.kernels.lut_dense import DEF_TB, DEF_TCO
+from repro.kernels.ref import lut_dense_train_ref
+
+# (B, C_in, H, C_out) — small enough for interpret mode, big enough that the
+# einsum hidden tensor dominates its peak memory
+SHAPES = [(256, 16, 8, 20), (512, 16, 8, 32), (1024, 32, 8, 64)]
+OUT_JSON = "BENCH_kernels.json"
+
+
+def _inputs(b, ci, h, co, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+    x = (jax.random.normal(ks[0], (b, ci)) * 3).astype(jnp.float32)
+    w0 = jax.random.normal(ks[1], (ci, h, co))
+    b0 = jax.random.normal(ks[2], (ci, h, co)) * 0.5
+    wo = jax.random.normal(ks[3], (ci, h, co)) * 0.3
+    bo = jax.random.normal(ks[4], (ci, co)) * 0.1
+    fi = jax.random.randint(ks[5], (ci, co), 0, 7).astype(jnp.float32)
+    ii = jnp.full((ci, co), 3.0)
+    fo = jax.random.randint(ks[6], (ci, co), 0, 7).astype(jnp.float32)
+    io = jnp.full((ci, co), 3.0)
+    cot = jax.random.normal(ks[7], (b, co))
+    return (x, w0, b0, wo, bo, fi, ii, fo, io), cot
+
+
+def _peak_bytes(b, ci, h, co):
+    """fp32 bytes of the largest *intermediate* each path materialises in HBM
+    (weights/inputs/outputs are common to both and excluded)."""
+    tb, tco = min(DEF_TB, b), min(DEF_TCO, co)
+    einsum = (b * ci * h * co      # hidden tanh activations, saved for bwd
+              + b * ci * co * 2)   # broadcast xq + pre-quant y
+    fused = (tb * h * tco          # per-j hidden tile, VMEM-resident
+             + tb * tco * 2        # xq / y tiles
+             + (co + tco - 1) // tco * b * ci)  # bwd dx partials (HBM)
+    return {"einsum": einsum * 4, "fused": fused * 4}
+
+
+def run() -> None:
+    interpret = jax.default_backend() != "tpu"
+    results = []
+    for b, ci, h, co in SHAPES:
+        args, cot = _inputs(b, ci, h, co)
+        argnums = tuple(range(9))
+
+        fwd_e = jax.jit(lut_dense_train_ref)
+        fwd_f = jax.jit(ops.lut_dense)
+        bwd_e = jax.jit(jax.grad(
+            lambda *a: jnp.sum(lut_dense_train_ref(*a) * cot), argnums=argnums))
+        bwd_f = jax.jit(jax.grad(
+            lambda *a: jnp.sum(ops.lut_dense(*a) * cot), argnums=argnums))
+
+        row = {
+            "b": b, "c_in": ci, "h": h, "c_out": co,
+            "fwd_us": {"einsum": time_call(fwd_e, *args, warmup=1, iters=3),
+                       "fused": time_call(fwd_f, *args, warmup=1, iters=3)},
+            "bwd_us": {"einsum": time_call(bwd_e, *args, warmup=1, iters=3),
+                       "fused": time_call(bwd_f, *args, warmup=1, iters=3)},
+            "peak_intermediate_bytes": _peak_bytes(b, ci, h, co),
+        }
+        results.append(row)
+        shape = f"{b}x{ci}x{h}x{co}"
+        for d in ("fwd", "bwd"):
+            for impl in ("einsum", "fused"):
+                emit(f"kernels/{d}/{impl}/{shape}", row[f"{d}_us"][impl],
+                     f"peak_B={row['peak_intermediate_bytes'][impl]}")
+
+    payload = {
+        "backend": jax.default_backend(),
+        "interpret_mode": interpret,
+        "tile": {"tb": DEF_TB, "tco": DEF_TCO},
+        "note": ("fused fwd+bwd never materialise the (B,C_in,H,C_out) hidden "
+                 "tensor; interpret-mode walltime on CPU is not the TPU story"),
+        "results": results,
+    }
+    with open(OUT_JSON, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    emit("kernels/json_written", 0.0, OUT_JSON)
+
+
+if __name__ == "__main__":
+    run()

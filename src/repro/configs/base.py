@@ -52,6 +52,11 @@ class ArchConfig:
     n_patches: int = 0
     # paper technique
     quant: str = "none"           # none | hgq
+    lut_use_fused: bool = False   # LUT layers: fused Pallas fwd+bwd train
+    #   path (kernels/lut_dense*.py) instead of the einsum chain; reaches
+    #   make_lut_train_step via train.steps.hparams_from_cfg(cfg).
+    #   Env-overridable for A/B sweeps (generic REPRO_<FIELD> mechanism
+    #   below): REPRO_LUT_USE_FUSED=1.
     # compute
     dtype: str = "bfloat16"
     q_chunk: int = 128

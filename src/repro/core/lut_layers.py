@@ -53,6 +53,12 @@ class LUTDense:
     q_in: QuantConfig = Q_IN_DEFAULT
     q_out: QuantConfig = Q_OUT_DEFAULT
     bn_momentum: float = 0.99
+    # Route apply() through the fused Pallas fwd+bwd pair (kernels/): no
+    # (B, C_in, H, C_out) HBM intermediate in either direction.  Covers the
+    # paper default (1 hidden tanh layer); train-mode batch-norm still needs
+    # the batch-wide pre-quant activations for its statistics, so that one
+    # combination falls back to the einsum path.
+    use_fused: bool = False
 
     # ----------------------------------------------------------------- init
     def init(self, key: Array) -> dict:
@@ -105,18 +111,26 @@ class LUTDense:
         return inv, params["bn_bias"] - params["bn_mean"] * inv
 
     # --------------------------------------------------- fused Pallas path
-    def apply_fused(self, params: dict, x: Array) -> Array:
-        """Eval-mode forward through the fused Pallas kernel (kernels/).
+    def _fused_forward(self, params: dict, x: Array, *, train: bool) -> Array:
+        """Forward through the fused Pallas fwd+bwd pair (kernels/ops.py).
 
-        Single-hidden-layer cells only; BN is folded into the output
-        projection at call time.  Bit-widths are frozen (rounded) — this is
-        the serving/deployment path; training uses the einsum path so the
-        quantizer parameters keep their surrogate gradients.
+        Train mode keeps the continuous bit-width parameters differentiable
+        (clip + round-STE via ``core.quant.ste_bits``, surrogate gradients
+        from the Pallas backward); eval mode freezes them.  BN is
+        folded into the output projection (eval/frozen stats only — the
+        caller guarantees not (use_batchnorm and train)).
         """
         if self.n_hidden_layers != 1 or self.activation != "tanh":
             raise NotImplementedError("fused kernel covers the paper default "
                                       "(1 hidden tanh layer)")
-        from repro.core.quant import int_bits
+        # the kernel pair hardcodes the paper's quantizer scheme, including
+        # the zero i_in surrogate that only holds under WRAP
+        if (self.q_in.overflow != "WRAP" or self.q_out.overflow != "SAT"
+                or not (self.q_in.signed and self.q_out.signed)):
+            raise NotImplementedError("fused kernel covers the paper default "
+                                      "quantizers (signed WRAP in, signed "
+                                      "SAT out)")
+        from repro.core.quant import ste_bits
         from repro.kernels import ops as kops
 
         w0 = jnp.transpose(params["w0"], (0, 2, 1))       # (Ci, H, Co)
@@ -127,19 +141,32 @@ class LUTDense:
             scale, bias = self.bn_affine(params)          # (Ci, Co)
             wo = wo * scale[:, None, :]
             bo = bo * scale + bias
-        f_in, i_in = int_bits(params["q_in"], self.q_in)
-        f_out, i_out = int_bits(params["q_out"], self.q_out)
+        # one source of truth for the clip + round-STE width chain
+        fi, ii = ste_bits(params["q_in"], self.q_in, train=train)
+        fo, io = ste_bits(params["q_out"], self.q_out, train=train)
+        grid = (self.c_in, self.c_out)
+        fi, ii, fo, io = (jnp.broadcast_to(a, grid) for a in (fi, ii, fo, io))
         lead = x.shape[:-1]
         xf = x.reshape((-1, self.c_in))
-        y = kops.lut_dense(xf, w0, b0, wo, bo,
-                           jnp.asarray(f_in, jnp.float32), jnp.asarray(i_in, jnp.float32),
-                           jnp.asarray(f_out, jnp.float32), jnp.asarray(i_out, jnp.float32))
+        y = kops.lut_dense(xf, w0, b0, wo, bo, fi, ii, fo, io)
         return y.reshape(lead + (self.c_out,))
+
+    def apply_fused(self, params: dict, x: Array) -> Array:
+        """Eval-mode forward through the fused Pallas kernel (serving path)."""
+        return self._fused_forward(params, x, train=False)
 
     # ---------------------------------------------------------------- apply
     def apply(self, params: dict, x: Array, *, train: bool = False) -> Tuple[Array, Aux]:
         if x.shape[-1] != self.c_in:
             raise ValueError(f"expected (..., {self.c_in}), got {x.shape}")
+        # BN+train needs batch-wide statistics -> einsum fallback; any other
+        # structurally unsupported config raises inside _fused_forward.
+        if self.use_fused and not (self.use_batchnorm and train):
+            out = self._fused_forward(params, x, train=train)
+            eb = ebops_mod.ebops_lut(bitwidth(params["q_in"], self.q_in),
+                                     bitwidth(params["q_out"], self.q_out))
+            return out, Aux(ebops=eb, aux_loss=jnp.zeros((), jnp.float32),
+                            updates={})
         # Alg.1 line 1-2: broadcast to (..., C_in, C_out) and input-quantize.
         xb = jnp.broadcast_to(x[..., :, None], x.shape + (self.c_out,))
         xq = fake_quant(params["q_in"], xb, self.q_in, train=train)
@@ -169,11 +196,21 @@ class LUTDense:
 # --------------------------------------------------------------------------- #
 # im2col helpers + LUT-Conv
 # --------------------------------------------------------------------------- #
+def _same_pads(size: int, kernel: int, stride: int) -> Tuple[int, int]:
+    """SAME padding matching ``jax.lax.conv`` / TF: ceil(size/stride) output
+    positions, total pad ``(out-1)*stride + kernel - size`` (clamped at 0),
+    split low-side-first.  A blanket ``kernel - 1`` pad gives wrongly shifted
+    (and for some shapes differently-sized) windows whenever stride > 1."""
+    out = -(-size // stride)
+    pad = max((out - 1) * stride + kernel - size, 0)
+    return pad // 2, pad - pad // 2
+
+
 def im2col_1d(x: Array, kernel: int, stride: int = 1, padding: str = "VALID") -> Array:
     """(..., T, C) -> (..., T', kernel*C) patch extraction."""
     if padding == "SAME":
-        pad = kernel - 1
-        x = jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(pad // 2, pad - pad // 2), (0, 0)])
+        lo, hi = _same_pads(x.shape[-2], kernel, stride)
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(lo, hi), (0, 0)])
     t = x.shape[-2]
     n_out = (t - kernel) // stride + 1
     idx = jnp.arange(n_out)[:, None] * stride + jnp.arange(kernel)[None, :]
@@ -187,9 +224,10 @@ def im2col_2d(x: Array, kernel: Tuple[int, int], stride: Tuple[int, int] = (1, 1
     kh, kw = kernel
     sh, sw = stride
     if padding == "SAME":
-        ph, pw = kh - 1, kw - 1
+        (hlo, hhi) = _same_pads(x.shape[-3], kh, sh)
+        (wlo, whi) = _same_pads(x.shape[-2], kw, sw)
         x = jnp.pad(x, [(0, 0)] * (x.ndim - 3)
-                    + [(ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2), (0, 0)])
+                    + [(hlo, hhi), (wlo, whi), (0, 0)])
     hh, ww, c = x.shape[-3], x.shape[-2], x.shape[-1]
     oh = (hh - kh) // sh + 1
     ow = (ww - kw) // sw + 1
@@ -212,12 +250,13 @@ class LUTConv1D:
     use_batchnorm: bool = False
     q_in: QuantConfig = Q_IN_DEFAULT
     q_out: QuantConfig = Q_OUT_DEFAULT
+    use_fused: bool = False
 
     @property
     def dense(self) -> LUTDense:
         return LUTDense(self.c_in * self.kernel, self.c_out, self.hidden,
                         self.n_hidden_layers, self.activation, self.use_batchnorm,
-                        self.q_in, self.q_out)
+                        self.q_in, self.q_out, use_fused=self.use_fused)
 
     def init(self, key: Array) -> dict:
         return self.dense.init(key)
@@ -240,13 +279,14 @@ class LUTConv2D:
     use_batchnorm: bool = False
     q_in: QuantConfig = Q_IN_DEFAULT
     q_out: QuantConfig = Q_OUT_DEFAULT
+    use_fused: bool = False
 
     @property
     def dense(self) -> LUTDense:
         kh, kw = self.kernel
         return LUTDense(self.c_in * kh * kw, self.c_out, self.hidden,
                         self.n_hidden_layers, self.activation, self.use_batchnorm,
-                        self.q_in, self.q_out)
+                        self.q_in, self.q_out, use_fused=self.use_fused)
 
     def init(self, key: Array) -> dict:
         return self.dense.init(key)

@@ -171,6 +171,27 @@ _fq_core.defvjp(_fq_fwd, _fq_bwd)
 # --------------------------------------------------------------------------- #
 # public API
 # --------------------------------------------------------------------------- #
+def fq_surrogate(x: Array, f: Array, i: Array, *, signed: bool = True,
+                 overflow: str = "SAT") -> Array:
+    """Fake-quant with integer-valued (f, i) *arrays* and the analytic
+    surrogate VJP attached — the array-level building block shared by the
+    einsum train path and the fused-kernel test oracle
+    (``kernels/ref.lut_dense_train_ref``)."""
+    return _fq_core(x, f, i, signed, overflow)
+
+
+def ste_bits(qp: dict, cfg: QuantConfig, *, train: bool = True
+             ) -> Tuple[Array, Array]:
+    """Clipped + STE-rounded (f, i) arrays, exactly as ``fake_quant`` derives
+    them from the continuous parameters.  With ``train=False`` gradients are
+    stopped (frozen deployment widths)."""
+    f = round_ste(jnp.clip(qp["f"], cfg.min_f, cfg.max_f))
+    i = round_ste(jnp.clip(qp["i"], cfg.min_i, cfg.max_i))
+    if not train:
+        f, i = jax.lax.stop_gradient(f), jax.lax.stop_gradient(i)
+    return f, i
+
+
 def fake_quant(qp: dict, x: Array, cfg: QuantConfig, *, train: bool = True) -> Array:
     """Quantize ``x`` on the fixed-point grid described by params ``qp``.
 
@@ -178,17 +199,13 @@ def fake_quant(qp: dict, x: Array, cfg: QuantConfig, *, train: bool = True) -> A
     the forward pass is always a true fixed-point projection while gradients
     still reach the bit-width parameters.
     """
-    f = round_ste(jnp.clip(qp["f"], cfg.min_f, cfg.max_f))
-    i = round_ste(jnp.clip(qp["i"], cfg.min_i, cfg.max_i))
-    if not train:
-        f, i = jax.lax.stop_gradient(f), jax.lax.stop_gradient(i)
+    f, i = ste_bits(qp, cfg, train=train)
     return _fq_core(x.astype(jnp.float32), f, i, cfg.signed, cfg.overflow).astype(x.dtype)
 
 
 def bitwidth(qp: dict, cfg: QuantConfig) -> Array:
     """Effective physical bit-width per parameter element (≥ 0, STE-rounded)."""
-    f = round_ste(jnp.clip(qp["f"], cfg.min_f, cfg.max_f))
-    i = round_ste(jnp.clip(qp["i"], cfg.min_i, cfg.max_i))
+    f, i = ste_bits(qp, cfg)
     k = 1.0 if cfg.signed else 0.0
     return jnp.maximum(f + i + k, 0.0)
 

@@ -1,3 +1,29 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the HGQ-LUT hot paths.
+
+Modules
+-------
+``lut_dense.py``      fused LUT-Dense *forward* (broadcast → WRAP-quant →
+                      tanh MLP → SAT-quant → Σ_j in one VMEM pass).
+``lut_dense_bwd.py``  fused *training backward*: recomputes the hidden
+                      activations per tile (flash-attention-style) and emits
+                      the tiny-MLP grads plus the analytic bit-width
+                      surrogate grads of core/quant.py.
+``fake_quant.py``     standalone element-wise HGQ fake-quant, streaming
+                      (rows, 128) tiles; per-tensor / per-channel widths ride
+                      along as a single tile instead of a full broadcast.
+``ops.py``            public jit'd entry points.  ``lut_dense`` (eval,
+                      rounded widths) and ``lut_dense_train`` (continuous
+                      widths, clip + round-STE) share one ``custom_vjp``
+                      pairing the two kernels above, so train AND eval run
+                      kernel-side.  Layers opt in via
+                      ``LUTDense(..., use_fused=True)`` /
+                      ``ArchConfig.lut_use_fused`` /
+                      ``TrainHParams.lut_use_fused``.
+``ref.py``            pure-jnp oracles: ``lut_dense_ref`` (eval forward) and
+                      ``lut_dense_train_ref`` (differentiable train chain —
+                      ``jax.grad`` of it is the backward-kernel oracle).
+
+This layer is OPTIONAL for new archs: add kernels only for compute hot-spots
+the paper itself optimizes.  Off-TPU everything runs in interpret mode and is
+validated against ref.py (tests/test_kernels.py).
+"""

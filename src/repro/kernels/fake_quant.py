@@ -39,16 +39,57 @@ def _fq_kernel(x_ref, f_ref, i_ref, o_ref, *, signed: bool, overflow: str):
 @functools.partial(jax.jit, static_argnames=("signed", "overflow", "rows", "interpret"))
 def fake_quant_fused(x, f, i, *, signed: bool = True, overflow: str = "SAT",
                      rows: int = DEF_ROWS, interpret: bool = False):
-    """Quantize ``x`` with per-element integer bit-width arrays ``f``/``i``.
+    """Quantize ``x`` with integer bit-width arrays ``f``/``i``.
 
     ``f``/``i`` broadcast against ``x``.  Any rank is accepted; internally the
     tensor is flattened and retiled to (rows, 128) VMEM blocks.
+
+    HBM traffic scales with the quantizer granularity: per-tensor (scalar
+    f/i) widths ride along as one (1, 128) tile and per-channel widths
+    (shape == x's last axis) as one (1, C) row — both mapped to every grid
+    step by the index map instead of being materialised at x's full shape,
+    which would triple the input bytes of this otherwise memory-bound op.
+    Only genuinely per-element widths stream at full size.
     """
     shape = x.shape
-    fb = jnp.broadcast_to(f, shape).astype(jnp.float32)
-    ib = jnp.broadcast_to(i, shape).astype(jnp.float32)
-    n = max(int(jnp.size(x)), 1)
+    f = jnp.asarray(f, jnp.float32)
+    i = jnp.asarray(i, jnp.float32)
     cols = LANES
+    kern = functools.partial(_fq_kernel, signed=signed, overflow=overflow)
+
+    last = shape[-1] if shape else 1
+    per_tensor = f.size == 1 and i.size == 1
+    per_channel = (not per_tensor and len(shape) >= 1
+                   and f.shape == (last,) and i.shape == (last,))
+
+    if per_channel:
+        # keep the channel axis on lanes so one (1, 128) width tile serves
+        # every row tile of that channel block
+        r = max(int(jnp.size(x)) // last, 1)
+        cp = -last % cols
+        xf = x.reshape(r, last)
+        ff = f.reshape(1, last)
+        iff = i.reshape(1, last)
+        if cp:
+            xf = jnp.pad(xf, ((0, 0), (0, cp)))
+            ff, iff = (jnp.pad(a, ((0, 0), (0, cp))) for a in (ff, iff))
+        tr = min(rows, r)
+        prow = -r % tr
+        if prow:
+            xf = jnp.pad(xf, ((0, prow), (0, 0)))
+        spec_x = pl.BlockSpec((tr, cols), lambda rr, cc: (rr, cc))
+        spec_q = pl.BlockSpec((1, cols), lambda rr, cc: (0, cc))
+        out = pl.pallas_call(
+            kern,
+            grid=((r + prow) // tr, (last + cp) // cols),
+            in_specs=[spec_x, spec_q, spec_q],
+            out_specs=spec_x,
+            out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
+            interpret=interpret,
+        )(xf, ff, iff)
+        return out[:r, :last].reshape(shape)
+
+    n = max(int(jnp.size(x)), 1)
     nrows = -(-n // cols)
     pad = nrows * cols - n
 
@@ -58,17 +99,28 @@ def fake_quant_fused(x, f, i, *, signed: bool = True, overflow: str = "SAT",
             a = jnp.pad(a, (0, pad))
         return a.reshape(nrows, cols)
 
-    xf, ff, iff = flat(x), flat(fb), flat(ib)
+    xf = flat(x)
     tr = min(rows, nrows)
     prow = -nrows % tr
     if prow:
-        xf, ff, iff = (jnp.pad(a, ((0, prow), (0, 0))) for a in (xf, ff, iff))
-
+        xf = jnp.pad(xf, ((0, prow), (0, 0)))
     spec = pl.BlockSpec((tr, cols), lambda r: (r, 0))
+
+    if per_tensor:
+        ff = jnp.broadcast_to(f.reshape(1, 1), (1, cols))
+        iff = jnp.broadcast_to(i.reshape(1, 1), (1, cols))
+        spec_q = pl.BlockSpec((1, cols), lambda r: (0, 0))
+    else:  # per-element (or arbitrary broadcast): stream at full size
+        ff = flat(jnp.broadcast_to(f, shape))
+        iff = flat(jnp.broadcast_to(i, shape))
+        if prow:
+            ff, iff = (jnp.pad(a, ((0, prow), (0, 0))) for a in (ff, iff))
+        spec_q = spec
+
     out = pl.pallas_call(
-        functools.partial(_fq_kernel, signed=signed, overflow=overflow),
+        kern,
         grid=((nrows + prow) // tr,),
-        in_specs=[spec, spec, spec],
+        in_specs=[spec, spec_q, spec_q],
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
         interpret=interpret,

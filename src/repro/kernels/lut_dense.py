@@ -18,6 +18,14 @@ VMEM budget per instance (fp32):
     weights     3·C_in·H·TCO·4  + quant params 4·C_in·TCO·4
     hidden      TB·H·TCO·4
 With the default TB=256, TCO=128, H=8, C_in≤64 this is ≈ 5.3 MB « 16 MB VMEM.
+
+This forward serves BOTH the eval and train paths: bit-width arrays arrive
+already STE-rounded (``core.quant.ste_bits`` — called by the layer's fused
+path and by ``ops.lut_dense_train`` — runs outside the kernel), so the same
+kernel is
+a fixed-point projection either way, and its ``custom_vjp`` partner —
+``lut_dense_bwd.py``, which recomputes the hidden tile instead of saving it —
+supplies the training gradients including the quantizer surrogates.
 """
 
 from __future__ import annotations

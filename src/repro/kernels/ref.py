@@ -56,3 +56,28 @@ def lut_dense_ref(
     y = jnp.sum(h * w_out[None], axis=2) + b_out[None]               # (B, Ci, Co)
     yq = fake_quant_ref(y, f_out[None], i_out[None], True, "SAT")
     return jnp.sum(yq, axis=1)                                       # (B, Co)
+
+
+def lut_dense_train_ref(
+    x: Array, w0: Array, b0: Array, w_out: Array, b_out: Array,
+    f_in: Array, i_in: Array, f_out: Array, i_out: Array,
+) -> Array:
+    """*Differentiable* train-mode oracle for the fused fwd+bwd pair.
+
+    Same math as :func:`lut_dense_ref` but built from ``core.quant``'s
+    custom-VJP fake-quantizer, so ``jax.grad`` of this function yields the
+    analytic surrogate gradients — for all five weight tensors AND the four
+    bit-width arrays — that ``kernels/lut_dense_bwd.py`` must reproduce.
+    Bit-width arrays are integer-valued (already STE-rounded), shape
+    (C_in, C_out).  This materialises the (B, C_in, H, C_out) hidden tensor
+    in HBM; it is the correctness oracle, not a fast path.
+    """
+    from repro.core.quant import fq_surrogate
+
+    xb = jnp.broadcast_to(x[:, :, None].astype(jnp.float32),
+                          x.shape + (w0.shape[-1],))
+    xq = fq_surrogate(xb, f_in, i_in, signed=True, overflow="WRAP")
+    h = jnp.tanh(xq[:, :, None, :] * w0[None] + b0[None])
+    y = jnp.sum(h * w_out[None], axis=2) + b_out[None]
+    yq = fq_surrogate(y, f_out, i_out, signed=True, overflow="SAT")
+    return jnp.sum(yq, axis=1).astype(x.dtype)

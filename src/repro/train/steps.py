@@ -30,6 +30,11 @@ class TrainHParams:
     beta: BetaSchedule = BetaSchedule(beta_init=0.0, beta_final=None)
     moe_aux_coef: float = 0.01
     lr_schedule: Optional[Callable] = None
+    # Route LUT layers through the fused Pallas fwd+bwd pair (kernels/) so the
+    # whole train step runs kernel-side with no (B, C_in, H, C_out) HBM
+    # intermediate.  Mirrors ArchConfig.lut_use_fused (configs/base.py);
+    # consumed by make_lut_train_step.
+    lut_use_fused: bool = False
 
 
 # --------------------------------------------------------------- shardings
@@ -94,6 +99,63 @@ def make_train_step(model, mesh: Optional[Mesh] = None,
         donate_argnums=(0, 1) if donate else (),
     )
     return jitted, {"params": ps, "opt": os_}
+
+
+def hparams_from_cfg(cfg, **overrides) -> TrainHParams:
+    """Seed :class:`TrainHParams` from an :class:`ArchConfig` — the bridge
+    that makes config-level knobs (currently ``lut_use_fused``, incl. its
+    ``REPRO_LUT_USE_FUSED`` env override) reach the train step."""
+    overrides.setdefault("lut_use_fused", getattr(cfg, "lut_use_fused", False))
+    return TrainHParams(**overrides)
+
+
+# ------------------------------------------------------ LUT-stack train step
+def make_lut_train_step(layers, hp: TrainHParams = TrainHParams(),
+                        donate: bool = True):
+    """CE + β·EBOPs train step over a stack of LUT layers (the paper-task
+    counterpart of :func:`make_train_step`).
+
+    With ``hp.lut_use_fused`` every layer is rerouted through the fused
+    Pallas forward + recompute backward (kernels/lut_dense*.py), so one
+    training step runs entirely kernel-side.  Returns ``(step_fn, init_fn)``;
+    ``step_fn(params, opt_state, batch)`` with ``batch = {"x", "y"}``.
+    """
+    from repro.nn.base import merge_aux, scoped_updates
+
+    if hp.lut_use_fused:
+        layers = [dataclasses.replace(l, use_fused=True) for l in layers]
+
+    def step_fn(params, opt_state, batch):
+        step = opt_state["step"]
+        x, y = batch["x"], batch["y"]
+
+        def loss_fn(ps):
+            h = x
+            auxes = []
+            for idx, l in enumerate(layers):
+                h, a = l.apply(ps[f"l{idx}"], h, train=True)
+                auxes.append(scoped_updates(f"l{idx}", a))
+            aux = merge_aux(*auxes)
+            ce = -jnp.mean(jax.nn.log_softmax(h)[jnp.arange(h.shape[0]), y])
+            total = ce + hp.beta(step) * aux.ebops + hp.moe_aux_coef * aux.aux_loss
+            return total, (ce, aux)
+
+        (loss, (ce, aux)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state, om = adam_update(params, grads, opt_state,
+                                            hp.adam, hp.lr_schedule)
+        for path, val in aux.updates.items():   # BN moving stats
+            scope, key = path.split("/", 1)
+            params[scope][key] = val
+        metrics = {"loss": loss, "ce": ce, "ebops": aux.ebops, **om}
+        return params, opt_state, metrics
+
+    def init_fn(key):
+        ks = jax.random.split(key, len(layers))
+        params = {f"l{idx}": l.init(k)
+                  for idx, (l, k) in enumerate(zip(layers, ks))}
+        return params, adam_init(params)
+
+    return jax.jit(step_fn, donate_argnums=(0, 1) if donate else ()), init_fn
 
 
 # -------------------------------------------------------------- serve steps

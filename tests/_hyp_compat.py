@@ -1,0 +1,71 @@
+"""``hypothesis`` shim: real library when installed, deterministic sweep else.
+
+This container does not ship ``hypothesis``; importing it at module scope made
+``tests/test_kernels.py`` / ``tests/test_quant.py`` fail *collection* and took
+the whole tier-1 run down with them.  Property tests import ``given`` /
+``settings`` / ``st`` from here instead: with hypothesis installed they run
+unchanged, without it each ``@given`` test runs a seeded deterministic sweep
+over the same strategy ranges (capped at ``_FALLBACK_MAX`` examples — enough
+to keep the property coverage meaningful at unit-test cost).
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback sweep
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_MAX = 25
+    _SEED = 0xC0FFEE
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # noqa: N801 — mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: r.random() < 0.5)
+
+    def settings(max_examples=100, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # NOTE: no functools.wraps — the wrapper must expose a zero-arg
+            # signature or pytest would treat the drawn parameters as fixtures
+            def wrapper():
+                n = min(getattr(wrapper, "_max_examples", _FALLBACK_MAX),
+                        _FALLBACK_MAX)
+                rng = random.Random(_SEED)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(**drawn)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco

@@ -8,3 +8,9 @@ os.environ.pop("XLA_FLAGS", None)
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.dirname(__file__))  # for _hyp_compat
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running test (dry-runs, full sweeps)")

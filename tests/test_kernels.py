@@ -1,13 +1,14 @@
-"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp oracles."""
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp oracles,
+plus gradchecks of the fused recompute backward against the einsum VJP."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.kernels import ops
-from repro.kernels.ref import fake_quant_ref, lut_dense_ref
+from repro.kernels.ref import fake_quant_ref, lut_dense_ref, lut_dense_train_ref
 
 KEY = jax.random.PRNGKey(7)
 
@@ -75,6 +76,85 @@ def test_lut_dense_backward_matches_einsum_grads():
     assert float(jnp.linalg.norm(g)) > 0
 
 
+# --------------------------------------------------------------------------- #
+# fused recompute backward vs. jax.grad of the einsum train-mode reference
+# --------------------------------------------------------------------------- #
+def _lut_train_inputs(b, ci, h, co, seed=11, pruned=False):
+    """Like _lut_inputs but with negative widths mixed in when ``pruned``:
+    f down to -4 with i=3 gives cells of total width <= 0 (pruned to zero)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+    lo = -4 if pruned else 0
+    x = (jax.random.normal(ks[0], (b, ci)) * 3).astype(jnp.float32)
+    w0 = jax.random.normal(ks[1], (ci, h, co))
+    b0 = jax.random.normal(ks[2], (ci, h, co)) * 0.5
+    wo = jax.random.normal(ks[3], (ci, h, co)) * 0.3
+    bo = jax.random.normal(ks[4], (ci, co)) * 0.1
+    fi = jax.random.randint(ks[5], (ci, co), lo, 7).astype(jnp.float32)
+    ii = jnp.full((ci, co), 3.0)
+    fo = jax.random.randint(ks[6], (ci, co), lo, 7).astype(jnp.float32)
+    io = jnp.full((ci, co), 3.0)
+    cot = jax.random.normal(ks[7], (b, co))
+    return (x, w0, b0, wo, bo, fi, ii, fo, io), cot
+
+
+GRAD_NAMES = ("x", "w0", "b0", "w_out", "b_out", "f_in", "i_in", "f_out", "i_out")
+# odd shapes exercise batch/C_out padding (tb=256, tco=128 defaults); the
+# (300, 130) cell runs a 2x2 grid and the cross-tile grad accumulation
+GRAD_SHAPES = [(7, 3, 4, 5, False), (16, 4, 4, 6, True), (33, 5, 8, 19, True),
+               (300, 7, 4, 130, True)]
+
+
+@pytest.mark.parametrize("b,ci,h,co,pruned", GRAD_SHAPES)
+def test_fused_bwd_gradcheck_all_tensors(b, ci, h, co, pruned):
+    """Fused VJP == jax.grad of the einsum reference for all 9 inputs.
+
+    The loss is a fixed linear probe sum(out * cot) so the comparison isolates
+    the backward: the cotangent entering both VJPs is bit-identical."""
+    args, cot = _lut_train_inputs(b, ci, h, co, pruned=pruned)
+
+    g_ref = jax.grad(lambda *a: jnp.sum(lut_dense_train_ref(*a) * cot),
+                     argnums=tuple(range(9)))(*args)
+    g_fus = jax.grad(lambda *a: jnp.sum(ops.lut_dense(*a) * cot),
+                     argnums=tuple(range(9)))(*args)
+    for name, gr, gf in zip(GRAD_NAMES, g_ref, g_fus):
+        np.testing.assert_allclose(
+            np.asarray(gf), np.asarray(gr), atol=1e-4, rtol=1e-4,
+            err_msg=f"grad mismatch for {name} at shape {(b, ci, h, co)}")
+    # WRAP input quantizer: i_in surrogate is identically zero
+    np.testing.assert_array_equal(np.asarray(g_fus[6]), 0.0)
+    if pruned:
+        # cells with rounded width <= 0 contribute exactly zero bit-width grad
+        alive_in = np.asarray(args[5] + args[6] + 1.0 > 0.0)
+        assert np.all(np.asarray(g_fus[5])[~alive_in] == 0.0)
+
+
+def test_fused_train_wrapper_continuous_widths():
+    """lut_dense_train (continuous widths, clip + round-STE inside) matches
+    grads of the einsum path built from core.quant's fake_quant chain."""
+    from repro.core.quant import round_ste
+
+    (x, w0, b0, wo, bo, fi, ii, fo, io), cot = _lut_train_inputs(24, 4, 4, 10)
+    clip = ((-8.0, 12.0), (-8.0, 12.0))
+    fi_c = fi + 0.31          # off-grid continuous parameters
+    io_c = io - 0.27
+
+    def fused(fi_c, io_c):
+        y = ops.lut_dense_train(x, w0, b0, wo, bo, fi_c, ii, fo, io_c,
+                                clip_in=clip, clip_out=clip)
+        return jnp.sum(y * cot)
+
+    def einsum(fi_c, io_c):
+        r = lambda a: round_ste(jnp.clip(a, -8.0, 12.0))
+        y = lut_dense_train_ref(x, w0, b0, wo, bo, r(fi_c), r(ii), r(fo), r(io_c))
+        return jnp.sum(y * cot)
+
+    gf = jax.grad(fused, argnums=(0, 1))(fi_c, io_c)
+    gr = jax.grad(einsum, argnums=(0, 1))(fi_c, io_c)
+    for name, a, b in zip(("f_in", "i_out"), gf, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4, err_msg=name)
+
+
 FQ_SHAPES = [(1,), (5,), (128,), (130,), (8, 128), (3, 5, 7), (1000,), (2, 3, 129)]
 
 
@@ -97,6 +177,33 @@ def test_lut_dense_property_fuzz(b, ci, co, seed):
     ref = lut_dense_ref(*args)
     out = ops.lut_dense(*args)
     _assert_lut_close(out, ref, args[7])
+
+
+@pytest.mark.parametrize("mode", ["SAT", "WRAP"])
+def test_fake_quant_granularity_equivalence(mode):
+    """Per-tensor / per-channel widths must produce bit-identical output to
+    the fully-broadcast per-element form (the narrow forms ride along as one
+    VMEM tile instead of tripling the op's HBM traffic)."""
+    x = jax.random.normal(KEY, (37, 12)) * 6
+    # per-tensor: scalar f/i vs full broadcast
+    out_s = ops.fake_quant(x, jnp.asarray(3.0), jnp.asarray(2.0), overflow=mode)
+    out_b = ops.fake_quant(x, jnp.full(x.shape, 3.0), jnp.full(x.shape, 2.0),
+                           overflow=mode)
+    np.testing.assert_array_equal(np.asarray(out_s), np.asarray(out_b))
+    # per-channel: (C,) widths vs full broadcast, incl. pruned channels
+    f = jax.random.randint(KEY, (12,), -2, 8).astype(jnp.float32)
+    i = jax.random.randint(jax.random.PRNGKey(1), (12,), 0, 4).astype(jnp.float32)
+    out_c = ops.fake_quant(x, f, i, overflow=mode)
+    out_bc = ops.fake_quant(x, jnp.broadcast_to(f, x.shape),
+                            jnp.broadcast_to(i, x.shape), overflow=mode)
+    np.testing.assert_array_equal(np.asarray(out_c), np.asarray(out_bc))
+    np.testing.assert_array_equal(np.asarray(out_c),
+                                  np.asarray(fake_quant_ref(x, f, i, True, mode)))
+    # 3-D leading dims with a channel axis that needs lane padding
+    x3 = jax.random.normal(KEY, (3, 5, 12)) * 4
+    out3 = ops.fake_quant(x3, f, i, overflow=mode)
+    np.testing.assert_array_equal(np.asarray(out3),
+                                  np.asarray(fake_quant_ref(x3, f, i, True, mode)))
 
 
 def test_fake_quant_heterogeneous_bits():

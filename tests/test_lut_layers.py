@@ -95,6 +95,115 @@ def test_batchnorm_updates_and_fusion():
                                atol=2e-5, rtol=1e-5)
 
 
+def _im2col_1d_oracle(x, k, s):
+    """Naive loop reference with jax.lax.conv SAME semantics: ceil(T/s)
+    positions, total pad (out-1)*s + k - T clamped at 0, low side first."""
+    x = np.asarray(x)
+    t = x.shape[-2]
+    out = -(-t // s)
+    pad = max((out - 1) * s + k - t, 0)
+    lo = pad // 2
+    rows = []
+    for o in range(out):
+        cols = []
+        for kk in range(k):
+            src = o * s - lo + kk
+            if 0 <= src < t:
+                cols.append(x[..., src, :])
+            else:
+                cols.append(np.zeros_like(x[..., 0, :]))
+        rows.append(np.stack(cols, axis=-2))
+    p = np.stack(rows, axis=-3)
+    return p.reshape(p.shape[:-2] + (k * x.shape[-1],))
+
+
+@pytest.mark.parametrize("t,k,s", [(7, 3, 1), (7, 3, 2), (8, 3, 2), (5, 4, 2),
+                                   (9, 2, 3), (10, 5, 4), (6, 3, 3)])
+def test_im2col_1d_same_matches_conv_semantics(t, k, s):
+    x = jax.random.normal(KEY, (2, t, 3))
+    p = im2col_1d(x, kernel=k, stride=s, padding="SAME")
+    ref = _im2col_1d_oracle(x, k, s)
+    assert p.shape[-2] == -(-t // s), "SAME must give ceil(T/stride) positions"
+    np.testing.assert_allclose(np.asarray(p), ref, atol=1e-6)
+
+
+def test_im2col_2d_same_stride2():
+    x = jax.random.normal(KEY, (2, 7, 8, 3))
+    p = im2col_2d(x, (3, 3), stride=(2, 2), padding="SAME")
+    assert p.shape == (2, 4, 4, 27)
+    # naive-loop oracle with lax.conv SAME pads: H=7 -> (1,1), W=8 -> (0,1)
+    xn = np.asarray(x)
+    padded = np.pad(xn, [(0, 0), (1, 1), (0, 1), (0, 0)])
+    for oh in range(4):
+        for ow in range(4):
+            win = padded[:, oh * 2:oh * 2 + 3, ow * 2:ow * 2 + 3, :]
+            np.testing.assert_allclose(np.asarray(p[:, oh, ow]),
+                                       win.reshape(2, -1), atol=1e-6)
+
+
+def test_use_fused_apply_matches_einsum_train():
+    """use_fused=True routes apply() through the Pallas fwd+bwd pair; forward,
+    EBOPs and all parameter gradients (incl. bit-widths) must match the
+    einsum path."""
+    layer = LUTDense(8, 12, hidden=4)
+    fused = dataclasses.replace(layer, use_fused=True)
+    p = layer.init(KEY)
+    x = jax.random.normal(jax.random.PRNGKey(1), (37, 8)) * 2
+
+    for train in (True, False):
+        y0, a0 = layer.apply(p, x, train=train)
+        y1, a1 = fused.apply(p, x, train=train)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), atol=1e-5)
+        assert float(a0.ebops) == float(a1.ebops)
+
+    def loss(params, l):
+        y, aux = l.apply(params, x, train=True)
+        return jnp.sum(y ** 2) + 1e-4 * aux.ebops
+
+    g0 = jax.grad(loss)(p, layer)
+    g1 = jax.grad(loss)(p, fused)
+    flat0, _ = jax.tree_util.tree_flatten_with_path(g0)
+    flat1, _ = jax.tree_util.tree_flatten_with_path(g1)
+    for (path, a), (_, b) in zip(flat0, flat1):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   atol=1e-4, rtol=1e-4,
+                                   err_msg=f"grad mismatch at {path}")
+
+
+def test_use_fused_rejects_non_default_quant_scheme():
+    """The kernel pair hardcodes signed-WRAP-in / signed-SAT-out (incl. the
+    zero i_in surrogate); any other scheme must fail loudly, not silently
+    compute wrong numbers."""
+    for kw in ({"q_in": dataclasses.replace(Q_IN_DEFAULT, overflow="SAT")},
+               {"q_out": dataclasses.replace(Q_OUT_DEFAULT, overflow="WRAP")},
+               {"q_out": dataclasses.replace(Q_OUT_DEFAULT, signed=False)},
+               {"activation": "relu"},
+               {"n_hidden_layers": 2}):
+        layer = LUTDense(4, 4, hidden=4, use_fused=True, **kw)
+        p = layer.init(KEY)
+        with pytest.raises(NotImplementedError):
+            layer.apply(p, jnp.ones((8, 4)), train=True)
+
+
+def test_use_fused_bn_eval_and_train_fallback():
+    """BN: fused eval folds moving stats into the output affine; BN train
+    needs batch-wide statistics and falls back to the einsum path."""
+    bn = LUTDense(6, 5, hidden=4, use_batchnorm=True)
+    bnf = dataclasses.replace(bn, use_fused=True)
+    p = bn.init(jax.random.PRNGKey(2))
+    x = jax.random.normal(jax.random.PRNGKey(3), (64, 6))
+    _, aux = bn.apply(p, x, train=True)
+    p2 = dict(p)
+    p2.update(aux.updates)
+    ye, _ = bn.apply(p2, x, train=False)
+    yf, _ = bnf.apply(p2, x, train=False)
+    np.testing.assert_allclose(np.asarray(yf), np.asarray(ye), atol=1e-5)
+    yt0, a0 = bn.apply(p, x, train=True)
+    yt1, a1 = bnf.apply(p, x, train=True)
+    np.testing.assert_array_equal(np.asarray(yt0), np.asarray(yt1))
+    assert set(a1.updates) == {"bn_mean", "bn_var"}
+
+
 def test_im2col_1d_matches_manual():
     x = jnp.arange(2 * 7 * 3, dtype=jnp.float32).reshape(2, 7, 3)
     p = im2col_1d(x, kernel=3, stride=2)

@@ -1,10 +1,11 @@
-"""HGQ quantizer unit + property tests (hypothesis)."""
+"""HGQ quantizer unit + property tests (hypothesis, with deterministic
+fallback sweeps when hypothesis is not installed — see _hyp_compat)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.core.quant import (QuantConfig, bitwidth, fake_quant, init_quantizer,
                               int_to_float, quantize_to_int)

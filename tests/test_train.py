@@ -96,6 +96,47 @@ def test_train_step_improves_loss_and_threads_state():
     assert all(np.isfinite(l) for l in losses)
 
 
+@pytest.mark.parametrize("use_fused", [False, True])
+def test_make_lut_train_step_end_to_end(use_fused):
+    """make_lut_train_step runs a LUT-stack CE+β·EBOPs step; with
+    lut_use_fused=True the whole fwd+bwd goes through the Pallas kernel
+    pair and must still train (finite, decreasing loss, advancing step)."""
+    from repro.core.lut_layers import LUTDense
+    from repro.train.steps import make_lut_train_step
+
+    layers = [LUTDense(8, 10, hidden=4), LUTDense(10, 4, hidden=4)]
+    hp = TrainHParams(adam=AdamConfig(lr=2e-2),
+                      beta=BetaSchedule(1e-6, 1e-5, 8), lut_use_fused=use_fused)
+    step_fn, init_fn = make_lut_train_step(layers, hp)
+    params, opt = init_fn(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 8))
+    y = jax.random.randint(jax.random.PRNGKey(2), (64,), 0, 4)
+    losses = []
+    for _ in range(10):
+        params, opt, m = step_fn(params, opt, {"x": x, "y": y})
+        losses.append(float(m["loss"]))
+    assert int(opt["step"]) == 10
+    assert all(np.isfinite(l) for l in losses)
+    assert losses[-1] < losses[0]
+    assert float(m["ebops"]) > 0
+
+
+def test_hparams_from_cfg_env_override(monkeypatch):
+    """ArchConfig.lut_use_fused reaches TrainHParams, incl. the generic
+    REPRO_<FIELD> env override in configs/base."""
+    from repro.configs.base import get_config
+    from repro.train.steps import hparams_from_cfg
+
+    monkeypatch.setenv("REPRO_LUT_USE_FUSED", "1")
+    cfg = get_config("olmo_1b")
+    assert cfg.lut_use_fused is True
+    assert hparams_from_cfg(cfg).lut_use_fused is True
+    monkeypatch.setenv("REPRO_LUT_USE_FUSED", "0")
+    hp = hparams_from_cfg(get_config("olmo_1b"))
+    assert hp.lut_use_fused is False
+    assert hparams_from_cfg(get_config("olmo_1b"), lut_use_fused=True).lut_use_fused
+
+
 def test_beta_pressure_shrinks_bitwidths():
     """With large β, EBOPs must decrease over steps (bits get pruned)."""
     from repro.core.lut_layers import LUTDense
