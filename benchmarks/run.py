@@ -16,11 +16,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run a single benchmark "
-                         "(table1|table2|table3|fig5|kernels|roofline)")
+                         "(table1|table2|table3|fig5|kernels|serve|roofline)")
     args = ap.parse_args()
 
-    from benchmarks import (fig5_pid, kernel_bench, table1_train_time,
-                            table2_jsc_hlf, table3_plf_tgc)
+    from benchmarks import (fig5_pid, kernel_bench, serve_bench,
+                            table1_train_time, table2_jsc_hlf, table3_plf_tgc)
 
     benches = {
         "table1": table1_train_time.run,
@@ -28,6 +28,7 @@ def main() -> None:
         "table3": table3_plf_tgc.run,
         "fig5": fig5_pid.run,
         "kernels": kernel_bench.run,   # writes BENCH_kernels.json
+        "serve": serve_bench.run,      # writes BENCH_serve.json
     }
     print("name,us_per_call,derived")
     todo = [args.only] if args.only else list(benches) + ["roofline"]

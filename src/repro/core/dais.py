@@ -47,6 +47,59 @@ class Instr:
     reg: Reg        # metadata of the produced value
 
 
+@dataclasses.dataclass(frozen=True)
+class OpGroup:
+    """One vectorizable batch of same-op instructions at one dataflow level.
+
+    ``DaisProgram.schedule`` levelizes the SSA program (level = 1 + max level
+    of the arguments) and batches instructions by ``(level, op, mode)``.  All
+    instructions in a group are mutually independent and argument-ready once
+    every earlier group has executed, so a backend can run the whole group as
+    a handful of array ops over the batch axis — this is the instruction view
+    the accelerator engine (``repro.kernels.lut_serve``) lowers from.
+
+    ``regs`` holds the producing instruction indices in group-column order;
+    ``args`` holds per-op int64 numpy arrays, one entry per column:
+
+    ======== ==========================================================
+    op       args keys
+    ======== ==========================================================
+    IN       ``k`` (input scalar index)
+    CONST    ``c`` (constant code)
+    REQUANT  ``src, f, i, signed, src_f``  (``mode`` is the group mode)
+    LLUT     ``src, layer, j, i``
+    CMUL     ``src, code``
+    ADD/SUB  ``a, b, shift_a, shift_b, f`` (operand left-shifts onto the
+             common grid ``f = max(fa, fb)``)
+    ======== ==========================================================
+    """
+
+    level: int
+    op: str
+    mode: str                    # REQUANT overflow mode; "" for other ops
+    regs: np.ndarray             # (n,) int64 instruction indices produced
+    args: Dict[str, np.ndarray]  # (n,) int64 arrays, see table above
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """One lowered layer's span in the flat program (frontend metadata).
+
+    ``compile_sequential`` records a Segment per layer so backends can
+    recover the layer structure the SSA list flattens away: ``in_regs`` are
+    the registers the layer consumed (the previous segment's ``out_regs``,
+    or IN instructions for the first layer) and ``out_regs`` its per-channel
+    results.  The accelerator engine uses this to fuse a whole "lut" segment
+    into one pre-composed table gather; backends that don't understand a
+    segment can always fall back to the flat instruction list.
+    """
+
+    kind: str                    # "lut" | "hgq"
+    layer_id: int
+    in_regs: Tuple[int, ...]
+    out_regs: Tuple[int, ...]
+
+
 @dataclasses.dataclass
 class DaisProgram:
     instrs: List[Instr] = dataclasses.field(default_factory=list)
@@ -55,6 +108,7 @@ class DaisProgram:
     input_signed: List[bool] = dataclasses.field(default_factory=list)
     tables: Dict[int, LayerTables] = dataclasses.field(default_factory=dict)
     output_f: List[int] = dataclasses.field(default_factory=list)
+    segments: List["Segment"] = dataclasses.field(default_factory=list)
 
     # ------------------------------------------------------------- builders
     def emit(self, op: str, args: tuple, reg: Reg) -> int:
@@ -73,6 +127,89 @@ class DaisProgram:
         for ins in self.instrs:
             c[ins.op] = c.get(ins.op, 0) + 1
         return c
+
+    def max_width(self) -> int:
+        """Widest register of the program (bounds the interpreter dtype)."""
+        return max((ins.reg.width for ins in self.instrs), default=0)
+
+    def required_width(self) -> int:
+        """Width bound covering *transient* values, not just declared registers.
+
+        A SAT REQUANT up-shifts its source before clamping and an ADD/SUB
+        aligns operands onto the common grid before the declared-width result
+        exists, so a backend computing in a fixed dtype must size it off this
+        bound rather than :meth:`max_width`.
+        """
+        need = self.max_width()
+        for ins in self.instrs:
+            if ins.op == "REQUANT":
+                src, f, _i, _signed, _mode, src_f = ins.args
+                need = max(need,
+                           self.instrs[src].reg.width + max(f - src_f, 0) + 1)
+            elif ins.op in ("ADD", "SUB"):
+                ra, rb = ins.args
+                fa, fb = self.instrs[ra].reg.f, self.instrs[rb].reg.f
+                F = max(fa, fb)
+                need = max(need,
+                           self.instrs[ra].reg.width + (F - fa) + 1,
+                           self.instrs[rb].reg.width + (F - fb) + 1)
+        return need
+
+    # ------------------------------------------------- levelized batch view
+    def schedule(self) -> List["OpGroup"]:
+        """Levelize the program into vectorizable :class:`OpGroup` batches.
+
+        Executing the groups in order (all columns of a group at once)
+        computes exactly the same register values as :meth:`run`'s
+        instruction-at-a-time loop — the grouping only exposes the data
+        parallelism that the flat SSA list hides.
+        """
+        deps = {
+            "IN": (), "CONST": (),
+            "REQUANT": (0,), "LLUT": (0,), "CMUL": (0,),
+            "ADD": (0, 1), "SUB": (0, 1),
+        }
+        level = np.zeros(len(self.instrs), np.int64)
+        for idx, ins in enumerate(self.instrs):
+            srcs = [ins.args[p] for p in deps[ins.op]]
+            level[idx] = 1 + max((level[s] for s in srcs), default=-1)
+
+        buckets: Dict[Tuple[int, str, str], List[int]] = {}
+        for idx, ins in enumerate(self.instrs):
+            mode = ins.args[4] if ins.op == "REQUANT" else ""
+            buckets.setdefault((int(level[idx]), ins.op, mode), []).append(idx)
+
+        groups: List[OpGroup] = []
+        for (lvl, op, mode), idxs in sorted(buckets.items(),
+                                            key=lambda kv: kv[0][:2]):
+            cols = {}
+            ins0 = [self.instrs[i] for i in idxs]
+            if op == "IN":
+                cols["k"] = [ins.args[0] for ins in ins0]
+            elif op == "CONST":
+                cols["c"] = [ins.args[0] for ins in ins0]
+            elif op == "REQUANT":
+                for key, pos in (("src", 0), ("f", 1), ("i", 2),
+                                 ("signed", 3), ("src_f", 5)):
+                    cols[key] = [ins.args[pos] for ins in ins0]
+            elif op == "LLUT":
+                for key, pos in (("src", 0), ("layer", 1), ("j", 2), ("i", 3)):
+                    cols[key] = [ins.args[pos] for ins in ins0]
+            elif op == "CMUL":
+                cols["src"] = [ins.args[0] for ins in ins0]
+                cols["code"] = [ins.args[1] for ins in ins0]
+            else:  # ADD / SUB
+                cols["a"] = [ins.args[0] for ins in ins0]
+                cols["b"] = [ins.args[1] for ins in ins0]
+                fa = np.asarray([self.instrs[ins.args[0]].reg.f for ins in ins0])
+                fb = np.asarray([self.instrs[ins.args[1]].reg.f for ins in ins0])
+                F = np.maximum(fa, fb)
+                cols["shift_a"], cols["shift_b"], cols["f"] = F - fa, F - fb, F
+            groups.append(OpGroup(
+                level=lvl, op=op, mode=mode,
+                regs=np.asarray(idxs, np.int64),
+                args={k: np.asarray(v, np.int64) for k, v in cols.items()}))
+        return groups
 
     # ---------------------------------------------------------- interpreter
     def run(self, x_codes: np.ndarray) -> np.ndarray:
@@ -193,12 +330,18 @@ def compile_sequential(layers: Sequence, params_list: Sequence[dict],
             for k in range(c_in)]
 
     for lid, (layer, params) in enumerate(zip(layers, params_list)):
+        in_regs = list(regs)
         if isinstance(layer, LUTDense):
             regs = _lower_lut_dense(prog, lid, layer, params, regs)
+            kind = "lut"
         elif isinstance(layer, HGQDense):
             regs = _lower_hgq_dense(prog, lid, layer, params, regs)
+            kind = "hgq"
         else:
             raise TypeError(f"cannot lower layer type {type(layer)}")
+        prog.segments.append(Segment(kind=kind, layer_id=lid,
+                                     in_regs=tuple(in_regs),
+                                     out_regs=tuple(regs)))
 
     prog.outputs = regs
     prog.output_f = [prog.instrs[r].reg.f for r in regs]

@@ -30,20 +30,36 @@ from repro.core.quant import int_bits, int_to_float, quantize_to_int
 class LayerTables:
     """Truth tables of one LUT-Dense layer.
 
-    codes[j, i, e] is the output code of L-LUT_{i,j} for input index ``e``;
-    entries with e >= 2**in_width[j, i] are padding (never addressed).
-    Input index = two's-complement re-interpretation of the input code
-    (i.e. ``code & (2**m - 1)``), which is what the WRAP input quantizer
-    produces for free in hardware.
+    ``codes`` is laid out ``(j, i, e)`` — input channel ``j`` (axis 0, size
+    ``C_in``), output channel ``i`` (axis 1, size ``C_out``), table entry
+    ``e`` (axis 2, size ``2**max_m``).  ``codes[j, i, e]`` is the signed
+    output code of L-LUT_{i,j} for input index ``e``; entries with
+    ``e >= 2**in_width[j, i]`` are padding (never addressed).
+
+    WRAP two's-complement indexing contract
+    ---------------------------------------
+    The input quantizer of every cell is WRAP, so the table index for an
+    input code ``c`` (an int on the cell's ``f_in[j, i]`` grid, possibly
+    negative) is the two's-complement re-interpretation of its low
+    ``m = in_width[j, i]`` bits::
+
+        idx = c mod 2**m            (== c & (2**m - 1); 0 <= idx < 2**m)
+
+    Pruned cells (``m <= 0``) have a single entry addressed with ``idx = 0``
+    (``entry_sizes`` reports size 1 for them) and emit code 0.  This is the
+    single definition of the indexing scheme; :meth:`lookup_codes`, the DAIS
+    interpreter's ``LLUT`` op (``core/dais.py``), the Verilog case functions
+    (``core/rtl.py``), and the accelerator engine's batched gathers
+    (``kernels/lut_serve.py``) all implement exactly this contract.
     """
 
-    f_in: np.ndarray      # (C_in, C_out) int32
-    i_in: np.ndarray
-    f_out: np.ndarray
-    i_out: np.ndarray
-    in_width: np.ndarray  # m  = f_in + i_in + 1  (signed), clipped >= 0
-    out_width: np.ndarray  # n = f_out + i_out + 1, clipped >= 0
-    codes: np.ndarray     # (C_in, C_out, 2**max_m) int64
+    f_in: np.ndarray      # (C_in, C_out) int32 — [j, i] like every grid below
+    i_in: np.ndarray      # (C_in, C_out) int32
+    f_out: np.ndarray     # (C_in, C_out) int32
+    i_out: np.ndarray     # (C_in, C_out) int32
+    in_width: np.ndarray  # (C_in, C_out) int32, m = f_in + i_in + 1 (signed), >= 0
+    out_width: np.ndarray  # (C_in, C_out) int32, n = f_out + i_out + 1, >= 0
+    codes: np.ndarray     # (C_in, C_out, 2**max_m) int64, indexed [j, i, e]
 
     @property
     def c_in(self) -> int:
@@ -57,29 +73,41 @@ class LayerTables:
         """Number of live (non-pruned) L-LUTs."""
         return int(np.sum((self.in_width > 0) & (self.out_width > 0)))
 
+    def entry_sizes(self) -> np.ndarray:
+        """(C_in, C_out) addressable table sizes: ``2**m`` live, 1 pruned.
+
+        The WRAP index of an input code ``c`` at cell (j, i) is
+        ``c mod entry_sizes()[j, i]`` — see the class docstring for the full
+        two's-complement indexing contract.
+        """
+        return np.where(self.in_width > 0,
+                        2 ** np.maximum(self.in_width, 0), 1).astype(np.int64)
+
     # ------------------------------------------------------------------ use
     def lookup_codes(self, x_codes: np.ndarray, x_f: np.ndarray) -> np.ndarray:
         """Bit-exact layer evaluation on integer input codes.
 
         ``x_codes``: (..., C_in) int64 codes on a grid with fractional bits
-        ``x_f`` (scalar or (C_in,)).  Returns output codes (..., C_out) on the
-        *common* output grid with fractional bits ``self.common_f_out()``.
+        ``x_f`` (scalar or (C_in,), broadcast over output channels).  Returns
+        output codes (..., C_out) on the *common* output grid with fractional
+        bits ``self.common_f_out()``.
         """
         ci, co = self.c_in, self.c_out
         xf = np.broadcast_to(np.asarray(x_f, np.int64), (ci,))
-        # requantize each input to each cell's WRAP grid: shift to f_in bits
+        # requantize input j to cell (j, i)'s grid: f_in[j, i] - x_f[j] bits
         shift = self.f_in - xf[:, None]                     # (ci, co)
         x = x_codes[..., :, None].astype(np.float64)        # (..., ci, 1)
         scaled = np.round(x * np.exp2(shift))               # (..., ci, co)
-        m = np.maximum(self.in_width, 0)
-        size = np.where(m > 0, 2 ** m, 1)
-        idx = np.mod(scaled, size).astype(np.int64)         # WRAP == masking
+        size = self.entry_sizes()                           # (ci, co)
+        idx = np.mod(scaled, size).astype(np.int64)         # the WRAP contract
         out = np.take_along_axis(
             np.broadcast_to(self.codes, x_codes.shape[:-1] + self.codes.shape),
             idx[..., None], axis=-1)[..., 0]                # (..., ci, co)
-        # align heterogeneous per-cell output grids to the common grid
+        # align heterogeneous per-cell output grids to the common grid; F is
+        # the max over LIVE cells, so clamp the (value-irrelevant, codes==0)
+        # shift of pruned cells whose f_out may exceed it
         F = self.common_f_out()
-        out = out * (2 ** (F - self.f_out).astype(np.int64))
+        out = out * (2 ** np.maximum(F - self.f_out, 0).astype(np.int64))
         return out.sum(axis=-2)                             # Σ over C_in
 
     def common_f_out(self) -> int:

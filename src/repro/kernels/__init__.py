@@ -22,6 +22,12 @@ Modules
 ``ref.py``            pure-jnp oracles: ``lut_dense_ref`` (eval forward) and
                       ``lut_dense_train_ref`` (differentiable train chain —
                       ``jax.grad`` of it is the backward-kernel oracle).
+``lut_serve.py``      accelerator-resident *integer* serving engine: lowers a
+                      compiled ``DaisProgram`` (or one layer's
+                      ``LayerTables``) to jittable batched table gathers +
+                      exact int arithmetic, bit-exact vs the numpy DAIS
+                      interpreter (``verify_engine`` is the gate).  Backs
+                      ``launch/serve.py --engine tables``.
 
 This layer is OPTIONAL for new archs: add kernels only for compute hot-spots
 the paper itself optimizes.  Off-TPU everything runs in interpret mode and is

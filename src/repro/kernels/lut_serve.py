@@ -1,0 +1,524 @@
+"""Accelerator-resident integer LUT serving engine.
+
+``core/dais.py`` interprets a compiled :class:`DaisProgram` one scalar
+instruction at a time in numpy — a verification oracle, not a runtime: at
+batch 1024 a small two-layer model already spends milliseconds in the Python
+dispatch loop.  This module lowers the same program onto the accelerator as
+a short chain of jittable JAX *integer* ops, so the artifact we verify is
+also the artifact we serve.
+
+Lowering strategy
+-----------------
+Two paths, picked automatically:
+
+1. **Fused per-layer path** (programs that are a closed chain of "lut"
+   segments, i.e. anything from ``compile_sequential`` over LUT-Dense
+   stacks): for every cell, the whole REQUANT → LLUT → align-CMUL chain is
+   a pure function of one input register's integer code, so it is
+   pre-composed at compile time into a single table indexed by the code's
+   two's-complement bits.  A layer then runs as three array ops — mask,
+   batched gather, Σ over C_in — which is where the ≥10× over the numpy
+   interpreter comes from (``benchmarks/serve_bench.py``).
+
+2. **Generic group path** (anything else, e.g. hybrid HGQ programs):
+   ``DaisProgram.schedule()`` levelizes the SSA program and batches mutually
+   independent same-op instructions into :class:`~repro.core.dais.OpGroup`\\ s.
+   Each group becomes a handful of array ops over ``(B, n_columns)`` values:
+
+* ``LLUT``    — one batched table gather: the group's truth tables are packed
+  into a ``(n, E_max)`` matrix and every column indexes its row with the WRAP
+  two's-complement index (``code mod 2**m`` — the contract documented on
+  :class:`repro.core.tables.LayerTables`),
+* ``REQUANT`` — vectorized shift / round-half-to-even / clamp-or-wrap, the
+  integer-exact port of ``core.dais._requant``,
+* ``ADD/SUB/CMUL/CONST`` — exact int32/int64 arithmetic with the operand
+  alignment shifts precomputed by the scheduler.
+
+  Each group's result is a ``(B, n_group)`` array; argument gathers are
+  column selections from the (few) source groups a consumer references.
+  All table/shift/clamp constants are closed over as device arrays, so
+  ``jax.jit`` sees a flat integer dataflow graph whose op count scales with
+  program *depth*, not with instruction count.
+
+Bit-exactness
+-------------
+The engine is bit-exact against ``DaisProgram.run`` by construction (same
+integer ops, same rounding), and :func:`verify_engine` is the gate that
+proves it on random plus exhaustive-small inputs — ``launch/serve.py
+--engine tables`` refuses to serve unless the gate passes.
+
+Values are int32 when every register *and transient* fits
+(``DaisProgram.required_width() <= 30``), else int64 — which requires
+``JAX_ENABLE_X64=1`` since the engine must keep more than 32 bits of state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dais import DaisProgram, OpGroup
+from repro.core.tables import LayerTables
+
+# int32 holds any value chain whose declared register width is <= 30 bits:
+# REQUANT's 2**width span and the wrap offset ``code - lo`` both stay under
+# 2**31 (see _requant_cols); wider programs need the int64 path.
+_INT32_MAX_WIDTH = 30
+
+
+def _x64_enabled() -> bool:
+    return bool(getattr(jax.config, "jax_enable_x64", False))
+
+
+def _pick_dtype(max_width: int):
+    if max_width <= _INT32_MAX_WIDTH:
+        return jnp.int32
+    if not _x64_enabled():
+        raise ValueError(
+            f"program has {max_width}-bit registers; the int64 engine needs "
+            f"JAX_ENABLE_X64=1 (int32 covers widths <= {_INT32_MAX_WIDTH})")
+    return jnp.int64
+
+
+# --------------------------------------------------------------------------- #
+# vectorized integer requant (port of core.dais._requant, column-parallel)
+# --------------------------------------------------------------------------- #
+def _shift_round(v, shift):
+    """``v * 2**shift`` on integer codes, round-half-to-even on dropped bits.
+
+    The single jnp implementation of the grid-change rounding of
+    ``core.dais._requant`` — shared by the generic REQUANT lowering and the
+    per-layer ``lower_tables`` path so the trickiest bit-exact block exists
+    once.  ``shift`` broadcasts against ``v`` and may mix signs.
+    """
+    one = jnp.ones((), v.dtype)
+    up = v << jnp.maximum(shift, 0)
+    s = jnp.maximum(-shift, 0)
+    floor = v >> s
+    rem = v - (floor << s)
+    half = (one << jnp.maximum(s, 1)) >> 1
+    down = jnp.where(rem > half, floor + 1,
+                     jnp.where(rem < half, floor, floor + (floor & 1)))
+    return jnp.where(shift >= 0, up, down)
+
+
+def _requant_cols(v, shift, width, signed, mode: str):
+    """Re-quantize columns of ``v`` (B, n) onto new grids, bit-exactly.
+
+    ``shift``/``width``/``signed`` are (n,) per-column arrays; ``mode`` is
+    the group-wide overflow mode.  Matches ``core.dais._requant`` including
+    round-half-to-even on dropped bits.
+    """
+    one = jnp.ones((), v.dtype)
+    code = _shift_round(v, shift)
+
+    n_codes = one << jnp.maximum(width, 0)
+    lo = jnp.where(signed, -(n_codes >> 1), jnp.zeros_like(n_codes))
+    hi = lo + n_codes - 1
+    if mode == "SAT":
+        out = jnp.clip(code, lo, hi)
+    else:  # WRAP: grids are powers of two, so mod is a two's-complement mask
+        out = lo + ((code - lo) & (n_codes - 1))
+    return jnp.where(width > 0, out, jnp.zeros_like(out))
+
+
+# --------------------------------------------------------------------------- #
+# program engine
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class ServeEngine:
+    """A compiled, jitted integer runtime for one :class:`DaisProgram`."""
+
+    n_inputs: int
+    n_outputs: int
+    n_instrs: int
+    n_groups: int               # op groups (generic) or layer stages (fused)
+    dtype: object
+    fused: bool                 # True: pre-composed per-layer table path
+    input_f: List[int]
+    input_signed: List[bool]
+    input_widths: np.ndarray    # (n_inputs,) physical code widths
+    output_f: List[int]
+    mesh: object                # Mesh | None — request batches shard over DP
+    _runner: Callable
+
+    def run(self, x_codes) -> jax.Array:
+        """(B, n_inputs) integer codes -> (B, n_outputs) integer codes.
+
+        Same contract as ``DaisProgram.run`` (grids ``input_f`` in,
+        ``output_f`` out), executed on the default accelerator.
+        """
+        x = jnp.asarray(x_codes, self.dtype)
+        if x.ndim == 1:
+            x = x[None]
+        if self.mesh is not None:
+            from repro.parallel.sharding import shard_batch
+            x = shard_batch(x, self.mesh)
+        return self._runner(x)
+
+    def run_float(self, x) -> np.ndarray:
+        """Convenience mirror of ``DaisProgram.run_float``."""
+        x = np.asarray(x, np.float64)
+        codes = np.round(x * np.exp2(np.asarray(self.input_f, np.float64)))
+        out = np.asarray(jax.device_get(self.run(codes.astype(np.int64))),
+                         np.float64)
+        return out * np.exp2(-np.asarray(self.output_f, np.float64))
+
+
+def compile_program(prog: DaisProgram, *, mesh=None,
+                    dtype: Optional[object] = None,
+                    fuse_layers: bool = True,
+                    jit: bool = True) -> ServeEngine:
+    """Lower a DAIS program to a jitted accelerator engine.
+
+    When the program is a closed chain of "lut" segments (the
+    ``compile_sequential`` metadata on ``prog.segments``), each layer's
+    REQUANT → LLUT → align → Σ block is pre-composed at compile time into a
+    single per-cell table on the incoming register grids, so a layer
+    executes as mask → batched gather → sum (three array ops).  Any other
+    program shape falls back to the generic levelized :class:`OpGroup`
+    lowering — same bit-exact semantics, more ops.  ``fuse_layers=False``
+    forces the generic path.
+
+    ``mesh``: optional ``jax.sharding.Mesh`` — the batch axis of inputs and
+    register values is sharded over its DP axes via
+    ``parallel.sharding.constrain`` (the program itself is replicated: it is
+    weights, i.e. a few KB of tables and shift constants).
+    """
+    if dtype is None:
+        # required_width covers transient pre-clamp REQUANT / pre-add align
+        # values, which can exceed every declared register width
+        dtype = _pick_dtype(prog.required_width())
+
+    in_instrs = [ins for ins in prog.instrs if ins.op == "IN"]
+    input_widths = np.asarray([ins.reg.width for ins in in_instrs], np.int64)
+
+    run, n_groups, fused = None, 0, False
+    if fuse_layers:
+        run, n_groups = _try_fused_runner(prog, dtype, mesh)
+        fused = run is not None
+    if run is None:
+        run, n_groups = _group_runner(prog, dtype, mesh)
+
+    return ServeEngine(
+        n_inputs=len(prog.input_f), n_outputs=len(prog.outputs),
+        n_instrs=prog.n_instrs(), n_groups=n_groups, dtype=dtype, fused=fused,
+        input_f=list(prog.input_f), input_signed=list(prog.input_signed),
+        input_widths=input_widths, output_f=list(prog.output_f),
+        mesh=mesh, _runner=jax.jit(run) if jit else run)
+
+
+def _group_runner(prog: DaisProgram, dtype, mesh):
+    """Generic lowering: one vectorized op bundle per scheduled OpGroup.
+
+    Each group's result stays its own ``(B, n_group)`` array; a consuming
+    group gathers its arguments from the concatenation of just the source
+    groups it actually references (usually one or two — the level structure
+    keeps fan-in local), so there is no global register matrix to recopy.
+    """
+    groups = prog.schedule()
+    group_of = np.full(len(prog.instrs), -1, np.int64)
+    col_in_group = np.full(len(prog.instrs), -1, np.int64)
+    for gi, g in enumerate(groups):
+        for c, r in enumerate(g.regs):
+            group_of[r] = gi
+            col_in_group[r] = c
+    sizes = [len(g.regs) for g in groups]
+
+    def locate(regs):
+        """Source-group set + local columns of ``regs`` within their concat."""
+        srcs = sorted({int(group_of[r]) for r in regs})
+        off = {}
+        acc = 0
+        for s in srcs:
+            off[s] = acc
+            acc += sizes[s]
+        cols = np.asarray([off[int(group_of[r])] + int(col_in_group[r])
+                           for r in regs], np.int64)
+        return srcs, cols
+
+    prepared = [_prepare_group(prog, g, locate, dtype) for g in groups]
+    out_srcs, out_cols = locate(prog.outputs)
+
+    def _assemble(results, srcs):
+        if len(srcs) == 1:
+            return results[srcs[0]]
+        return jnp.concatenate([results[s] for s in srcs], 1)
+
+    def _run(x):
+        if mesh is not None:
+            from repro.parallel.sharding import constrain
+            x = constrain(x, mesh, "batch", None)
+        results = []
+        for srcs, ex in prepared:
+            base = _assemble(results, srcs) if srcs else None
+            results.append(ex(base, x))
+        return _assemble(results, out_srcs)[:, out_cols]
+    return _run, len(groups)
+
+
+def _prepare_group(prog: DaisProgram, g: OpGroup, locate, dtype):
+    """Close a single OpGroup over its device constants.
+
+    Returns ``(srcs, ex)``: ``srcs`` are the indices of the earlier groups
+    this one reads from, and ``ex(base, x) -> (B, n)`` computes the group
+    from ``base`` — the (B, Σ sizes) concatenation of those groups' results
+    — and the (B, n_inputs) input codes ``x``.
+    """
+    a = g.args
+    dev = lambda arr: jnp.asarray(np.asarray(arr), dtype)
+
+    if g.op == "IN":
+        ks = np.asarray(a["k"], np.int64)
+        return [], lambda base, x: x[:, ks]
+
+    if g.op == "CONST":
+        cs = dev(a["c"])
+        return [], lambda base, x: jnp.broadcast_to(
+            cs[None], (x.shape[0], len(cs)))
+
+    if g.op == "REQUANT":
+        srcs, src = locate(a["src"])
+        shift = dev(a["f"] - a["src_f"])
+        width = dev(a["f"] + a["i"] + a["signed"])
+        signed = jnp.asarray(a["signed"] != 0)
+        mode = g.mode
+        return srcs, lambda base, x: _requant_cols(base[:, src], shift, width,
+                                                   signed, mode)
+
+    if g.op == "LLUT":
+        srcs, src = locate(a["src"])
+        n = len(src)
+        sizes_np = np.empty(n, np.int64)
+        rows = []
+        for col in range(n):
+            t = prog.tables[int(a["layer"][col])]
+            j, i = int(a["j"][col]), int(a["i"][col])
+            sizes_np[col] = t.entry_sizes()[j, i]
+            rows.append(np.asarray(t.codes[j, i], np.int64))
+        e_max = max(int(s) for s in sizes_np)
+        table = np.zeros((n, e_max), np.int64)
+        for col, row in enumerate(rows):
+            table[col, :min(len(row), e_max)] = row[:e_max]
+        table_d = dev(table)
+        masks = dev(sizes_np - 1)
+        rng = jnp.arange(n)[None, :]
+
+        def ex(base, x):
+            # WRAP contract (tables.py): idx = code mod 2**m == code & (2**m-1)
+            idx = base[:, src] & masks
+            return table_d[rng, idx]
+        return srcs, ex
+
+    if g.op == "CMUL":
+        srcs, src = locate(a["src"])
+        codes = dev(a["code"])
+        return srcs, lambda base, x: base[:, src] * codes[None]
+
+    # ADD / SUB — locate both operand sets against one shared base
+    n = len(a["a"])
+    srcs, cols = locate(list(a["a"]) + list(a["b"]))
+    ca, cb = cols[:n], cols[n:]
+    sa, sb = dev(a["shift_a"]), dev(a["shift_b"])
+    sign = 1 if g.op == "ADD" else -1
+
+    def ex(base, x):
+        return (base[:, ca] << sa) + sign * (base[:, cb] << sb)
+    return srcs, ex
+
+
+# --------------------------------------------------------------------------- #
+# fused per-layer path: pre-composed tables on the incoming register grids
+# --------------------------------------------------------------------------- #
+# One composed table may not exceed this many entries (the layer-2+ entry
+# count is 2**width of the previous layer's accumulator registers).
+_MAX_COMPOSED_ELEMS = 1 << 24
+
+
+def _compose_lut_segment(prog: DaisProgram, seg, dtype):
+    """Fold one "lut" segment into a single (C_in, C_out, E_max) int table.
+
+    For every cell (j, i), the lowered instruction chain
+    REQUANT(src grid → f_in) → LLUT → CMUL(1 << (F - f_out)) is a pure
+    function of input register j's integer code, so we enumerate all
+    ``2**width_j`` codes once at compile time and bake the chain into a
+    table indexed by the code's two's-complement bits (the WRAP contract of
+    ``core.tables.LayerTables``).  At run time the whole layer is then
+    ``table[j, i, x_j & mask_j]`` summed over j — bit-exact vs the
+    instruction-at-a-time interpreter because every folded step is the same
+    exact integer function and the final Σ is exact integer arithmetic
+    (tree vs linear order is immaterial).
+
+    Returns ``(table, masks)`` or None when the segment doesn't fit the
+    pattern (register-count mismatch, oversized table, codes too wide to
+    enumerate in ``dtype``).
+    """
+    t = prog.tables[seg.layer_id]
+    ci, co = t.c_in, t.c_out
+    if len(seg.in_regs) != ci or len(seg.out_regs) != co:
+        return None
+    in_f = [prog.instrs[r].reg.f for r in seg.in_regs]
+    in_w = [max(prog.instrs[r].reg.width, 1) for r in seg.in_regs]
+    in_s = [prog.instrs[r].reg.signed for r in seg.in_regs]
+    n_entries = [1 << w for w in in_w]
+    e_max = max(n_entries)
+    if ci * co * e_max > _MAX_COMPOSED_ELEMS:
+        return None
+    up_max = max(int(np.max(np.maximum(t.f_in[j] - in_f[j], 0)))
+                 for j in range(ci))
+    if dtype == jnp.int32 and max(in_w) + up_max > _INT32_MAX_WIDTH:
+        return None
+
+    F = t.common_f_out()
+    live = (t.in_width > 0) & (t.out_width > 0)
+    out_shift = np.maximum(F - t.f_out, 0).astype(np.int64)
+    sizes = t.entry_sizes()
+    table = np.zeros((ci, co, e_max), np.int64)
+    cols = np.arange(co)[None, :]
+    for j in range(ci):
+        c = np.arange(n_entries[j], dtype=np.int64)
+        if in_s[j]:  # signed register: index bits are the two's complement
+            c = np.where(c >= n_entries[j] // 2, c - n_entries[j], c)
+        # same vectorized requant the generic path runs per batch, evaluated
+        # once per possible code (host-side, eager)
+        rq = np.asarray(jax.device_get(_requant_cols(
+            jnp.asarray(c[:, None], dtype),
+            jnp.asarray(t.f_in[j].astype(np.int64) - in_f[j], dtype),
+            jnp.asarray(t.in_width[j], dtype),
+            jnp.asarray(np.ones(co, bool)), "WRAP")), np.int64)  # (E_j, co)
+        idx = rq & (sizes[j] - 1)[None, :]
+        vals = t.codes[j][cols, idx]                             # (E_j, co)
+        vals = np.where(live[j][None, :], vals << out_shift[j][None, :], 0)
+        table[j, :, :n_entries[j]] = vals.T
+    masks = np.asarray(n_entries, np.int64) - 1
+    return table, masks
+
+
+def _try_fused_runner(prog: DaisProgram, dtype, mesh):
+    """Build the fused per-layer runner, or (None, 0) if the program is not
+    a closed chain of composable "lut" segments."""
+    segs = prog.segments
+    if not segs or any(s.kind != "lut" for s in segs):
+        return None, 0
+    first = [prog.instrs[r] for r in segs[0].in_regs]
+    if any(ins.op != "IN" for ins in first):
+        return None, 0
+    for a, b in zip(segs[:-1], segs[1:]):
+        if tuple(a.out_regs) != tuple(b.in_regs):
+            return None, 0
+    if tuple(prog.outputs) != tuple(segs[-1].out_regs):
+        return None, 0
+
+    stages = []
+    for seg in segs:
+        composed = _compose_lut_segment(prog, seg, dtype)
+        if composed is None:
+            return None, 0
+        table, masks = composed
+        stages.append((jnp.asarray(table, dtype), jnp.asarray(masks, dtype),
+                       jnp.arange(table.shape[0])[:, None],
+                       jnp.arange(table.shape[1])[None, :]))
+    in_cols = np.asarray([ins.args[0] for ins in first], np.int64)
+
+    def _run(x):
+        if mesh is not None:
+            from repro.parallel.sharding import constrain
+            x = constrain(x, mesh, "batch", None)
+        v = x[:, in_cols]
+        for table, masks, jj, ii in stages:
+            idx = (v & masks[None, :])[:, :, None]      # (B, ci, 1)
+            v = table[jj, ii, idx].sum(axis=1)          # gather -> Σ over j
+        return v
+    return _run, len(stages)
+
+
+# --------------------------------------------------------------------------- #
+# single-layer engine: jax port of LayerTables.lookup_codes
+# --------------------------------------------------------------------------- #
+def lower_tables(t: LayerTables, x_f, x_width: int = 16,
+                 jit: bool = True) -> Callable:
+    """Jitted batched gather evaluating one layer's truth tables.
+
+    Returns ``fn(x_codes) -> out_codes`` bit-exact against
+    ``t.lookup_codes(x_codes, x_f)``: (B, C_in) codes on the ``x_f`` grid in,
+    (B, C_out) codes on the ``t.common_f_out()`` grid out.  ``x_width`` is
+    the physical width of the input codes (bounds the internal dtype).
+    """
+    ci, co = t.c_in, t.c_out
+    xf = np.broadcast_to(np.asarray(x_f, np.int64), (ci,))
+    shift = (t.f_in - xf[:, None]).astype(np.int64)         # (ci, co)
+    sizes_np = t.entry_sizes()                              # (ci, co)
+    F = t.common_f_out()
+    # F >= f_out for every LIVE cell; pruned cells (codes all 0) may have a
+    # larger f_out, so clamp their (value-irrelevant) shift at 0
+    out_shift_np = np.maximum(F - t.f_out, 0).astype(np.int64)  # (ci, co)
+
+    width_bound = max(
+        int(x_width + max(shift.max(), 0)) + 1,
+        int((np.maximum(t.out_width, 1) + out_shift_np).max())
+        + int(np.ceil(np.log2(max(ci, 1)))) + 1)
+    dtype = _pick_dtype(width_bound)
+
+    codes_d = jnp.asarray(t.codes, dtype)
+    sh = jnp.asarray(shift, dtype)[None]                    # (1, ci, co)
+    masks = jnp.asarray(sizes_np - 1, dtype)[None]
+    out_shift = jnp.asarray(out_shift_np, dtype)[None]
+    jj = jnp.arange(ci)[:, None]
+    ii = jnp.arange(co)[None, :]
+
+    def fn(x_codes):
+        v = jnp.asarray(x_codes, dtype)[..., :, None]   # (B, ci, 1)
+        # integer round-half-to-even requant onto each cell's f_in grid
+        code = _shift_round(v, sh)
+        idx = code & masks              # the WRAP contract (grids are 2**m)
+        out = codes_d[jj, ii, idx]                          # (B, ci, co)
+        return (out << out_shift).sum(axis=-2)
+    return jax.jit(fn) if jit else fn
+
+
+# --------------------------------------------------------------------------- #
+# bit-exactness gate
+# --------------------------------------------------------------------------- #
+def input_code_bounds(prog: DaisProgram):
+    """Per-input inclusive (lo, hi) integer code ranges of a program."""
+    widths = [ins.reg.width for ins in prog.instrs if ins.op == "IN"]
+    lo, hi = [], []
+    for w, s in zip(widths, prog.input_signed):
+        n = 1 << max(w, 1)
+        lo.append(-(n >> 1) if s else 0)
+        hi.append((lo[-1] + n - 1))
+    return np.asarray(lo, np.int64), np.asarray(hi, np.int64)
+
+
+def verify_engine(engine: ServeEngine, prog: DaisProgram, *,
+                  n_random: int = 1024, seed: int = 0,
+                  exhaustive_limit: int = 4096) -> Dict[str, int]:
+    """Assert the accelerator engine matches ``DaisProgram.run`` bit-for-bit.
+
+    Checks ``n_random`` uniform random input-code vectors, plus the full
+    input cross-product whenever it has at most ``exhaustive_limit`` rows.
+    Raises ``AssertionError`` on the first mismatch; returns the row counts
+    checked so callers can log the gate.
+    """
+    lo, hi = input_code_bounds(prog)
+    rng = np.random.default_rng(seed)
+    batches = [rng.integers(lo, hi + 1, (n_random, len(lo)), dtype=np.int64)]
+    sizes = hi - lo + 1
+    n_exhaustive = 0
+    # float product: may overflow to inf for wide input spaces, which simply
+    # (and correctly) skips the exhaustive sweep instead of raising
+    if float(np.prod(sizes.astype(np.float64))) <= exhaustive_limit:
+        grid = np.indices(tuple(int(s) for s in sizes))
+        batches.append(grid.reshape(len(lo), -1).T + lo[None, :])
+        n_exhaustive = batches[-1].shape[0]
+    for codes in batches:
+        ref = prog.run(codes)
+        got = np.asarray(jax.device_get(engine.run(codes)), np.int64)
+        np.testing.assert_array_equal(
+            got, ref, err_msg="accelerator engine != DAIS interpreter")
+    return {"random": n_random, "exhaustive": n_exhaustive,
+            "max_width": prog.max_width(), "n_groups": engine.n_groups}

@@ -109,6 +109,18 @@ def fake_quant(x, f, i, *, signed: bool = True, overflow: str = "SAT"):
                             interpret=not _on_tpu())
 
 
+# --------------------------------------------------------------------------- #
+# integer serving engine (post-training artifact path)
+# --------------------------------------------------------------------------- #
+# The train/eval kernels above run the *float* fake-quant model; after
+# `extract_tables` + `compile_sequential` the deployable artifact is an
+# integer DAIS program, and `lut_serve` lowers it onto the accelerator as
+# batched table gathers + exact integer arithmetic.  Re-exported here so the
+# serving stack (`launch/serve.py --engine tables`, benchmarks, tests) has
+# one import surface for every kernel-backed entry point.
+from repro.kernels.lut_serve import (ServeEngine, compile_program,  # noqa: E402
+                                     lower_tables, verify_engine)
+
 # re-exports of the oracles for test convenience
 lut_dense_ref = _ref.lut_dense_ref
 lut_dense_train_ref = _ref.lut_dense_train_ref

@@ -133,6 +133,17 @@ def constrain(x, mesh: Mesh, *axes: Optional[str]):
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*out)))
 
 
+def shard_batch(x, mesh: Mesh):
+    """Place a host batch on the mesh, dim 0 sharded over the DP axes.
+
+    Used by the serving paths (e.g. the integer LUT engine's request
+    batches) so inputs land already distributed instead of replicated and
+    re-sharded by the first ``with_sharding_constraint`` inside the jit.
+    """
+    spec = P(batch_dim_spec(x.shape[0], mesh), *([None] * (x.ndim - 1)))
+    return jax.device_put(x, NamedSharding(mesh, spec))
+
+
 def heads_shardable(n_heads: int, mesh: Mesh) -> bool:
     axes = dict(zip(mesh.axis_names, mesh.devices.shape))
     return "model" in axes and n_heads % axes["model"] == 0

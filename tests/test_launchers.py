@@ -22,6 +22,20 @@ def test_serve_launcher_decodes():
 
 
 @pytest.mark.slow
+def test_serve_launcher_tables_engine():
+    """--engine tables: compiled integer artifact serves, gate passes."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--engine", "tables",
+         "--lut-dims", "8,6,3", "--lut-hidden", "4", "--batch", "256",
+         "--gen", "2", "--smoke"],
+        env=ENV, cwd=REPO, capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "engine=tables" in r.stdout
+    assert "bit-exact gate PASSED" in r.stdout
+    assert "rows/s" in r.stdout
+
+
+@pytest.mark.slow
 def test_train_launcher_smoke():
     r = subprocess.run(
         [sys.executable, "-m", "repro.launch.train", "--arch", "rwkv6_16b",

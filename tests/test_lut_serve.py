@@ -1,0 +1,222 @@
+"""Accelerator serving engine: bit-exactness vs the DAIS interpreter.
+
+The contract under test (ISSUE 2 acceptance): the jitted integer engine of
+``kernels/lut_serve.py`` must match ``DaisProgram.run`` code-for-code — on
+exhaustive small-width inputs, on random inputs, on both lowering paths
+(fused per-layer tables and generic op groups), and through the sharded
+serving entry.  ``LayerTables.lookup_codes`` is pulled into the same
+equality for single-layer programs, closing the triangle between the three
+implementations of the WRAP indexing contract.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dais import compile_sequential
+from repro.core.hgq_layers import HGQDense
+from repro.core.lut_layers import LUTDense
+from repro.core.quant import QuantConfig, quantize_to_int
+from repro.core.tables import extract_tables
+from repro.kernels.lut_serve import (_requant_cols, compile_program,
+                                     input_code_bounds, lower_tables,
+                                     verify_engine)
+
+KEY = jax.random.PRNGKey(11)
+IN_F, IN_I = 4, 2
+
+
+def _narrow_cfg(overflow):
+    # clamp widths so an exhaustive sweep over all input codes stays tiny
+    return QuantConfig(granularity="element", signed=True, overflow=overflow,
+                       init_f=1.0, init_i=1.0, min_f=-2, max_f=2,
+                       min_i=-2, max_i=2)
+
+
+def _codes(n, ci, key=KEY, f=IN_F, i=IN_I):
+    x = np.asarray(jax.random.normal(key, (n, ci))) * 2
+    return quantize_to_int(x, f, i, True, "SAT")
+
+
+# --------------------------------------------------------------------------- #
+# exhaustive: interpreter == lookup_codes == jitted engine, all input codes
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("fuse", [True, False])
+def test_exhaustive_three_way_bit_exact(fuse):
+    layer = LUTDense(3, 4, hidden=4,
+                     q_in=_narrow_cfg("WRAP"), q_out=_narrow_cfg("SAT"))
+    params = layer.init(jax.random.PRNGKey(7))
+    in_f = in_i = 1                       # 3-bit inputs -> 8**3 = 512 rows
+    prog = compile_sequential([layer], [params], in_f, in_i)
+    engine = compile_program(prog, fuse_layers=fuse)
+    assert engine.fused is fuse
+
+    lo, hi = input_code_bounds(prog)
+    grids = np.meshgrid(*[np.arange(l, h + 1) for l, h in zip(lo, hi)],
+                        indexing="ij")
+    codes = np.stack([g.ravel() for g in grids], axis=-1)       # (512, 3)
+    assert codes.shape[0] == 512
+
+    ref = prog.run(codes)
+    got = np.asarray(jax.device_get(engine.run(codes)), np.int64)
+    np.testing.assert_array_equal(got, ref)
+
+    t = prog.tables[0]
+    np.testing.assert_array_equal(t.lookup_codes(codes, in_f), ref)
+
+    # the packaged gate agrees (and actually runs the exhaustive sweep)
+    stats = verify_engine(engine, prog, n_random=64, exhaustive_limit=1024)
+    assert stats["exhaustive"] == 512
+
+
+# --------------------------------------------------------------------------- #
+# random, multi-layer, both lowering paths
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("fuse", [True, False])
+def test_two_layer_random_bit_exact(fuse):
+    l1 = LUTDense(6, 9, hidden=4, use_batchnorm=True)
+    l2 = LUTDense(9, 3, hidden=4)
+    k1, k2 = jax.random.split(KEY)
+    prog = compile_sequential([l1, l2], [l1.init(k1), l2.init(k2)],
+                              IN_F, IN_I)
+    engine = compile_program(prog, fuse_layers=fuse)
+    assert engine.fused is fuse
+    codes = _codes(512, 6)
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(engine.run(codes)), np.int64),
+        prog.run(codes))
+
+
+def test_hybrid_program_falls_back_to_groups():
+    """HGQ layers aren't "lut" segments — the generic path must cover them."""
+    h1 = HGQDense(6, 5, activation="relu")
+    l1 = LUTDense(5, 4, hidden=4)
+    k1, k2 = jax.random.split(KEY)
+    prog = compile_sequential([h1, l1], [h1.init(k1), l1.init(k2)],
+                              IN_F, IN_I)
+    engine = compile_program(prog)
+    assert not engine.fused
+    verify_engine(engine, prog, n_random=512)
+
+
+def test_engine_run_float_matches_interpreter():
+    layer = LUTDense(4, 3, hidden=4)
+    prog = compile_sequential([layer], [layer.init(KEY)], IN_F, IN_I)
+    engine = compile_program(prog)
+    x = np.asarray(jax.random.normal(KEY, (64, 4)), np.float64)
+    from repro.core.quant import int_to_float
+    xq = int_to_float(quantize_to_int(x, IN_F, IN_I, True, "SAT"), IN_F)
+    np.testing.assert_array_equal(engine.run_float(xq), prog.run_float(xq))
+
+
+def test_engine_with_mesh_sharding_bit_exact():
+    """Batch-sharded serving (parallel/sharding.constrain) changes nothing."""
+    layer = LUTDense(5, 6, hidden=4)
+    prog = compile_sequential([layer], [layer.init(KEY)], IN_F, IN_I)
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    engine = compile_program(prog, mesh=mesh)
+    verify_engine(engine, prog, n_random=512)
+
+
+# --------------------------------------------------------------------------- #
+# per-layer lowering (LayerTables -> batched gather)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", [0, 1])
+def test_lower_tables_matches_lookup_codes(seed):
+    k = jax.random.PRNGKey(seed)
+    layer = LUTDense(6, 9, hidden=4, use_batchnorm=(seed % 2 == 0))
+    t = extract_tables(layer, layer.init(k))
+    fn = lower_tables(t, IN_F, x_width=IN_F + IN_I + 1)
+    codes = _codes(256, 6, k)
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(fn(codes)), np.int64),
+        t.lookup_codes(codes, IN_F))
+
+
+# --------------------------------------------------------------------------- #
+# unit: vectorized requant vs the scalar interpreter helper
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("mode", ["SAT", "WRAP"])
+def test_requant_cols_matches_scalar_requant(mode):
+    from repro.core.dais import _requant
+    rng = np.random.default_rng(3)
+    n = 32
+    src_f = rng.integers(-2, 4, n)
+    f = rng.integers(-2, 4, n)          # mixed-sign shifts in one group
+    i = rng.integers(0, 4, n)
+    v = rng.integers(-200, 200, (17, n))
+    ref = np.stack([
+        _requant(v[:, c], int(src_f[c]), int(f[c]), int(i[c]), True, mode)
+        for c in range(n)], axis=-1)
+    got = np.asarray(jax.device_get(_requant_cols(
+        jnp.asarray(v, jnp.int32), jnp.asarray(f - src_f, jnp.int32),
+        jnp.asarray(f + i + 1, jnp.int32), jnp.asarray(np.ones(n, bool)),
+        mode)), np.int64)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_lookup_codes_tolerates_pruned_cell_with_large_f_out():
+    """A dead cell may keep f_out > common_f_out(); its codes are all 0, so
+    the alignment shift must clamp instead of going negative (regression:
+    numpy raised on integer ** negative)."""
+    from repro.core.tables import LayerTables
+    g = lambda a: np.asarray(a, np.int32)
+    t = LayerTables(
+        f_in=g([[1, 1]]), i_in=g([[1, 1]]),
+        f_out=g([[1, 7]]), i_out=g([[1, -8]]),
+        in_width=g([[3, 0]]), out_width=g([[3, 0]]),
+        codes=np.arange(16).reshape(1, 2, 8).astype(np.int64) % 5
+              * np.asarray([1, 0])[None, :, None])
+    codes = np.arange(-4, 4, dtype=np.int64)[:, None]       # (8, 1) inputs
+    out = t.lookup_codes(codes, 1)                           # must not raise
+    fn = lower_tables(t, 1, x_width=4)
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(fn(codes)), np.int64), out)
+
+
+def test_required_width_guards_transient_requant_overflow():
+    """Declared widths <= 30 but a SAT REQUANT up-shift transient needs more:
+    the engine must refuse int32 rather than silently clamp wrong."""
+    from repro.core.dais import DaisProgram, Reg
+    prog = DaisProgram()
+    prog.input_f = [0]
+    prog.input_signed = [True]
+    r0 = prog.emit("IN", (0,), Reg(f=0, width=29, signed=True))
+    r1 = prog.emit("REQUANT", (r0, 6, 23, True, "SAT", 0),
+                   Reg(f=6, width=30, signed=True))
+    prog.outputs = [r1]
+    prog.output_f = [6]
+    assert prog.max_width() <= 30 < prog.required_width()
+    if getattr(jax.config, "jax_enable_x64", False):
+        engine = compile_program(prog)
+        verify_engine(engine, prog, n_random=128)
+    else:
+        with pytest.raises(ValueError, match="X64"):
+            compile_program(prog)
+
+
+# --------------------------------------------------------------------------- #
+# schedule view invariants
+# --------------------------------------------------------------------------- #
+def test_schedule_partitions_program():
+    l1 = LUTDense(4, 6, hidden=4)
+    l2 = LUTDense(6, 2, hidden=4)
+    k1, k2 = jax.random.split(KEY)
+    prog = compile_sequential([l1, l2], [l1.init(k1), l2.init(k2)],
+                              IN_F, IN_I)
+    groups = prog.schedule()
+    seen = np.concatenate([g.regs for g in groups])
+    assert sorted(seen.tolist()) == list(range(prog.n_instrs()))
+    # every group's arguments are produced at a strictly earlier level
+    level = np.empty(prog.n_instrs(), np.int64)
+    for g in groups:
+        level[g.regs] = g.level
+    for g in groups:
+        for key in ("src", "a", "b"):
+            if key in g.args:
+                assert (level[g.args[key]] < g.level).all()
+    # segments metadata chains the layers
+    assert [s.kind for s in prog.segments] == ["lut", "lut"]
+    assert prog.segments[0].out_regs == prog.segments[1].in_regs
+    assert tuple(prog.outputs) == prog.segments[-1].out_regs
