@@ -19,7 +19,6 @@ per-device — exactly what the roofline terms want.
 
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple

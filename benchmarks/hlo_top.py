@@ -64,7 +64,7 @@ def main() -> None:
     args = ap.parse_args()
 
     # reuse the dryrun cell builder, then walk its HLO
-    import repro.launch.dryrun  # sets XLA_FLAGS before jax init
+    import repro.launch.dryrun  # noqa: F401 — sets XLA_FLAGS before jax init
     from benchmarks.hlo_cost import HloModule
 
     import jax

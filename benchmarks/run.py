@@ -8,7 +8,6 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 
@@ -17,6 +16,10 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="run a single benchmark "
                          "(table1|table2|table3|fig5|kernels|serve|roofline)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, no BENCH_*.json overwrite — the CI "
+                         "leg that keeps benchmark scripts from rotting "
+                         "(kernels and serve support it; others ignore it)")
     args = ap.parse_args()
 
     from benchmarks import (fig5_pid, kernel_bench, serve_bench,
@@ -27,8 +30,9 @@ def main() -> None:
         "table2": table2_jsc_hlf.run,
         "table3": table3_plf_tgc.run,
         "fig5": fig5_pid.run,
-        "kernels": kernel_bench.run,   # writes BENCH_kernels.json
-        "serve": serve_bench.run,      # writes BENCH_serve.json
+        # smoke-aware: tiny shapes + no JSON write under --smoke
+        "kernels": lambda: kernel_bench.run(smoke=args.smoke),
+        "serve": lambda: serve_bench.run(smoke=args.smoke),
     }
     print("name,us_per_call,derived")
     todo = [args.only] if args.only else list(benches) + ["roofline"]

@@ -1,15 +1,26 @@
-"""Serving micro-bench: numpy DAIS interpreter vs jitted integer engine.
+"""Serving micro-bench: interpreter vs engine, raw batches and under load.
 
-Writes ``BENCH_serve.json`` with, per LUT-Dense model: median walltime of
-``DaisProgram.run`` (the scalar-instruction numpy interpreter) against the
-accelerator engine of ``kernels/lut_serve.py`` in both its fused per-layer
-form and the generic levelized-group form, at the acceptance batch size of
-1024 rows.  The fused engine executes each layer as mask → batched table
-gather → Σ, so its op count scales with model *depth* while the interpreter
-dispatches one numpy op per instruction — the speedup column is the point.
+Writes ``BENCH_serve.json`` with, per LUT-Dense model:
+
+* **raw batch path** — median walltime of ``DaisProgram.run`` (the
+  scalar-instruction numpy interpreter) against the accelerator engine of
+  ``kernels/lut_serve.py`` in both its fused per-layer form and the generic
+  levelized-group form, at the acceptance batch size of 1024 rows.  The
+  fused engine executes each layer as mask → batched table gather → Σ, so
+  its op count scales with model *depth* while the interpreter dispatches
+  one numpy op per instruction — the speedup column is the point.
+* **latency under load** — the async micro-batching scheduler
+  (``repro/serve/scheduler.py``) fed by the open-loop synthetic driver:
+  p50/p99 request latency and achieved throughput at a fixed offered rate
+  and at max-rate burst, engine-backed vs numpy-interpreter-backed behind
+  the *same* scheduler (service path vs service path).
 
 Every engine measurement is gated: the benchmark refuses to time an engine
 that is not bit-exact against the interpreter on the same inputs.
+
+``smoke=True`` (CI: ``python -m benchmarks.run --only serve --smoke``)
+shrinks every shape/row count and skips the JSON write — it proves the
+benchmark *runs*, without publishing numbers from a cold CI container.
 
 Run:  PYTHONPATH=src python -m benchmarks.run --only serve
 """
@@ -30,6 +41,12 @@ MODELS = [([16, 20, 5], 8), ([32, 32, 5], 8)]
 BATCH = 1024
 IN_F, IN_I = 4, 2
 OUT_JSON = "BENCH_serve.json"
+
+# scheduler load points: offered req/s (0 = max-rate burst)
+RATES = [2000.0, 0.0]
+SCHED_REQUESTS = 2048
+SCHED_MAX_BATCH = 64
+SCHED_DELAY_MS = 2.0
 
 
 def _build(dims, hidden, seed=0):
@@ -67,25 +84,68 @@ def _bench_pair(prog, engines, codes, rounds: int = 25) -> dict:
     return {k: v * 1e6 for k, v in best.items()}
 
 
-def run() -> None:
+def _bench_scheduler(prog, engine, shape: str, *, n_requests: int,
+                     rates) -> list:
+    """Latency under load: open-loop driver through the micro-batcher.
+
+    One row per (offered rate × backend), straight from the shared
+    ``compare_under_load`` harness (the same code path ``launch/serve.py
+    --serve-loop`` reports) — engine and interpreter behind the identical
+    scheduler config, bit-exactness asserted before anything is recorded.
+    """
+    from repro.kernels.lut_serve import input_code_bounds
+    from repro.serve.scheduler import BatcherConfig, compare_under_load
+
+    lo, hi = input_code_bounds(prog)
+    rng = np.random.default_rng(0)
+    codes = rng.integers(lo, hi + 1, (n_requests, len(lo)), np.int64)
+    cfg = BatcherConfig(max_batch=SCHED_MAX_BATCH,
+                        max_delay_ms=SCHED_DELAY_MS)
+    rows = []
+    for s in compare_under_load(prog, engine, codes, cfg, rates=rates):
+        rows.append({
+            "backend": s["backend"], "offered_rate": s["offered_rate"],
+            "n_requests": n_requests,
+            "max_batch": SCHED_MAX_BATCH,
+            "max_delay_ms": SCHED_DELAY_MS,
+            "p50_ms": s["p50_ms"], "p99_ms": s["p99_ms"],
+            "rows_per_s": s["rows_per_s"],
+            "mean_batch_fill": s["mean_batch_fill"],
+            "pad_overhead": s["pad_overhead"],
+        })
+        load = (f"{s['offered_rate']:.0f}rps" if s["offered_rate"] > 0
+                else "burst")
+        emit(f"serve/sched_{s['backend']}/{shape}/{load}",
+             s["p50_ms"] * 1e3,
+             f"p99_ms={s['p99_ms']:.2f};rows_s={s['rows_per_s']:.0f}")
+    return rows
+
+
+def run(smoke: bool = False) -> None:
     from repro.core.quant import quantize_to_int
     from repro.kernels.lut_serve import compile_program, verify_engine
 
+    models = MODELS[:1] if smoke else MODELS
+    batch = 128 if smoke else BATCH
+    rounds = 3 if smoke else 25
+    n_requests = 192 if smoke else SCHED_REQUESTS
+    rates = [0.0] if smoke else RATES
+
     rng = np.random.default_rng(0)
     results = []
-    for dims, hidden in MODELS:
+    for dims, hidden in models:
         prog = _build(dims, hidden)
-        codes = quantize_to_int(rng.normal(0.0, 2.0, (BATCH, dims[0])),
+        codes = quantize_to_int(rng.normal(0.0, 2.0, (batch, dims[0])),
                                 IN_F, IN_I, True, "SAT")
         engines = []
         for name, fuse in (("fused", True), ("groups", False)):
             eng = compile_program(prog, fuse_layers=fuse)
             verify_engine(eng, prog, n_random=256)   # never bench a liar
             engines.append((name, eng))
-        us = _bench_pair(prog, engines, codes)
+        us = _bench_pair(prog, engines, codes, rounds=rounds)
 
         row = {
-            "dims": dims, "hidden": hidden, "batch": BATCH,
+            "dims": dims, "hidden": hidden, "batch": batch,
             "n_instrs": prog.n_instrs(),
             "interp_us": us["interp"],
         }
@@ -97,14 +157,21 @@ def run() -> None:
                  f"speedup={us['interp'] / us[name]:.1f}x")
         emit(f"serve/interp/{shape}", us["interp"],
              f"n_instrs={prog.n_instrs()}")
+        row["scheduler"] = _bench_scheduler(
+            prog, engines[0][1], shape, n_requests=n_requests, rates=rates)
         results.append(row)
 
+    if smoke:
+        emit("serve/smoke_ok", 0.0, "json_not_written")
+        return
     payload = {
         "backend": jax.default_backend(),
         "batch": BATCH,
         "note": ("interp = DaisProgram.run (numpy, one op per instruction); "
                  "engine = kernels/lut_serve.py jitted integer lowering, "
-                 "bit-exactness asserted before timing"),
+                 "bit-exactness asserted before timing; scheduler rows = "
+                 "repro/serve/scheduler.py micro-batching under open-loop "
+                 "load, engine vs interpreter behind the same scheduler"),
         "results": results,
     }
     with open(OUT_JSON, "w") as fh:
@@ -113,4 +180,9 @@ def run() -> None:
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, no JSON overwrite (CI)")
+    run(smoke=ap.parse_args().smoke)

@@ -9,7 +9,6 @@ accuracy-resource trade-offs without manual bit-width tuning".
 Run:  PYTHONPATH=src python examples/pareto_sweep.py
 """
 
-import copy
 import time
 
 import jax

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 
 @dataclasses.dataclass(frozen=True)

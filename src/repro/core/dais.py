@@ -24,7 +24,7 @@ int64 arrays of shape (B,)), mirroring da4ml's batched emulation mode.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
@@ -262,6 +262,116 @@ class DaisProgram:
             codes[..., k] = np.round(x[..., k] * np.exp2(f)).astype(np.int64)
         out = self.run(codes)
         return out.astype(np.float64) * np.exp2(-np.asarray(self.output_f, np.float64))
+
+    # ------------------------------------------------------------ wire format
+    def to_arrays(self) -> Dict[str, np.ndarray]:
+        """Flatten the program to a dict of plain numpy arrays.
+
+        The inverse of :meth:`from_arrays`; together they are the
+        npz-serializable wire format of the compiled-artifact cache
+        (``repro/serve/artifact.py``).  Everything semantic round-trips:
+        instructions (with exact arg tuples), register formats, outputs,
+        input/output grids, segments, and the truth tables — so a
+        deserialized program runs bit-identically *and* still qualifies for
+        the fused per-layer engine lowering.
+        """
+        return _program_to_arrays(self)
+
+    @staticmethod
+    def from_arrays(arrays: Dict[str, np.ndarray]) -> "DaisProgram":
+        """Rebuild a program from :meth:`to_arrays` output."""
+        return _program_from_arrays(arrays)
+
+
+# --------------------------------------------------------------------------- #
+# serialization: flat numpy-array round trip (the artifact-bundle format)
+# --------------------------------------------------------------------------- #
+# Stable enumerations of the wire format — append-only: the artifact cache
+# (repro/serve/artifact.py) content-hashes the arrays produced here, so
+# reordering an existing entry would silently invalidate every saved bundle.
+_OP_CODES: Tuple[str, ...] = ("IN", "CONST", "REQUANT", "LLUT", "CMUL",
+                              "ADD", "SUB")
+_MODE_CODES: Tuple[str, ...] = ("", "SAT", "WRAP")
+_SEG_KINDS: Tuple[str, ...] = ("lut", "hgq")
+_TABLE_FIELDS: Tuple[str, ...] = ("f_in", "i_in", "f_out", "i_out",
+                                  "in_width", "out_width", "codes")
+_MAX_ARGS = 6  # REQUANT is the widest op: (src, f, i, signed, mode, src_f)
+
+
+def _program_to_arrays(prog: "DaisProgram") -> Dict[str, np.ndarray]:
+    n = len(prog.instrs)
+    op = np.zeros(n, np.int64)
+    nargs = np.zeros(n, np.int64)
+    args = np.zeros((n, _MAX_ARGS), np.int64)
+    reg = np.zeros((n, 3), np.int64)
+    for idx, ins in enumerate(prog.instrs):
+        op[idx] = _OP_CODES.index(ins.op)
+        a = list(ins.args)
+        if ins.op == "REQUANT":
+            a[4] = _MODE_CODES.index(a[4])
+        nargs[idx] = len(a)
+        args[idx, :len(a)] = [int(v) for v in a]
+        reg[idx] = (ins.reg.f, ins.reg.width, int(ins.reg.signed))
+
+    # segments: fixed-width metadata + one concatenated register list
+    seg_meta = np.asarray(
+        [[_SEG_KINDS.index(s.kind), s.layer_id, len(s.in_regs), len(s.out_regs)]
+         for s in prog.segments], np.int64).reshape(-1, 4)
+    seg_regs = np.asarray(
+        [r for s in prog.segments for r in (*s.in_regs, *s.out_regs)],
+        np.int64)
+
+    out = {
+        "version": np.asarray([1], np.int64),
+        "instr_op": op, "instr_nargs": nargs, "instr_args": args,
+        "instr_reg": reg,
+        "outputs": np.asarray(prog.outputs, np.int64),
+        "input_f": np.asarray(prog.input_f, np.int64),
+        "input_signed": np.asarray(prog.input_signed, np.int64),
+        "output_f": np.asarray(prog.output_f, np.int64),
+        "seg_meta": seg_meta, "seg_regs": seg_regs,
+        "table_ids": np.asarray(sorted(prog.tables), np.int64),
+    }
+    for lid in sorted(prog.tables):
+        t = prog.tables[lid]
+        for fld in _TABLE_FIELDS:
+            out[f"table{lid}_{fld}"] = np.asarray(getattr(t, fld))
+    return out
+
+
+def _program_from_arrays(arrays: Dict[str, np.ndarray]) -> "DaisProgram":
+    version = int(np.asarray(arrays["version"]).ravel()[0])
+    if version != 1:
+        raise ValueError(f"unknown DaisProgram wire-format version {version}")
+    prog = DaisProgram()
+    op, nargs = arrays["instr_op"], arrays["instr_nargs"]
+    args, reg = arrays["instr_args"], arrays["instr_reg"]
+    for idx in range(len(op)):
+        name = _OP_CODES[int(op[idx])]
+        a = [int(v) for v in args[idx, :int(nargs[idx])]]
+        if name == "REQUANT":
+            a[3] = bool(a[3])
+            a[4] = _MODE_CODES[a[4]]
+        prog.instrs.append(Instr(name, tuple(a),
+                                 Reg(f=int(reg[idx, 0]), width=int(reg[idx, 1]),
+                                     signed=bool(reg[idx, 2]))))
+    prog.outputs = [int(r) for r in arrays["outputs"]]
+    prog.input_f = [int(f) for f in arrays["input_f"]]
+    prog.input_signed = [bool(s) for s in arrays["input_signed"]]
+    prog.output_f = [int(f) for f in arrays["output_f"]]
+    cursor = 0
+    seg_regs = arrays["seg_regs"]
+    for kind, lid, n_in, n_out in np.asarray(arrays["seg_meta"], np.int64):
+        regs = [int(r) for r in seg_regs[cursor:cursor + n_in + n_out]]
+        cursor += n_in + n_out
+        prog.segments.append(Segment(
+            kind=_SEG_KINDS[int(kind)], layer_id=int(lid),
+            in_regs=tuple(regs[:n_in]), out_regs=tuple(regs[n_in:])))
+    for lid in arrays["table_ids"]:
+        fields = {fld: np.asarray(arrays[f"table{int(lid)}_{fld}"])
+                  for fld in _TABLE_FIELDS}
+        prog.tables[int(lid)] = LayerTables(**fields)
+    return prog
 
 
 def _requant(v: np.ndarray, src_f: int, f: int, i: int, signed: bool, mode: str) -> np.ndarray:

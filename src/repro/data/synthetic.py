@@ -14,7 +14,6 @@ and rough statistics of the JSC-HLF / JSC-PLF / TGC / CEPC-PID datasets.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, Tuple
 
 import numpy as np

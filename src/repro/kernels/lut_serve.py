@@ -155,7 +155,10 @@ class ServeEngine:
         x = jnp.asarray(x_codes, self.dtype)
         if x.ndim == 1:
             x = x[None]
-        if self.mesh is not None:
+        # single-device meshes make shard_batch a pure no-op placement, but
+        # the host-side device_put still costs ~ms per call — material on the
+        # micro-batching serving path, so skip it
+        if self.mesh is not None and self.mesh.devices.size > 1:
             from repro.parallel.sharding import shard_batch
             x = shard_batch(x, self.mesh)
         return self._runner(x)
@@ -168,10 +171,28 @@ class ServeEngine:
                          np.float64)
         return out * np.exp2(-np.asarray(self.output_f, np.float64))
 
+    def warm(self, batch_sizes) -> List[int]:
+        """Populate the jit cache for every batch size in ``batch_sizes``.
+
+        jax.jit retraces per input shape, so the first request batch of each
+        size would otherwise pay a trace+compile on the serving path.  The
+        micro-batching scheduler (``repro/serve/scheduler.py``) pads every
+        flush to a power-of-two bucket and calls this at startup with the
+        bucket ladder, making steady-state latency trace-free.  Runs all-zero
+        codes (always in range); returns the sizes warmed.
+        """
+        warmed = []
+        for b in batch_sizes:
+            zeros = np.zeros((int(b), self.n_inputs), np.int64)
+            jax.block_until_ready(self.run(zeros))
+            warmed.append(int(b))
+        return warmed
+
 
 def compile_program(prog: DaisProgram, *, mesh=None,
                     dtype: Optional[object] = None,
                     fuse_layers: bool = True,
+                    stages: Optional["FusedStages"] = None,
                     jit: bool = True) -> ServeEngine:
     """Lower a DAIS program to a jitted accelerator engine.
 
@@ -183,6 +204,10 @@ def compile_program(prog: DaisProgram, *, mesh=None,
     program shape falls back to the generic levelized :class:`OpGroup`
     lowering — same bit-exact semantics, more ops.  ``fuse_layers=False``
     forces the generic path.
+
+    ``stages``: optional pre-composed :class:`FusedStages` (e.g. loaded from
+    a compiled-artifact bundle) — skips the table-composition pass entirely,
+    which is the cold-start cost ``launch/serve.py --artifact`` avoids.
 
     ``mesh``: optional ``jax.sharding.Mesh`` — the batch axis of inputs and
     register values is sharded over its DP axes via
@@ -199,7 +224,7 @@ def compile_program(prog: DaisProgram, *, mesh=None,
 
     run, n_groups, fused = None, 0, False
     if fuse_layers:
-        run, n_groups = _try_fused_runner(prog, dtype, mesh)
+        run, n_groups = _try_fused_runner(prog, dtype, mesh, stages=stages)
         fused = run is not None
     if run is None:
         run, n_groups = _group_runner(prog, dtype, mesh)
@@ -398,42 +423,90 @@ def _compose_lut_segment(prog: DaisProgram, seg, dtype):
     return table, masks
 
 
-def _try_fused_runner(prog: DaisProgram, dtype, mesh):
-    """Build the fused per-layer runner, or (None, 0) if the program is not
-    a closed chain of composable "lut" segments."""
+@dataclasses.dataclass
+class FusedStages:
+    """The compile-time product of the fused per-layer path, as plain data.
+
+    One entry per layer: ``tables[k]`` is the pre-composed ``(ci, co, E_k)``
+    int64 table of layer ``k`` (every cell's REQUANT → LLUT → align chain
+    folded over all input codes) and ``masks[k]`` the ``(ci,)`` two's-
+    complement index masks; ``in_cols`` maps program inputs to the first
+    layer's columns.  This is everything the fused runner closes over, split
+    out so the compiled-artifact cache (``repro/serve/artifact.py``) can
+    persist it and :func:`compile_program` can rebuild the engine from a
+    bundle without re-running the (layer-enumeration) composition.
+    """
+
+    tables: List[np.ndarray]
+    masks: List[np.ndarray]
+    in_cols: np.ndarray
+
+    def n_stages(self) -> int:
+        return len(self.tables)
+
+
+def compose_fused_stages(prog: DaisProgram,
+                         dtype: Optional[object] = None) -> Optional[FusedStages]:
+    """Pre-compose a closed chain of "lut" segments into per-layer tables.
+
+    Returns ``None`` when the program does not fit the fused pattern (hybrid
+    segments, broken chain, oversized or un-enumerable tables) — callers then
+    fall back to the generic :class:`OpGroup` lowering.
+    """
+    if dtype is None:
+        dtype = _pick_dtype(prog.required_width())
     segs = prog.segments
     if not segs or any(s.kind != "lut" for s in segs):
-        return None, 0
+        return None
     first = [prog.instrs[r] for r in segs[0].in_regs]
     if any(ins.op != "IN" for ins in first):
-        return None, 0
+        return None
     for a, b in zip(segs[:-1], segs[1:]):
         if tuple(a.out_regs) != tuple(b.in_regs):
-            return None, 0
+            return None
     if tuple(prog.outputs) != tuple(segs[-1].out_regs):
-        return None, 0
+        return None
 
-    stages = []
+    tables, masks = [], []
     for seg in segs:
         composed = _compose_lut_segment(prog, seg, dtype)
         if composed is None:
-            return None, 0
-        table, masks = composed
-        stages.append((jnp.asarray(table, dtype), jnp.asarray(masks, dtype),
-                       jnp.arange(table.shape[0])[:, None],
-                       jnp.arange(table.shape[1])[None, :]))
+            return None
+        tables.append(composed[0])
+        masks.append(composed[1])
     in_cols = np.asarray([ins.args[0] for ins in first], np.int64)
+    return FusedStages(tables=tables, masks=masks, in_cols=in_cols)
+
+
+def _fused_runner(stages: FusedStages, dtype, mesh):
+    """Close a :class:`FusedStages` over device constants -> runner fn."""
+    dev_stages = [(jnp.asarray(table, dtype), jnp.asarray(mask, dtype),
+                   jnp.arange(table.shape[0])[:, None],
+                   jnp.arange(table.shape[1])[None, :])
+                  for table, mask in zip(stages.tables, stages.masks)]
+    in_cols = np.asarray(stages.in_cols, np.int64)
 
     def _run(x):
         if mesh is not None:
             from repro.parallel.sharding import constrain
             x = constrain(x, mesh, "batch", None)
         v = x[:, in_cols]
-        for table, masks, jj, ii in stages:
+        for table, masks, jj, ii in dev_stages:
             idx = (v & masks[None, :])[:, :, None]      # (B, ci, 1)
             v = table[jj, ii, idx].sum(axis=1)          # gather -> Σ over j
         return v
-    return _run, len(stages)
+    return _run
+
+
+def _try_fused_runner(prog: DaisProgram, dtype, mesh,
+                      stages: Optional[FusedStages] = None):
+    """Build the fused per-layer runner, or (None, 0) if the program is not
+    a closed chain of composable "lut" segments."""
+    if stages is None:
+        stages = compose_fused_stages(prog, dtype)
+    if stages is None:
+        return None, 0
+    return _fused_runner(stages, dtype, mesh), stages.n_stages()
 
 
 # --------------------------------------------------------------------------- #

@@ -26,9 +26,8 @@ import json
 import re
 import sys
 import time
-from typing import Dict, Optional
+from typing import Dict
 
-import numpy as np
 
 
 def _collective_bytes(hlo_text: str) -> Dict[str, float]:

@@ -13,16 +13,33 @@ sharded over the local mesh.  Before serving a single batch, a bit-exactness
 gate asserts the jitted engine matches the numpy DAIS interpreter on random
 and exhaustive-small inputs — we only serve what we verified.
 
+``--artifact <path>`` persists / reuses the compiled bundle
+(``repro.serve.artifact``): when the file exists the launcher cold-starts
+from it — no table extraction, no DAIS lowering, no fused-table composition
+— and ``--skip-verify-cached`` additionally trusts the bundle's stored
+attestation (protected by its content hash) instead of re-running the gate.
+
+``--serve-loop`` switches from one pre-formed batch to the always-on
+serving posture: an async micro-batching scheduler
+(``repro.serve.scheduler``) coalesces individually submitted requests into
+padded power-of-two batches, and a synthetic open-loop traffic driver
+(Poisson arrivals at ``--rate`` req/s) reports p50/p99 latency and
+throughput against the numpy-interpreter baseline.
+
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen15_05b --smoke \
         --batch 4 --prompt-len 32 --gen 16
     PYTHONPATH=src python -m repro.launch.serve --engine tables \
         --lut-dims 16,20,5 --batch 1024 --gen 8
+    PYTHONPATH=src python -m repro.launch.serve --engine tables \
+        --artifact /tmp/model.npz --skip-verify-cached --serve-loop \
+        --rate 2000 --requests 2048
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -51,6 +68,27 @@ def main(argv=None) -> None:
                     help="fractional bits of the request input grid")
     ap.add_argument("--in-i", type=int, default=2,
                     help="integer bits of the request input grid")
+    # compiled-artifact cache + async serving loop (--engine tables only)
+    ap.add_argument("--artifact", default=None,
+                    help="bundle path: load it when present, else compile "
+                         "and save it there")
+    ap.add_argument("--skip-verify-cached", action="store_true",
+                    help="trust a loaded bundle's stored attestation "
+                         "(content-hash protected) instead of re-running "
+                         "the bit-exactness gate")
+    ap.add_argument("--serve-loop", action="store_true",
+                    help="async micro-batching scheduler + open-loop "
+                         "synthetic traffic driver (p50/p99 + throughput)")
+    ap.add_argument("--rate", type=float, default=2000.0,
+                    help="offered load of the traffic driver, requests/s")
+    ap.add_argument("--requests", type=int, default=1024,
+                    help="total requests the traffic driver submits")
+    ap.add_argument("--max-batch", type=int, default=64,
+                    help="largest scheduler bucket (power of two)")
+    ap.add_argument("--max-delay-ms", type=float, default=2.0,
+                    help="scheduler coalescing deadline per request")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="scheduler engine-call threads")
     args = ap.parse_args(argv)
 
     if args.engine == "tables":
@@ -113,12 +151,44 @@ def main(argv=None) -> None:
 # --------------------------------------------------------------------------- #
 # --engine tables: the compiled integer LUT artifact as the serving runtime
 # --------------------------------------------------------------------------- #
-def serve_tables(args) -> None:
+def _tables_engine(args, mesh):
+    """Build (or cold-start) the verified integer engine per the CLI flags.
+
+    Three paths, in order of preference:
+    * ``--artifact`` file exists → load the bundle (content-hash checked),
+      rebuild the engine from the stored pre-composed stages, and either
+      re-run the gate or — with ``--skip-verify-cached`` and a stored
+      attestation — trust the bundle's own proof;
+    * otherwise compile from the model spec, run the gate, and (when
+      ``--artifact`` is set) save the bundle for the next cold start.
+    """
     from repro.core.dais import compile_sequential
     from repro.core.lut_layers import LUTDense
-    from repro.core.quant import quantize_to_int
     from repro.kernels.lut_serve import compile_program, verify_engine
-    from repro.launch.mesh import make_local_mesh
+    from repro.serve.artifact import build_engine, load_artifact, save_artifact
+
+    if args.artifact and os.path.exists(args.artifact):
+        t0 = time.time()
+        art = load_artifact(args.artifact)
+        engine = build_engine(art, mesh=mesh)
+        t_load = time.time() - t0
+        print(f"[serve] artifact loaded: {args.artifact} "
+              f"(hash {art.content_hash[:12]}, fused={art.stages is not None}, "
+              f"{t_load:.2f}s — no re-lowering)")
+        if args.skip_verify_cached and art.attestation:
+            att = art.attestation
+            print(f"[serve] bit-exact gate SKIPPED: cached attestation "
+                  f"({att.get('random')} random + {att.get('exhaustive')} "
+                  f"exhaustive rows) verified by content hash")
+        else:
+            t0 = time.time()
+            gate = verify_engine(engine, art.prog,
+                                 n_random=256 if args.smoke else 2048,
+                                 seed=args.seed)
+            print(f"[serve] bit-exact gate PASSED: {gate['random']} random + "
+                  f"{gate['exhaustive']} exhaustive rows vs DaisProgram.run "
+                  f"(gate {time.time() - t0:.2f}s)")
+        return art.prog, engine
 
     dims = [int(d) for d in args.lut_dims.split(",")]
     if len(dims) < 2:
@@ -133,7 +203,6 @@ def serve_tables(args) -> None:
     prog = compile_sequential(layers, params, args.in_f, args.in_i)
     t_compile = time.time() - t0
     t0 = time.time()
-    mesh = make_local_mesh()
     engine = compile_program(prog, mesh=mesh)
     gate = verify_engine(engine, prog,
                          n_random=256 if args.smoke else 2048,
@@ -145,12 +214,27 @@ def serve_tables(args) -> None:
     print(f"[serve] bit-exact gate PASSED: {gate['random']} random + "
           f"{gate['exhaustive']} exhaustive rows vs DaisProgram.run "
           f"(lower {t_compile:.2f}s, gate {t_gate:.2f}s)")
+    if args.artifact:
+        digest = save_artifact(args.artifact, prog, attestation=gate)
+        print(f"[serve] artifact saved: {args.artifact} "
+              f"(hash {digest[:12]}, attestation stored)")
+    return prog, engine
 
-    # request loop: quantize float requests to input codes, run the jitted
-    # integer engine, time the steady state
+
+def serve_tables(args) -> None:
+    from repro.kernels.lut_serve import input_code_bounds
+    from repro.launch.mesh import make_local_mesh
+
+    mesh = make_local_mesh()
+    prog, engine = _tables_engine(args, mesh)
+    if args.serve_loop:
+        return serve_loop(args, prog, engine)
+
+    # one-shot request loop: run one pre-formed batch of random in-range
+    # codes through the jitted integer engine, time the steady state
+    lo, hi = input_code_bounds(prog)
     rng = np.random.default_rng(args.seed)
-    x = rng.normal(0.0, 2.0, (args.batch, dims[0]))
-    codes = quantize_to_int(x, args.in_f, args.in_i, True, "SAT")
+    codes = rng.integers(lo, hi + 1, (args.batch, engine.n_inputs), np.int64)
     jax.block_until_ready(engine.run(codes))        # compile + warm
     n_batches = max(args.gen, 1)
     t0 = time.time()
@@ -168,6 +252,47 @@ def serve_tables(args) -> None:
           f"numpy interpreter {t_interp * 1e3:.2f} ms/batch)")
     print(f"[serve] sample output codes (grid f={engine.output_f}): "
           f"{np.asarray(out[0]).tolist()}")
+
+
+def serve_loop(args, prog, engine) -> None:
+    """Synthetic open-loop traffic through the micro-batching scheduler.
+
+    ``repro.serve.scheduler.compare_under_load`` runs the identical driver
+    twice — engine-backed, then numpy-interpreter-backed — so the reported
+    comparison is service-path vs service-path (same coalescing, same
+    buckets), not service vs one pre-formed batch, and asserts every
+    response bit-exact against ``DaisProgram.run``.  Reports p50/p99
+    request latency and achieved throughput for both.
+    """
+    from repro.kernels.lut_serve import input_code_bounds
+    from repro.serve.scheduler import BatcherConfig, compare_under_load
+
+    n = max(args.requests, 1)
+    lo, hi = input_code_bounds(prog)
+    rng = np.random.default_rng(args.seed)
+    codes = rng.integers(lo, hi + 1, (n, engine.n_inputs), np.int64)
+
+    cfg = BatcherConfig(max_batch=args.max_batch,
+                        max_delay_ms=args.max_delay_ms,
+                        n_workers=args.workers)
+    print(f"[serve-loop] scheduler up: max_batch={cfg.max_batch} "
+          f"deadline={cfg.max_delay_ms}ms workers={cfg.n_workers}")
+    offered = (f"{args.rate:,.0f} req/s" if args.rate > 0
+               else "max-rate burst")
+    rows = {r["backend"]: r
+            for r in compare_under_load(prog, engine, codes, cfg,
+                                        rates=[args.rate])}
+    for name, s in rows.items():
+        print(f"[serve-loop] {name:>6}: {n} requests @ {offered}: "
+              f"p50={s['p50_ms']:.2f} ms  p99={s['p99_ms']:.2f} ms  "
+              f"throughput={s['rows_per_s']:,.0f} rows/s  "
+              f"(batches={s['n_batches']}, "
+              f"mean_fill={s['mean_batch_fill']:.1f}, "
+              f"pad_overhead={s['pad_overhead'] * 100:.0f}%, "
+              f"warmup {s['warmup_s']:.2f}s)")
+    ratio = rows["engine"]["rows_per_s"] / rows["interp"]["rows_per_s"]
+    print(f"[serve-loop] engine/interpreter throughput ratio: {ratio:.2f}x  "
+          f"all {n} responses bit-exact vs DaisProgram.run")
 
 
 if __name__ == "__main__":

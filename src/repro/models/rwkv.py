@@ -7,7 +7,7 @@ long_500k cell costs the same per token as a 1k context.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

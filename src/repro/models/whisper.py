@@ -9,7 +9,7 @@ precomputed once into the cache at prefill).
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,7 @@ pays full-length KV for the handful of attention applications.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

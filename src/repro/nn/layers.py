@@ -7,7 +7,7 @@ cast back — standard mixed-precision hygiene for bf16 activations.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

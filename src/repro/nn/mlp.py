@@ -10,13 +10,12 @@ loss, exactly as the paper's hybrid models treat their matmul layers.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.ebops import ebops_mac
-from repro.core.quant import QuantConfig, bitwidth, fake_quant, init_quantizer
+from repro.core.quant import QuantConfig, bitwidth, fake_quant
 from repro.nn.layers import activation_fn
 from repro.nn.params import PDef
 

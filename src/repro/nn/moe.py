@@ -16,7 +16,7 @@ Design choices for TPU + SPMD (vs the GPU-style ragged all-to-all):
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

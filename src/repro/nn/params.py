@@ -16,7 +16,7 @@ Keeping init and sharding derived from one structure is what makes the
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,6 @@ parser, hence to the roofline's collective term).
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Tuple
 
 import jax

@@ -20,9 +20,10 @@ combination compiles and fits HBM for every (arch × shape) cell.
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.nn.params import PDef, is_pdef
@@ -142,6 +143,24 @@ def shard_batch(x, mesh: Mesh):
     """
     spec = P(batch_dim_spec(x.shape[0], mesh), *([None] * (x.ndim - 1)))
     return jax.device_put(x, NamedSharding(mesh, spec))
+
+
+def pad_batch(x, n_rows: int):
+    """Zero-pad dim 0 of a host batch up to ``n_rows``.
+
+    The serving scheduler coalesces requests into power-of-two buckets so the
+    jit cache stays small and every bucket size divides the DP axes of any
+    power-of-two mesh; this is the padding step (zero codes are always valid
+    inputs — the integer engines accept any in-range code and padded rows are
+    simply dropped at scatter time).
+    """
+    if x.shape[0] > n_rows:
+        raise ValueError(f"batch of {x.shape[0]} rows does not fit a "
+                         f"{n_rows}-row bucket")
+    if x.shape[0] == n_rows:
+        return x
+    pad = [(0, n_rows - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+    return np.pad(np.asarray(x), pad)
 
 
 def heads_shardable(n_heads: int, mesh: Mesh) -> bool:

@@ -1,0 +1,29 @@
+"""Serving subsystem: the compiled integer artifact as a long-running service.
+
+``kernels/lut_serve.py`` turned the verified :class:`~repro.core.dais.DaisProgram`
+into a jitted accelerator engine; this package turns that engine into a
+service:
+
+* :mod:`repro.serve.scheduler` — async micro-batching: individual requests
+  are coalesced into padded power-of-two batches under a latency deadline
+  and scattered back to per-request futures,
+* :mod:`repro.serve.artifact` — persistent compiled-artifact bundles:
+  program + pre-composed fused tables + bit-exactness attestation in one
+  atomic, content-hashed ``.npz``, so a restart cold-starts without
+  re-lowering or re-verifying.
+
+``launch/serve.py --serve-loop`` / ``--artifact`` are the entry points;
+``docs/serving.md`` documents the request lifecycle and bundle format.
+"""
+
+from repro.serve.artifact import (ArtifactError, LoadedArtifact,
+                                  build_engine, load_artifact, save_artifact)
+from repro.serve.scheduler import (BatcherConfig, InterpreterBackend,
+                                   MicroBatcher, bucket_ladder,
+                                   drive_open_loop)
+
+__all__ = [
+    "ArtifactError", "LoadedArtifact", "build_engine", "load_artifact",
+    "save_artifact", "BatcherConfig", "InterpreterBackend", "MicroBatcher",
+    "bucket_ladder", "drive_open_loop",
+]

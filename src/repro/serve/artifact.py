@@ -1,0 +1,194 @@
+"""Persistent compiled-artifact bundles: lower once, cold-start forever.
+
+``launch/serve.py --engine tables`` used to re-run the whole pipeline on
+every invocation — extract tables, lower to DAIS, compose the fused
+per-layer tables, and re-prove bit-exactness — even when the model had not
+changed.  A bundle captures everything after the expensive steps in one
+atomic ``.npz``:
+
+* ``prog/*``  — the serialized :class:`~repro.core.dais.DaisProgram`
+  (``DaisProgram.to_arrays`` wire format: instructions, register formats,
+  segments, truth tables),
+* ``fused/*`` — the pre-composed per-layer tables + masks
+  (:class:`~repro.kernels.lut_serve.FusedStages`), when the program fuses,
+* ``meta_json`` — format version, the **content hash**, and the
+  ``verify_engine`` **attestation** (gate statistics recorded when the
+  bundle was written).
+
+The content hash is a SHA-256 over every data array (name, dtype, shape,
+bytes) *and* the canonical JSON of the remaining metadata — attestation
+included; :func:`load_artifact` always recomputes it and refuses a bundle
+whose stored hash does not match.  This makes bundles **tamper-evident**
+against bit-rot, truncation, partial writes, and naive edits (including
+edits to the stored attestation), which is the failure class
+``--skip-verify-cached`` needs closed: the hash ties the gate statistics
+to the exact bytes that passed the gate.  It is *not* an authentication
+boundary — the digest lives in the file it protects, so an adversary with
+write access can rewrite both payload and hash; keyed signatures are a
+deployment concern layered above this format.  When that matters, leave
+``--skip-verify-cached`` off and the loaded engine is re-gated like a
+fresh compile.
+
+Writes are atomic via the ``ckpt/store`` idiom — serialize to
+``<path>.tmp``, then ``os.replace`` — so a crash mid-save never leaves a
+half-written bundle where a cold start would find it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import zipfile
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.dais import DaisProgram
+from repro.kernels.lut_serve import (FusedStages, ServeEngine,
+                                     compile_program, compose_fused_stages)
+
+FORMAT_VERSION = 1
+
+
+class ArtifactError(RuntimeError):
+    """Bundle is unreadable, wrong version, or fails its content hash."""
+
+
+def content_hash(arrays: Dict[str, np.ndarray]) -> str:
+    """Order-independent SHA-256 over named arrays (dtype+shape+bytes)."""
+    h = hashlib.sha256()
+    for name in sorted(arrays):
+        a = np.ascontiguousarray(arrays[name])
+        h.update(name.encode())
+        h.update(str(a.dtype).encode())
+        h.update(repr(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def _bundle_digest(arrays: Dict[str, np.ndarray], meta_core: dict) -> str:
+    """Integrity digest: data arrays + canonical JSON of the core metadata.
+
+    Folding the metadata in means the attestation is tamper-evident too —
+    an edited ``meta_json`` with an unchanged data payload still fails the
+    check.  (Evident, not proof against an adversary who rewrites the
+    stored hash as well — see the module docstring.)
+    """
+    h = hashlib.sha256()
+    h.update(content_hash(arrays).encode())
+    h.update(json.dumps(meta_core, sort_keys=True).encode())
+    return h.hexdigest()
+
+
+def _data_arrays(prog: DaisProgram,
+                 stages: Optional[FusedStages]) -> Dict[str, np.ndarray]:
+    arrays = {f"prog/{k}": v for k, v in prog.to_arrays().items()}
+    if stages is not None:
+        arrays["fused/in_cols"] = np.asarray(stages.in_cols, np.int64)
+        arrays["fused/n_stages"] = np.asarray([stages.n_stages()], np.int64)
+        for k, (table, mask) in enumerate(zip(stages.tables, stages.masks)):
+            arrays[f"fused/table{k}"] = np.asarray(table, np.int64)
+            arrays[f"fused/mask{k}"] = np.asarray(mask, np.int64)
+    return arrays
+
+
+def save_artifact(path: str, prog: DaisProgram, *,
+                  stages: Optional[FusedStages] = None,
+                  compose: bool = True,
+                  attestation: Optional[dict] = None) -> str:
+    """Write an atomic bundle; returns its content hash.
+
+    ``stages``: pass the already-composed fused tables if the caller built
+    an engine anyway; with ``compose=True`` (default) they are composed here
+    when omitted — programs that don't fit the fused pattern simply store no
+    ``fused/*`` payload and rebuild on the generic path.
+
+    ``attestation``: the dict returned by ``verify_engine`` — stored in the
+    bundle metadata as the proof-of-verification that
+    ``--skip-verify-cached`` trusts.
+    """
+    if stages is None and compose:
+        stages = compose_fused_stages(prog)
+    arrays = _data_arrays(prog, stages)
+    meta_core = {
+        "format_version": FORMAT_VERSION,
+        "fused": stages is not None,
+        "attestation": attestation,
+    }
+    digest = _bundle_digest(arrays, meta_core)
+    meta = {**meta_core, "content_hash": digest}
+    arrays["meta_json"] = np.frombuffer(
+        json.dumps(meta, sort_keys=True).encode(), np.uint8)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+    return digest
+
+
+@dataclasses.dataclass
+class LoadedArtifact:
+    prog: DaisProgram
+    stages: Optional[FusedStages]
+    meta: dict
+    content_hash: str    # recomputed at load == meta["content_hash"]
+
+    @property
+    def attestation(self) -> Optional[dict]:
+        return self.meta.get("attestation")
+
+
+def load_artifact(path: str) -> LoadedArtifact:
+    """Read + integrity-check a bundle.
+
+    Raises :class:`ArtifactError` when the file is missing a payload, has an
+    unknown format version, or — the tamper case — the recomputed content
+    hash of the data arrays differs from the one recorded at save time.
+    """
+    try:
+        with np.load(path) as z:
+            arrays = {k: z[k] for k in z.files}
+    except (OSError, ValueError, zipfile.BadZipFile) as e:
+        raise ArtifactError(f"cannot read artifact bundle {path!r}: {e}")
+    if "meta_json" not in arrays:
+        raise ArtifactError(f"{path!r} has no meta_json — not a bundle")
+    meta = json.loads(bytes(arrays.pop("meta_json")).decode())
+    if meta.get("format_version") != FORMAT_VERSION:
+        raise ArtifactError(
+            f"{path!r}: format_version {meta.get('format_version')} "
+            f"(this reader understands {FORMAT_VERSION})")
+    meta_core = {k: v for k, v in meta.items() if k != "content_hash"}
+    digest = _bundle_digest(arrays, meta_core)
+    if digest != meta.get("content_hash"):
+        raise ArtifactError(
+            f"{path!r}: content hash mismatch — bundle was modified after "
+            f"save (stored {meta.get('content_hash')!r}, actual {digest!r}); "
+            f"refusing to serve it")
+
+    prog = DaisProgram.from_arrays(
+        {k[len("prog/"):]: v for k, v in arrays.items()
+         if k.startswith("prog/")})
+    stages = None
+    if meta.get("fused"):
+        n = int(arrays["fused/n_stages"][0])
+        stages = FusedStages(
+            tables=[arrays[f"fused/table{k}"] for k in range(n)],
+            masks=[arrays[f"fused/mask{k}"] for k in range(n)],
+            in_cols=arrays["fused/in_cols"])
+    return LoadedArtifact(prog=prog, stages=stages, meta=meta,
+                          content_hash=digest)
+
+
+def build_engine(art: LoadedArtifact, *, mesh=None,
+                 jit: bool = True) -> ServeEngine:
+    """Engine from a loaded bundle — no re-lowering, no table composition.
+
+    The stored ``fused/*`` stages (when present) go straight into
+    ``compile_program(stages=...)``; the serialized program still rides
+    along for metadata, dtype sizing, and the generic fallback path.
+    """
+    return compile_program(art.prog, mesh=mesh, jit=jit,
+                           fuse_layers=True, stages=art.stages)

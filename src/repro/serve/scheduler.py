@@ -1,0 +1,337 @@
+"""Async micro-batching scheduler for the integer serving engine.
+
+The engines of ``kernels/lut_serve.py`` are batch processors: one jitted
+call over ``(B, n_inputs)`` codes.  Production traffic is the opposite shape
+— many independent single-row requests arriving at random times.  This
+module bridges the two with the standard micro-batching loop:
+
+    submit() -> queue -> collector coalesces -> pad to bucket -> engine
+                                                   -> scatter to futures
+
+* **Coalescing** — a collector thread drains the request queue and flushes
+  when either the batch is full (``max_batch`` rows) or the *oldest* pending
+  request has waited ``max_delay_ms`` (the latency deadline).  Requests that
+  arrive while a flush is in flight simply accumulate for the next one.
+* **Power-of-two buckets** — every flush is zero-padded
+  (``parallel.sharding.pad_batch``) up to the next power of two, so the jit
+  cache holds at most ``log2(max_batch)+1`` entries and every bucket size
+  divides the DP axes of a power-of-two mesh.  :meth:`MicroBatcher.start`
+  warms the whole ladder through ``ServeEngine.warm`` so steady state never
+  pays a trace.
+* **Splitting** — a backlog larger than ``max_batch`` is flushed as several
+  consecutive ``max_batch`` chunks (plus one padded remainder), preserving
+  arrival order within the flush.
+* **Scatter** — each request holds a ``concurrent.futures.Future``; the
+  worker that ran a chunk writes row ``k`` of the engine output to the
+  ``k``-th future of that chunk.  Because results travel by future, not by
+  position in a shared output stream, correctness is independent of
+  *completion* order — with ``n_workers > 1`` a later small chunk may finish
+  before an earlier large one and nothing is misrouted (tier-1 tested).
+
+The scheduler is engine-agnostic: anything with ``run((B, n) int codes) ->
+(B, m)`` and an ``n_inputs`` attribute serves, which the tests use to
+inject blocking/slow engines for the edge cases.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import List, Optional
+
+import numpy as np
+
+from repro.parallel.sharding import pad_batch
+
+
+def bucket_ladder(max_batch: int) -> List[int]:
+    """Power-of-two bucket sizes ``[1, 2, 4, ..., max_batch]``."""
+    if max_batch < 1 or max_batch & (max_batch - 1):
+        raise ValueError(f"max_batch must be a power of two, got {max_batch}")
+    return [1 << k for k in range(max_batch.bit_length())]
+
+
+def bucket_for(n: int, max_batch: int) -> int:
+    """Smallest ladder bucket holding ``n`` rows (n <= max_batch)."""
+    b = 1
+    while b < n:
+        b <<= 1
+    return min(b, max_batch)
+
+
+@dataclasses.dataclass
+class BatcherConfig:
+    max_batch: int = 256        # largest bucket (power of two)
+    max_delay_ms: float = 2.0   # deadline: oldest request never waits longer
+    n_workers: int = 1          # engine-call threads (>1 => overlapped flushes)
+    warmup: bool = True         # trace every bucket size at start()
+
+
+class _Request:
+    __slots__ = ("codes", "future", "t_enqueue")
+
+    def __init__(self, codes: np.ndarray):
+        self.codes = codes
+        self.future: Future = Future()
+        self.t_enqueue = time.monotonic()
+
+
+_STOP = object()
+
+
+class InterpreterBackend:
+    """``DaisProgram.run`` behind the ServeEngine duck-type.
+
+    The baseline the scheduler comparisons swap in: same queue, same
+    buckets, same scatter — only the batch processor differs, so a
+    "scheduler throughput" number is service-path vs service-path.
+    """
+
+    def __init__(self, prog):
+        self._prog = prog
+        self.n_inputs = len(prog.input_f)
+
+    def run(self, x):
+        return self._prog.run(x)
+
+
+def compare_under_load(prog, engine, codes, config: "BatcherConfig",
+                       rates) -> List[dict]:
+    """Engine vs interpreter behind the *identical* scheduler, under load.
+
+    The one load-comparison harness shared by ``launch/serve.py
+    --serve-loop`` and ``benchmarks/serve_bench.py``: for every offered
+    rate (req/s; 0 = max-rate burst) it runs the open-loop driver twice —
+    once with ``engine``, once with :class:`InterpreterBackend` over
+    ``prog`` — asserts both response sets bit-exact against
+    ``prog.run(codes)``, and returns one stats row per (rate × backend):
+    the :meth:`MicroBatcher.stats` fields plus ``backend``,
+    ``offered_rate``, ``n_requests``, ``rows_per_s``, ``wall_s``, and
+    ``warmup_s``.
+    """
+    ref = np.asarray(prog.run(codes), np.int64)
+    rows = []
+    for rate in rates:
+        for name, backend in (("engine", engine),
+                              ("interp", InterpreterBackend(prog))):
+            batcher = MicroBatcher(backend, config)
+            t0 = time.monotonic()
+            batcher.start()
+            warmup_s = time.monotonic() - t0
+            out, wall = drive_open_loop(batcher, codes, rate)
+            batcher.stop()
+            if not np.array_equal(out.astype(np.int64), ref):
+                raise AssertionError(
+                    f"scheduler/{name} responses diverged from "
+                    f"DaisProgram.run — refusing to report its numbers")
+            s = batcher.stats()
+            s.update(backend=name, offered_rate=float(rate),
+                     rows_per_s=len(codes) / wall, wall_s=wall,
+                     warmup_s=warmup_s)
+            rows.append(s)
+    return rows
+
+
+def drive_open_loop(batcher: "MicroBatcher", codes, rate: float):
+    """Submit each row of ``codes`` on a fixed arrival schedule.
+
+    ``rate`` requests/s, independent of completions (open loop, so queueing
+    delay lands in the latency tail instead of throttling the driver);
+    ``rate <= 0`` submits everything at once (max-rate burst — measures
+    service capacity).  Returns ``(results, wall_seconds)``.
+    """
+    t0 = time.monotonic()
+    futures = []
+    for k, row in enumerate(codes):
+        if rate > 0:
+            delay = (t0 + k / rate) - time.monotonic()
+            if delay > 0:
+                time.sleep(delay)
+        futures.append(batcher.submit(row))
+    out = np.stack([f.result(timeout=120) for f in futures])
+    return out, time.monotonic() - t0
+
+
+class MicroBatcher:
+    """Queue-in, future-out micro-batching front end for a ServeEngine."""
+
+    def __init__(self, engine, config: Optional[BatcherConfig] = None):
+        self.engine = engine
+        self.config = config or BatcherConfig()
+        bucket_ladder(self.config.max_batch)  # validate power of two
+        self._queue: "queue.Queue" = queue.Queue()
+        self._collector: Optional[threading.Thread] = None
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._closed = False
+        self._lock = threading.Lock()
+        self._latencies_s: List[float] = []
+        self._batch_fill: List[int] = []
+        self._batch_bucket: List[int] = []
+
+    # ------------------------------------------------------------- lifecycle
+    def start(self) -> "MicroBatcher":
+        if self._collector is not None:
+            raise RuntimeError("scheduler already started")
+        if self.config.warmup and hasattr(self.engine, "warm"):
+            self.engine.warm(bucket_ladder(self.config.max_batch))
+        self._closed = False           # a stopped batcher may be restarted
+        self._pool = ThreadPoolExecutor(
+            max_workers=max(self.config.n_workers, 1),
+            thread_name_prefix="serve-engine")
+        self._collector = threading.Thread(
+            target=self._collect_loop, name="serve-collector", daemon=True)
+        self._collector.start()
+        return self
+
+    def stop(self) -> None:
+        """Drain the queue, run the final flush, join all workers.
+
+        A request that races the shutdown (passed ``submit``'s closed check
+        just as stop ran) can land in the queue after the collector's final
+        drain; rather than stranding its future forever, the post-join sweep
+        here fails it loudly.
+        """
+        if self._collector is None:
+            return
+        self._closed = True
+        self._queue.put(_STOP)
+        self._collector.join()
+        self._pool.shutdown(wait=True)
+        self._collector = None
+        while True:
+            try:
+                item = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            if item is not _STOP:
+                item.future.set_exception(
+                    RuntimeError("scheduler stopped before request ran"))
+
+    def __enter__(self) -> "MicroBatcher":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ---------------------------------------------------------------- submit
+    def submit(self, codes) -> Future:
+        """Enqueue one request: (n_inputs,) integer codes -> Future of (m,).
+
+        Returns immediately; the future resolves to the request's own output
+        row once some micro-batch containing it has run.
+        """
+        codes = np.asarray(codes, np.int64)
+        if codes.ndim != 1 or codes.shape[0] != self.engine.n_inputs:
+            raise ValueError(
+                f"request must be ({self.engine.n_inputs},) codes, "
+                f"got shape {codes.shape}")
+        if self._closed or self._collector is None:
+            raise RuntimeError("scheduler is not running")
+        req = _Request(codes)
+        self._queue.put(req)
+        return req.future
+
+    def submit_many(self, codes) -> List[Future]:
+        """Enqueue each row of (N, n_inputs) as an independent request."""
+        return [self.submit(row) for row in np.asarray(codes, np.int64)]
+
+    # ------------------------------------------------------------- collector
+    def _collect_loop(self) -> None:
+        cfg = self.config
+        deadline = cfg.max_delay_ms / 1e3
+        pending: List[_Request] = []
+        stop = False
+        while not stop:
+            if not pending:
+                item = self._queue.get()           # idle: block indefinitely
+                if item is _STOP:
+                    break
+                pending.append(item)
+            # greedily drain the backlog that already arrived — under load
+            # the oldest deadline has usually passed, and flushing 1-row
+            # batches while the queue holds hundreds would waste every
+            # engine call (the split below handles > max_batch)
+            while not stop:
+                try:
+                    item = self._queue.get_nowait()
+                except queue.Empty:
+                    break
+                if item is _STOP:
+                    stop = True
+                else:
+                    pending.append(item)
+            # then fill until the batch is full or the oldest request's
+            # coalescing deadline expires
+            flush_at = pending[0].t_enqueue + deadline
+            while not stop and len(pending) < cfg.max_batch:
+                wait = flush_at - time.monotonic()
+                if wait <= 0:
+                    break
+                try:
+                    item = self._queue.get(timeout=wait)
+                except queue.Empty:
+                    break
+                if item is _STOP:
+                    stop = True
+                    break
+                pending.append(item)
+            # flush everything collected, in max_batch-sized chunks (split
+            # path for backlogs larger than the biggest bucket)
+            while pending:
+                chunk = pending[:cfg.max_batch]
+                pending = pending[cfg.max_batch:]
+                self._pool.submit(self._run_chunk, chunk)
+        # drain whatever raced the stop signal
+        final: List[_Request] = []
+        while True:
+            try:
+                item = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            if item is not _STOP:
+                final.append(item)
+        while final:
+            self._pool.submit(self._run_chunk, final[:cfg.max_batch])
+            final = final[cfg.max_batch:]
+
+    # ----------------------------------------------------------- engine call
+    def _run_chunk(self, chunk: List[_Request]) -> None:
+        try:
+            n = len(chunk)
+            bucket = bucket_for(n, self.config.max_batch)
+            x = pad_batch(np.stack([r.codes for r in chunk]), bucket)
+            out = np.asarray(self.engine.run(x))[:n]
+            done = time.monotonic()
+            with self._lock:
+                self._batch_fill.append(n)
+                self._batch_bucket.append(bucket)
+                self._latencies_s.extend(done - r.t_enqueue for r in chunk)
+            for k, req in enumerate(chunk):
+                req.future.set_result(out[k])
+        except BaseException as e:  # propagate to every caller, don't die
+            for req in chunk:
+                if not req.future.done():
+                    req.future.set_exception(e)
+
+    # ------------------------------------------------------------------ stats
+    def stats(self) -> dict:
+        """Latency/occupancy summary over everything served so far."""
+        with self._lock:
+            lat = np.asarray(self._latencies_s, np.float64)
+            fill = np.asarray(self._batch_fill, np.float64)
+            bucket = np.asarray(self._batch_bucket, np.float64)
+        if lat.size == 0:
+            return {"n_requests": 0, "n_batches": 0}
+        return {
+            "n_requests": int(lat.size),
+            "n_batches": int(fill.size),
+            "p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "max_ms": float(lat.max() * 1e3),
+            "mean_batch_fill": float(fill.mean()),
+            "mean_bucket": float(bucket.mean()),
+            "pad_overhead": float((bucket - fill).sum() / bucket.sum()),
+        }

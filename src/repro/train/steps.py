@@ -11,15 +11,14 @@ here knows the mesh size.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.ebops import BetaSchedule
-from repro.nn.params import PDef, init_params, param_shapes
+from repro.nn.params import init_params
 from repro.optim.adam import AdamConfig, adam_init, adam_update
 from repro.parallel import sharding as shd
 

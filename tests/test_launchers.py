@@ -36,6 +36,50 @@ def test_serve_launcher_tables_engine():
 
 
 @pytest.mark.slow
+def test_serve_launcher_artifact_cache_and_loop(tmp_path):
+    """Cold start from a saved bundle: second invocation skips lowering AND
+    (with --skip-verify-cached) the gate, then serves the async loop with
+    p50/p99 + throughput reporting."""
+    bundle = str(tmp_path / "model.npz")
+    common = [sys.executable, "-m", "repro.launch.serve", "--engine", "tables",
+              "--lut-dims", "8,6,3", "--lut-hidden", "4", "--smoke",
+              "--artifact", bundle]
+    r1 = subprocess.run(common + ["--batch", "64", "--gen", "1"],
+                        env=ENV, cwd=REPO, capture_output=True, text=True,
+                        timeout=600)
+    assert r1.returncode == 0, r1.stderr[-2000:]
+    assert "bit-exact gate PASSED" in r1.stdout
+    assert "artifact saved" in r1.stdout
+    assert os.path.exists(bundle)
+
+    r2 = subprocess.run(common + ["--skip-verify-cached", "--serve-loop",
+                                  "--rate", "0", "--requests", "96",
+                                  "--max-batch", "16"],
+                        env=ENV, cwd=REPO, capture_output=True, text=True,
+                        timeout=600)
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    assert "artifact loaded" in r2.stdout
+    assert "no re-lowering" in r2.stdout
+    assert "gate SKIPPED: cached attestation" in r2.stdout
+    for token in ("p50=", "p99=", "throughput=", "bit-exact vs"):
+        assert token in r2.stdout, r2.stdout
+
+    # tampered bundle must be refused outright
+    import numpy as np
+    with np.load(bundle) as z:
+        arrays = {k: z[k].copy() for k in z.files}
+    key = next(k for k in arrays if k.startswith("fused/table"))
+    arrays[key][0, 0, 0] ^= 1
+    np.savez(bundle, **arrays)
+    r3 = subprocess.run(common + ["--skip-verify-cached", "--batch", "16",
+                                  "--gen", "1"],
+                        env=ENV, cwd=REPO, capture_output=True, text=True,
+                        timeout=600)
+    assert r3.returncode != 0
+    assert "hash mismatch" in (r3.stderr + r3.stdout)
+
+
+@pytest.mark.slow
 def test_train_launcher_smoke():
     r = subprocess.run(
         [sys.executable, "-m", "repro.launch.train", "--arch", "rwkv6_16b",

@@ -1,0 +1,215 @@
+"""Compiled-artifact bundles: round-trip exactness + tamper rejection.
+
+The bundle contract (ISSUE 3): ``save → load → build_engine`` must be
+bit-exact against both the freshly compiled engine and the DAIS
+interpreter — on random inputs and exhaustively for small widths — and a
+bundle whose bytes changed after save (tables, program, or the stored
+attestation itself) must be rejected via the content hash before it can
+reach the engine.
+"""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.dais import DaisProgram, compile_sequential
+from repro.core.hgq_layers import HGQDense
+from repro.core.lut_layers import LUTDense
+from repro.core.quant import QuantConfig
+from repro.kernels.lut_serve import (compile_program, input_code_bounds,
+                                     verify_engine)
+from repro.serve.artifact import (ArtifactError, build_engine, load_artifact,
+                                  save_artifact)
+
+KEY = jax.random.PRNGKey(23)
+IN_F, IN_I = 4, 2
+
+
+def _lut_stack(dims=(6, 5, 3), hidden=4, key=KEY):
+    layers = [LUTDense(ci, co, hidden=hidden, use_batchnorm=(k == 0))
+              for k, (ci, co) in enumerate(zip(dims[:-1], dims[1:]))]
+    keys = jax.random.split(key, len(layers))
+    params = [l.init(k) for l, k in zip(layers, keys)]
+    return compile_sequential(layers, params, IN_F, IN_I)
+
+
+def _narrow_cfg(overflow):
+    return QuantConfig(granularity="element", signed=True, overflow=overflow,
+                      init_f=1.0, init_i=1.0, min_f=-2, max_f=2,
+                      min_i=-2, max_i=2)
+
+
+# --------------------------------------------------------------------------- #
+# DaisProgram wire format round trip
+# --------------------------------------------------------------------------- #
+def test_program_arrays_round_trip_lut():
+    prog = _lut_stack()
+    prog2 = DaisProgram.from_arrays(prog.to_arrays())
+    assert [(i.op, i.args) for i in prog2.instrs] == \
+           [(i.op, i.args) for i in prog.instrs]
+    assert prog2.outputs == prog.outputs
+    assert prog2.input_f == prog.input_f
+    assert prog2.input_signed == prog.input_signed
+    assert prog2.output_f == prog.output_f
+    assert prog2.segments == prog.segments
+    for lid, t in prog.tables.items():
+        t2 = prog2.tables[lid]
+        for fld in ("f_in", "i_in", "f_out", "i_out",
+                    "in_width", "out_width", "codes"):
+            np.testing.assert_array_equal(getattr(t2, fld), getattr(t, fld))
+    lo, hi = input_code_bounds(prog)
+    codes = np.random.default_rng(0).integers(lo, hi + 1, (128, len(lo)))
+    np.testing.assert_array_equal(prog2.run(codes), prog.run(codes))
+
+
+def test_program_arrays_round_trip_hybrid():
+    """HGQ layers exercise CONST/CMUL/ADD/SAT-REQUANT arg shapes too."""
+    h1 = HGQDense(5, 4, activation="relu")
+    l1 = LUTDense(4, 3, hidden=4)
+    k1, k2 = jax.random.split(KEY)
+    prog = compile_sequential([h1, l1], [h1.init(k1), l1.init(k2)],
+                              IN_F, IN_I)
+    prog2 = DaisProgram.from_arrays(prog.to_arrays())
+    assert [(i.op, i.args) for i in prog2.instrs] == \
+           [(i.op, i.args) for i in prog.instrs]
+    lo, hi = input_code_bounds(prog)
+    codes = np.random.default_rng(1).integers(lo, hi + 1, (128, len(lo)))
+    np.testing.assert_array_equal(prog2.run(codes), prog.run(codes))
+
+
+def test_from_arrays_rejects_unknown_version():
+    arrays = _lut_stack().to_arrays()
+    arrays["version"] = np.asarray([99], np.int64)
+    with pytest.raises(ValueError, match="version"):
+        DaisProgram.from_arrays(arrays)
+
+
+# --------------------------------------------------------------------------- #
+# bundle round trip: save -> load -> run, bit-exact
+# --------------------------------------------------------------------------- #
+def test_bundle_round_trip_bit_exact_random(tmp_path):
+    prog = _lut_stack()
+    fresh = compile_program(prog)
+    gate = verify_engine(fresh, prog, n_random=256)
+    path = str(tmp_path / "model.npz")
+    digest = save_artifact(path, prog, attestation=gate)
+
+    art = load_artifact(path)
+    assert art.content_hash == digest == art.meta["content_hash"]
+    assert art.attestation["random"] == 256
+    assert art.stages is not None            # pure LUT chain fuses
+    loaded = build_engine(art)
+    assert loaded.fused
+
+    lo, hi = input_code_bounds(prog)
+    codes = np.random.default_rng(2).integers(lo, hi + 1, (512, len(lo)))
+    ref = prog.run(codes)
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(loaded.run(codes)), np.int64), ref)
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(fresh.run(codes)), np.int64), ref)
+
+
+def test_bundle_round_trip_bit_exact_exhaustive(tmp_path):
+    """Narrow widths -> the loaded engine passes the full exhaustive gate."""
+    layer = LUTDense(3, 4, hidden=4,
+                     q_in=_narrow_cfg("WRAP"), q_out=_narrow_cfg("SAT"))
+    prog = compile_sequential([layer], [layer.init(jax.random.PRNGKey(7))],
+                              1, 1)
+    path = str(tmp_path / "small.npz")
+    save_artifact(path, prog)
+    loaded = build_engine(load_artifact(path))
+    stats = verify_engine(loaded, prog, n_random=64, exhaustive_limit=1024)
+    assert stats["exhaustive"] == 512        # 8**3 input cross-product
+
+
+def test_bundle_without_fused_payload_falls_back(tmp_path):
+    """Hybrid programs store no fused stages; the loaded engine still runs
+    bit-exactly on the generic group path."""
+    h1 = HGQDense(5, 4, activation="relu")
+    l1 = LUTDense(4, 3, hidden=4)
+    k1, k2 = jax.random.split(KEY)
+    prog = compile_sequential([h1, l1], [h1.init(k1), l1.init(k2)],
+                              IN_F, IN_I)
+    path = str(tmp_path / "hybrid.npz")
+    save_artifact(path, prog)
+    art = load_artifact(path)
+    assert art.stages is None
+    loaded = build_engine(art)
+    assert not loaded.fused
+    verify_engine(loaded, art.prog, n_random=256)
+
+
+# --------------------------------------------------------------------------- #
+# tampering: any post-save modification fails the content hash
+# --------------------------------------------------------------------------- #
+def _rewrite(path, mutate):
+    with np.load(path) as z:
+        arrays = {k: z[k].copy() for k in z.files}
+    mutate(arrays)
+    np.savez(path, **arrays)
+
+
+def test_tampered_table_rejected(tmp_path):
+    prog = _lut_stack()
+    path = str(tmp_path / "model.npz")
+    save_artifact(path, prog)
+
+    def flip_table_entry(arrays):
+        key = next(k for k in arrays if k.startswith("prog/table")
+                   and k.endswith("codes"))
+        arrays[key][0, 0, 0] += 1
+    _rewrite(path, flip_table_entry)
+    with pytest.raises(ArtifactError, match="hash mismatch"):
+        load_artifact(path)
+
+
+def test_tampered_fused_stage_rejected(tmp_path):
+    prog = _lut_stack()
+    path = str(tmp_path / "model.npz")
+    save_artifact(path, prog)
+
+    def flip_fused(arrays):
+        arrays["fused/table0"][0, 0, 0] ^= 1
+    _rewrite(path, flip_fused)
+    with pytest.raises(ArtifactError, match="hash mismatch"):
+        load_artifact(path)
+
+
+def test_forged_attestation_rejected(tmp_path):
+    """--skip-verify-cached trusts the stored attestation, so editing it
+    (without touching a single data array) must still fail the hash."""
+    prog = _lut_stack()
+    path = str(tmp_path / "model.npz")
+    save_artifact(path, prog, attestation={"random": 16, "exhaustive": 0})
+
+    def forge(arrays):
+        meta = json.loads(bytes(arrays["meta_json"]).decode())
+        meta["attestation"]["random"] = 10**9      # "trust me"
+        arrays["meta_json"] = np.frombuffer(
+            json.dumps(meta, sort_keys=True).encode(), np.uint8)
+    _rewrite(path, forge)
+    with pytest.raises(ArtifactError, match="hash mismatch"):
+        load_artifact(path)
+
+
+def test_unreadable_and_versioned_bundles_rejected(tmp_path):
+    garbage = tmp_path / "garbage.npz"
+    garbage.write_bytes(b"not an npz at all")
+    with pytest.raises(ArtifactError, match="cannot read"):
+        load_artifact(str(garbage))
+
+    prog = _lut_stack()
+    path = str(tmp_path / "model.npz")
+    save_artifact(path, prog)
+
+    def bump_version(arrays):
+        meta = json.loads(bytes(arrays["meta_json"]).decode())
+        meta["format_version"] = 99
+        arrays["meta_json"] = np.frombuffer(
+            json.dumps(meta, sort_keys=True).encode(), np.uint8)
+    _rewrite(path, bump_version)
+    with pytest.raises(ArtifactError, match="format_version"):
+        load_artifact(str(path))

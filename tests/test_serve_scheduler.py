@@ -1,0 +1,269 @@
+"""Micro-batching scheduler: coalescing, deadlines, splits, scatter order.
+
+The scheduler contract (ISSUE 3): individually submitted requests are
+coalesced into padded power-of-two buckets under a latency deadline, run
+through the engine, and scattered back so every future resolves to *its
+own* row — regardless of how the flushes were chunked, which worker ran
+them, or in what order they completed.  The edge cases here use small fake
+engines with controllable blocking so each scenario is deterministic; the
+final test closes the loop against the real jitted integer engine.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.serve.scheduler import (BatcherConfig, MicroBatcher, bucket_for,
+                                   bucket_ladder)
+
+
+class EchoEngine:
+    """Deterministic per-row transform — scatter errors become visible."""
+
+    def __init__(self, n_inputs=4):
+        self.n_inputs = n_inputs
+
+    def run(self, x):
+        x = np.asarray(x, np.int64)
+        return x * 7 + np.arange(x.shape[1])[None, :]
+
+
+class GateEngine(EchoEngine):
+    """Blocks every run() until released — freezes a flush mid-flight."""
+
+    def __init__(self, n_inputs=4):
+        super().__init__(n_inputs)
+        self.release = threading.Event()
+        self.calls = []
+
+    def run(self, x):
+        self.release.wait(timeout=30)
+        self.calls.append(np.asarray(x).shape[0])
+        return super().run(x)
+
+
+def _expected(codes):
+    return EchoEngine().run(np.atleast_2d(codes))
+
+
+# --------------------------------------------------------------------------- #
+# bucket math
+# --------------------------------------------------------------------------- #
+def test_bucket_ladder_and_rounding():
+    assert bucket_ladder(8) == [1, 2, 4, 8]
+    assert [bucket_for(n, 8) for n in (1, 2, 3, 5, 8)] == [1, 2, 4, 8, 8]
+    with pytest.raises(ValueError, match="power of two"):
+        bucket_ladder(12)
+    with pytest.raises(ValueError, match="power of two"):
+        MicroBatcher(EchoEngine(), BatcherConfig(max_batch=10))
+
+
+# --------------------------------------------------------------------------- #
+# deadline expiry with a partially-filled bucket
+# --------------------------------------------------------------------------- #
+def test_partial_bucket_flushes_at_deadline():
+    cfg = BatcherConfig(max_batch=64, max_delay_ms=150.0, warmup=False)
+    with MicroBatcher(EchoEngine(), cfg) as mb:
+        codes = np.arange(12, dtype=np.int64).reshape(3, 4)
+        futs = mb.submit_many(codes)
+        t0 = time.monotonic()
+        res = np.stack([f.result(timeout=10) for f in futs])
+        waited = time.monotonic() - t0
+    np.testing.assert_array_equal(res, _expected(codes))
+    s = mb.stats()
+    # 3 requests nowhere near max_batch=64: exactly one flush, padded to the
+    # power-of-two bucket above it, released by the deadline (not a full
+    # batch), after the oldest request waited ~max_delay_ms
+    assert s["n_batches"] == 1
+    assert s["mean_batch_fill"] == 3.0
+    assert s["mean_bucket"] == 4.0
+    assert waited >= 0.10
+
+
+# --------------------------------------------------------------------------- #
+# request arriving during an in-flight flush
+# --------------------------------------------------------------------------- #
+def test_request_during_flush_joins_next_batch():
+    eng = GateEngine()
+    cfg = BatcherConfig(max_batch=8, max_delay_ms=5.0, warmup=False)
+    with MicroBatcher(eng, cfg) as mb:
+        first = mb.submit(np.asarray([1, 2, 3, 4], np.int64))
+        time.sleep(0.05)            # flush 1 dispatched, blocked in run()
+        assert not first.done()
+        second = mb.submit(np.asarray([5, 6, 7, 8], np.int64))
+        time.sleep(0.05)            # arrives while flush 1 is in flight
+        eng.release.set()
+        r1 = first.result(timeout=10)
+        r2 = second.result(timeout=10)
+    np.testing.assert_array_equal(r1, _expected([1, 2, 3, 4])[0])
+    np.testing.assert_array_equal(r2, _expected([5, 6, 7, 8])[0])
+    assert mb.stats()["n_batches"] == 2      # second was not lost nor merged
+
+
+# --------------------------------------------------------------------------- #
+# backlog larger than the max bucket is split
+# --------------------------------------------------------------------------- #
+def test_oversized_backlog_splits_into_max_batch_chunks():
+    eng = GateEngine()
+    cfg = BatcherConfig(max_batch=8, max_delay_ms=2.0, warmup=False)
+    rng = np.random.default_rng(0)
+    codes = rng.integers(-50, 50, (21, 4))
+    with MicroBatcher(eng, cfg) as mb:
+        probe = mb.submit(codes[0])           # occupies the single worker
+        time.sleep(0.05)
+        futs = mb.submit_many(codes[1:])      # 20 requests pile up behind it
+        time.sleep(0.05)
+        eng.release.set()
+        res = np.stack([probe.result(timeout=10)]
+                       + [f.result(timeout=10) for f in futs])
+    np.testing.assert_array_equal(res, _expected(codes))
+    # the 20-request backlog flushed as 8 + 8 + 4, preserving arrival order
+    assert eng.calls[0] == 1
+    assert sorted(eng.calls[1:]) == [4, 8, 8]
+    assert mb.stats()["n_requests"] == 21
+
+
+# --------------------------------------------------------------------------- #
+# scatter correctness under out-of-order completion
+# --------------------------------------------------------------------------- #
+def test_scatter_correct_when_batches_complete_out_of_order():
+    class FirstCallSlowEngine(EchoEngine):
+        def __init__(self):
+            super().__init__()
+            self._first = True
+            self.done_order = []
+
+        def run(self, x):
+            slow = self._first
+            self._first = False
+            if slow:
+                time.sleep(0.4)
+            out = super().run(x)
+            self.done_order.append(np.asarray(x).shape[0])
+            return out
+
+    eng = FirstCallSlowEngine()
+    cfg = BatcherConfig(max_batch=4, max_delay_ms=1.0, n_workers=2,
+                        warmup=False)
+    with MicroBatcher(eng, cfg) as mb:
+        a = mb.submit_many(np.arange(16, dtype=np.int64).reshape(4, 4))
+        time.sleep(0.1)             # batch A dispatched to worker 1 (slow)
+        b = mb.submit_many(np.arange(100, 108, dtype=np.int64).reshape(2, 4))
+        res_b = np.stack([f.result(timeout=10) for f in b])
+        done_b = time.monotonic()
+        assert not a[0].done()      # B finished while A still in flight
+        res_a = np.stack([f.result(timeout=10) for f in a])
+        done_a = time.monotonic()
+    assert done_b < done_a
+    assert eng.done_order[0] == 2   # batch B (2 rows) completed first
+    np.testing.assert_array_equal(
+        res_a, _expected(np.arange(16).reshape(4, 4)))
+    np.testing.assert_array_equal(
+        res_b, _expected(np.arange(100, 108).reshape(2, 4)))
+
+
+# --------------------------------------------------------------------------- #
+# lifecycle + input validation
+# --------------------------------------------------------------------------- #
+def test_submit_validates_shape_and_lifecycle():
+    mb = MicroBatcher(EchoEngine(), BatcherConfig(warmup=False))
+    with pytest.raises(RuntimeError, match="not running"):
+        mb.submit(np.zeros(4, np.int64))
+    mb.start()
+    with pytest.raises(ValueError, match="codes"):
+        mb.submit(np.zeros(3, np.int64))           # wrong width
+    with pytest.raises(ValueError, match="codes"):
+        mb.submit(np.zeros((2, 4), np.int64))      # not a single row
+    f = mb.submit(np.ones(4, np.int64))
+    mb.stop()                                      # drains before joining
+    np.testing.assert_array_equal(f.result(timeout=10), _expected(np.ones((1, 4)))[0])
+    with pytest.raises(RuntimeError, match="not running"):
+        mb.submit(np.zeros(4, np.int64))
+    assert mb.stats()["n_requests"] == 1
+
+
+def test_restart_after_stop_serves_again():
+    mb = MicroBatcher(EchoEngine(), BatcherConfig(warmup=False))
+    mb.start()
+    f1 = mb.submit(np.ones(4, np.int64))
+    mb.stop()
+    f1.result(timeout=10)
+    mb.start()                                     # stopped != dead
+    f2 = mb.submit(np.full(4, 2, np.int64))
+    mb.stop()
+    np.testing.assert_array_equal(
+        f2.result(timeout=10), _expected(np.full((1, 4), 2))[0])
+    assert mb.stats()["n_requests"] == 2
+
+
+def test_stop_never_strands_concurrent_submits():
+    """A submit racing stop() must end in a result or an exception —
+    never a forever-pending future (the check-then-put TOCTOU window)."""
+    mb = MicroBatcher(EchoEngine(), BatcherConfig(max_delay_ms=1.0,
+                                                  warmup=False))
+    mb.start()
+    futures = []
+    done = threading.Event()
+
+    def hammer():
+        while not done.is_set():
+            try:
+                futures.append(mb.submit(np.ones(4, np.int64)))
+            except RuntimeError:
+                break
+
+    t = threading.Thread(target=hammer)
+    t.start()
+    time.sleep(0.05)
+    mb.stop()
+    done.set()
+    t.join()
+    assert futures
+    expected = _expected(np.ones((1, 4)))[0]
+    for f in futures:
+        try:
+            np.testing.assert_array_equal(f.result(timeout=5), expected)
+        except RuntimeError:
+            pass                      # "stopped before request ran" is fine
+
+
+def test_engine_failure_propagates_to_futures():
+    class BoomEngine(EchoEngine):
+        def run(self, x):
+            raise RuntimeError("boom")
+
+    with MicroBatcher(BoomEngine(), BatcherConfig(warmup=False)) as mb:
+        f = mb.submit(np.zeros(4, np.int64))
+        with pytest.raises(RuntimeError, match="boom"):
+            f.result(timeout=10)
+
+
+# --------------------------------------------------------------------------- #
+# end to end against the real jitted integer engine
+# --------------------------------------------------------------------------- #
+def test_real_engine_bit_exact_through_scheduler():
+    import jax
+
+    from repro.core.dais import compile_sequential
+    from repro.core.lut_layers import LUTDense
+    from repro.kernels.lut_serve import compile_program, input_code_bounds
+
+    layers = [LUTDense(6, 5, hidden=4, use_batchnorm=True),
+              LUTDense(5, 3, hidden=4)]
+    keys = jax.random.split(jax.random.PRNGKey(3), 2)
+    prog = compile_sequential(layers, [l.init(k) for l, k in zip(layers, keys)],
+                              4, 2)
+    engine = compile_program(prog)
+    lo, hi = input_code_bounds(prog)
+    codes = np.random.default_rng(5).integers(lo, hi + 1, (40, 6), np.int64)
+
+    cfg = BatcherConfig(max_batch=16, max_delay_ms=2.0, n_workers=2)
+    with MicroBatcher(engine, cfg) as mb:
+        futs = mb.submit_many(codes)
+        res = np.stack([f.result(timeout=60) for f in futs])
+    np.testing.assert_array_equal(res.astype(np.int64), prog.run(codes))
+    s = mb.stats()
+    assert s["n_requests"] == 40
+    assert s["mean_bucket"] <= cfg.max_batch

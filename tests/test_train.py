@@ -140,7 +140,6 @@ def test_hparams_from_cfg_env_override(monkeypatch):
 def test_beta_pressure_shrinks_bitwidths():
     """With large β, EBOPs must decrease over steps (bits get pruned)."""
     from repro.core.lut_layers import LUTDense
-    from repro.nn.base import merge_aux
     layer = LUTDense(8, 8, hidden=4)
     params = layer.init(jax.random.PRNGKey(0))
     opt = adam_init(params)
