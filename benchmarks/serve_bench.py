@@ -14,6 +14,12 @@ Writes ``BENCH_serve.json`` with, per LUT-Dense model:
   p50/p99 request latency and achieved throughput at a fixed offered rate
   and at max-rate burst, engine-backed vs numpy-interpreter-backed behind
   the *same* scheduler (service path vs service path).
+* **hybrid-program rows** — the paper's PID shape (HGQ conv frontend →
+  LUT convs → LUT head → window sum) through the graph frontend
+  (``core/lower.py``): the fused shared-table engine (tables composed once
+  per layer, gathered per spatial site) vs the generic levelized group
+  runner vs the interpreter.  Fusing hybrid programs instead of falling
+  back to the group runner is the perf win this row measures.
 
 Every engine measurement is gated: the benchmark refuses to time an engine
 that is not bit-exact against the interpreter on the same inputs.
@@ -40,6 +46,7 @@ from benchmarks.common import emit
 MODELS = [([16, 20, 5], 8), ([32, 32, 5], 8)]
 BATCH = 1024
 IN_F, IN_I = 4, 2
+HYBRID_CTX = 100      # pid-hybrid waveform context (smoke shrinks it)
 OUT_JSON = "BENCH_serve.json"
 
 # scheduler load points: offered req/s (0 = max-rate burst)
@@ -58,6 +65,16 @@ def _build(dims, hidden, seed=0):
     keys = jax.random.split(jax.random.PRNGKey(seed), len(layers))
     params = [l.init(k) for l, k in zip(layers, keys)]
     return compile_sequential(layers, params, IN_F, IN_I)
+
+
+def _build_hybrid(ctx, seed=0):
+    from repro.core.lower import lower
+    from repro.models.pid import (build_pid_graph, build_pid_layers,
+                                  init_pid_params)
+
+    layers = build_pid_layers()
+    params = init_pid_params(layers, jax.random.PRNGKey(seed))
+    return lower(build_pid_graph(layers, n_samples=ctx), [*params, None])
 
 
 def _bench_pair(prog, engines, codes, rounds: int = 25) -> dict:
@@ -82,6 +99,35 @@ def _bench_pair(prog, engines, codes, rounds: int = 25) -> dict:
             jax.block_until_ready(eng._runner(xs[name]))
             best[name] = min(best[name], time.perf_counter() - t0)
     return {k: v * 1e6 for k, v in best.items()}
+
+
+def _bench_engines(prog, codes, shape: str, *, rounds: int):
+    """Gate + bench the fused and generic engines against the interpreter.
+
+    The one engine-comparison block shared by the LUT-Dense rows and the
+    hybrid-program row: builds both lowerings, refuses to time either
+    unless it passes the bit-exactness gate, and returns
+    ``(row_fields, engines)`` with the ``engine_*_us``/``speedup_*``
+    columns plus the matching ``emit`` lines.
+    """
+    from repro.kernels.lut_serve import compile_program, verify_engine
+
+    engines = []
+    for name, fuse in (("fused", True), ("groups", False)):
+        eng = compile_program(prog, fuse_layers=fuse)
+        verify_engine(eng, prog, n_random=256)   # never bench a liar
+        engines.append((name, eng))
+    assert engines[0][1].path == "fused", engines[0][1].fuse_reason
+    us = _bench_pair(prog, engines, codes, rounds=rounds)
+    fields = {"interp_us": us["interp"]}
+    for name, _ in engines:
+        fields[f"engine_{name}_us"] = us[name]
+        fields[f"speedup_{name}"] = us["interp"] / us[name]
+        emit(f"serve/engine_{name}/{shape}", us[name],
+             f"speedup={us['interp'] / us[name]:.1f}x")
+    emit(f"serve/interp/{shape}", us["interp"],
+         f"n_instrs={prog.n_instrs()}")
+    return fields, engines
 
 
 def _bench_scheduler(prog, engine, shape: str, *, n_requests: int,
@@ -123,7 +169,7 @@ def _bench_scheduler(prog, engine, shape: str, *, n_requests: int,
 
 def run(smoke: bool = False) -> None:
     from repro.core.quant import quantize_to_int
-    from repro.kernels.lut_serve import compile_program, verify_engine
+    from repro.kernels.lut_serve import input_code_bounds
 
     models = MODELS[:1] if smoke else MODELS
     batch = 128 if smoke else BATCH
@@ -137,29 +183,26 @@ def run(smoke: bool = False) -> None:
         prog = _build(dims, hidden)
         codes = quantize_to_int(rng.normal(0.0, 2.0, (batch, dims[0])),
                                 IN_F, IN_I, True, "SAT")
-        engines = []
-        for name, fuse in (("fused", True), ("groups", False)):
-            eng = compile_program(prog, fuse_layers=fuse)
-            verify_engine(eng, prog, n_random=256)   # never bench a liar
-            engines.append((name, eng))
-        us = _bench_pair(prog, engines, codes, rounds=rounds)
-
-        row = {
-            "dims": dims, "hidden": hidden, "batch": batch,
-            "n_instrs": prog.n_instrs(),
-            "interp_us": us["interp"],
-        }
         shape = "x".join(map(str, dims))
-        for name, _ in engines:
-            row[f"engine_{name}_us"] = us[name]
-            row[f"speedup_{name}"] = us["interp"] / us[name]
-            emit(f"serve/engine_{name}/{shape}", us[name],
-                 f"speedup={us['interp'] / us[name]:.1f}x")
-        emit(f"serve/interp/{shape}", us["interp"],
-             f"n_instrs={prog.n_instrs()}")
+        fields, engines = _bench_engines(prog, codes, shape, rounds=rounds)
+        row = {"dims": dims, "hidden": hidden, "batch": batch,
+               "n_instrs": prog.n_instrs(), **fields}
         row["scheduler"] = _bench_scheduler(
             prog, engines[0][1], shape, n_requests=n_requests, rates=rates)
         results.append(row)
+
+    # hybrid conv program (graph frontend): fused shared-table engine vs
+    # generic group runner vs interpreter — the row that proves hybrids no
+    # longer pay the generic-path price
+    ctx = 40 if smoke else HYBRID_CTX
+    prog = _build_hybrid(ctx)
+    lo, hi = input_code_bounds(prog)
+    codes = rng.integers(lo, hi + 1, (batch, len(lo)))
+    fields, _engines = _bench_engines(prog, codes, f"hybrid_ctx{ctx}",
+                                      rounds=rounds)
+    results.append({"model": "pid-hybrid", "ctx": ctx, "batch": batch,
+                    "n_instrs": prog.n_instrs(),
+                    "n_shared_tables": len(prog.tables), **fields})
 
     if smoke:
         emit("serve/smoke_ok", 0.0, "json_not_written")

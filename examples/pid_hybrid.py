@@ -1,18 +1,26 @@
 """CEPC gas-detector PID via cluster counting (paper §V-F, Fig. 4-5).
 
-Hybrid architecture exactly as the paper prescribes: one conventional
-(matmul) conv layer projects each 20-sample ADC patch to 8 features —
-feeding 12-bit waveforms straight into LUT layers would blow the area
-budget — followed by LUT-Conv layers, a time-independent LUT head, and
-window-count accumulation.  Trained with a FIXED β = 1e-7 (single target
-design point, <10k LUTs).
+Hybrid architecture exactly as the paper prescribes (the canonical spec
+lives in ``repro.models.pid``): one conventional (matmul) conv layer
+projects each 20-sample ADC patch to 8 features — feeding 12-bit waveforms
+straight into LUT layers would blow the area budget — followed by LUT-Conv
+layers, a time-independent LUT head, and window-count accumulation.
+Trained with a FIXED β = 1e-7 (single target design point, <10k LUTs).
 
 The observable is the kaon/pion *separation power*
 S = (μ_K − μ_π) / ((σ_K + σ_π)/2) on the predicted cluster counts.
 
-Run:  PYTHONPATH=src python examples/pid_hybrid.py
+After training, the full deployment chain runs end-to-end: the hybrid
+graph lowers to one DAIS program (``core/lower.py`` — the conv layers
+share one table set across all spatial sites), the accelerator engine
+compiles on the fused shared-table path and passes the bit-exactness gate,
+the async micro-batching scheduler serves individual waveform requests
+bit-exactly, and the same program is emitted as Verilog.
+
+Run:  PYTHONPATH=src python examples/pid_hybrid.py [--smoke | --steps N]
 """
 
+import argparse
 import time
 
 import jax
@@ -20,27 +28,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.ebops import estimate_luts
-from repro.core.hgq_layers import HGQConv1D
-from repro.core.lut_layers import LUTConv1D, LUTDense
+from repro.core.lower import lower
+from repro.core.quant import int_to_float, quantize_to_int
+from repro.core.rtl import emit_verilog
 from repro.data.synthetic import cepc_waveform
+from repro.kernels.lut_serve import compile_program, verify_engine
+from repro.models.pid import IN_F, IN_I, build_pid_graph, build_pid_layers
 from repro.nn.base import merge_aux
 from repro.optim.adam import AdamConfig, adam_init, adam_update, cosine_restarts
 
-WINDOW = 20          # samples per DAQ cycle (256-bit bus / 12-bit samples)
-CTX = 60             # model sees 60 samples to predict one 20-sample window
-STEPS = 500
 BETA = 1e-7          # paper: fixed beta, budget < 10k LUTs
-N_TRAIN, N_TEST = 1200, 400
-LEN = 600            # shortened waveforms (same structure, CPU-friendly)
-
-
-def build():
-    front = HGQConv1D(c_in=1, c_out=8, kernel=WINDOW, stride=WINDOW,
-                      activation="relu")          # conventional conv frontend
-    lc1 = LUTConv1D(c_in=8, c_out=8, kernel=3, padding="SAME", hidden=8)
-    lc2 = LUTConv1D(c_in=8, c_out=4, kernel=3, padding="SAME", hidden=8)
-    head = LUTDense(4, 1, hidden=8)               # per-window count regressor
-    return front, lc1, lc2, head
 
 
 def forward(layers, params, wf, train):
@@ -54,23 +51,42 @@ def forward(layers, params, wf, train):
 
 
 def separation(pred_counts, species):
-    tot = pred_counts.sum(axis=1)
+    tot = np.asarray(pred_counts)
+    if tot.ndim > 1:
+        tot = tot.sum(axis=1)
     k, p = tot[species == 1], tot[species == 0]
     return (k.mean() - p.mean()) / ((k.std() + p.std()) / 2 + 1e-9)
 
 
-def main():
-    wf_tr, cnt_tr, sp_tr = cepc_waveform(0, N_TRAIN, LEN, "train")
-    wf_te, cnt_te, sp_te = cepc_waveform(0, N_TEST, LEN, "test")
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale run for CI: few steps, short "
+                         "waveforms, same end-to-end pipeline")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="override the training step count")
+    args = ap.parse_args(argv)
 
-    layers = build()
+    steps = args.steps if args.steps is not None else (8 if args.smoke else 500)
+    n_train, n_test = (96, 48) if args.smoke else (1200, 400)
+    wf_len = 200 if args.smoke else 600      # shortened waveforms (CPU-friendly)
+    ctx = 60 if args.smoke else 100          # compiled-program context samples
+    batch = 64 if args.smoke else 128
+
+    wf_tr, cnt_tr, sp_tr = cepc_waveform(0, n_train, wf_len, "train")
+    wf_te, cnt_te, sp_te = cepc_waveform(0, n_test, wf_len, "test")
+    # inputs arrive on the 12-bit unsigned ADC grid, as from the detector
+    wf_tr = int_to_float(quantize_to_int(wf_tr, IN_F, IN_I, False, "SAT"), IN_F)
+    wf_te = int_to_float(quantize_to_int(wf_te, IN_F, IN_I, False, "SAT"), IN_F)
+
+    layers = build_pid_layers()
     front, lc1, lc2, head = layers
     ks = jax.random.split(jax.random.PRNGKey(0), 4)
     params = {"front": front.init(ks[0]), "lc1": lc1.init(ks[1]),
               "lc2": lc2.init(ks[2]), "head": head.init(ks[3])}
     opt = adam_init(params)
     acfg = AdamConfig(lr=2e-3)
-    sched = cosine_restarts(2e-3, first_period=STEPS, warmup=20)
+    sched = cosine_restarts(2e-3, first_period=steps, warmup=min(20, steps // 2))
 
     @jax.jit
     def step(params, opt, wf, cnt):
@@ -84,14 +100,14 @@ def main():
 
     rng = np.random.default_rng(0)
     t0 = time.time()
-    for s in range(STEPS):
-        idx = rng.integers(0, N_TRAIN, 128)
+    for s in range(steps):
+        idx = rng.integers(0, n_train, batch)
         params, opt, mse, ebops = step(params, opt, jnp.asarray(wf_tr[idx]),
                                        jnp.asarray(cnt_tr[idx]))
         if s % 100 == 0:
             print(f"step {s:4d}  mse={float(mse):.4f}  ebops={float(ebops):.3g}",
                   flush=True)
-    print(f"training {time.time()-t0:.0f}s")
+    print(f"training {time.time()-t0:.0f}s for {steps} steps")
 
     pred, aux = forward(layers, params, jnp.asarray(wf_te), False)
     pred = np.asarray(pred)
@@ -104,7 +120,69 @@ def main():
           f"(paper budget: <10k)")
     resid = np.abs(pred.sum(1) - cnt_te.sum(1)).mean()
     print(f"mean |count error| per waveform: {resid:.2f}")
-    assert s_pred > 0.5 * s_true, "model separation too weak"
+    if not args.smoke:
+        assert s_pred > 0.5 * s_true, "model separation too weak"
+
+    # ---------------------------------------------- compile the hybrid graph
+    t0 = time.time()
+    graph = build_pid_graph(layers, n_samples=ctx)
+    params_list = [params["front"], params["lc1"], params["lc2"],
+                   params["head"], None]
+    prog = lower(graph, params_list)
+    n_llut = prog.count_ops().get("LLUT", 0)
+    n_cells = sum(t.n_luts() for t in prog.tables.values())
+    print(f"\nDAIS lowering ({ctx}-sample context): {time.time()-t0:.2f}s, "
+          f"{prog.n_instrs()} instrs, {len(prog.tables)} shared table sets "
+          f"({n_cells} live cells driving {n_llut} LLUT sites)")
+
+    # trained bit-widths can push transients past int32; the engine then
+    # needs the x64 path
+    if prog.required_width() > 30 and not jax.config.jax_enable_x64:
+        jax.config.update("jax_enable_x64", True)
+        print("(enabled x64: program needs "
+              f"{prog.required_width()}-bit transients)")
+
+    # ----------------------------- accelerator engine + bit-exactness gate
+    t0 = time.time()
+    engine = compile_program(prog)
+    gate = verify_engine(engine, prog, n_random=256 if args.smoke else 1024)
+    assert engine.path == "fused", engine.fuse_reason
+    print(f"engine: path={engine.path} ({engine.n_groups} shared-table "
+          f"stages), bit-exact gate PASSED on {gate['random']} random + "
+          f"{gate['exhaustive']} exhaustive rows ({time.time()-t0:.2f}s)")
+
+    # JAX eval vs compiled integers: the only deltas left are the frontend's
+    # float32 accumulation and the bias grid rounding — report them
+    ctx_wf = wf_te[:, :ctx]
+    jax_pred, _ = forward(layers, params, jnp.asarray(ctx_wf), False)
+    jax_counts = np.asarray(jax_pred, np.float64).sum(axis=1)
+    dais_counts = prog.run_float(ctx_wf)[:, 0]
+    dq = np.abs(jax_counts - dais_counts).max()
+    print(f"JAX eval vs DAIS integers on the {ctx}-sample context: "
+          f"max|Δ| = {dq:.3g} (bias grid rounding)")
+    assert dq < 0.5, "compiled program diverged from the trained model"
+
+    # --------------------------- serve individual requests, bit-exactly
+    from repro.serve.scheduler import BatcherConfig, MicroBatcher
+
+    codes = quantize_to_int(ctx_wf, IN_F, IN_I, False, "SAT")
+    ref = prog.run(codes)
+    with MicroBatcher(engine, BatcherConfig(max_batch=16)) as batcher:
+        futures = batcher.submit_many(codes)
+        out = np.stack([f.result(timeout=120) for f in futures])
+        stats = batcher.stats()
+    np.testing.assert_array_equal(out.astype(np.int64), ref)
+    print(f"scheduler served {stats['n_requests']} waveform requests "
+          f"bit-exactly: p50={stats['p50_ms']:.2f} ms "
+          f"p99={stats['p99_ms']:.2f} ms "
+          f"(batches={stats['n_batches']})")
+
+    # ------------------------------------------------------- emit Verilog
+    verilog = emit_verilog(prog, name="pid_hybrid")
+    path = "/tmp/pid_hybrid.v"
+    open(path, "w").write(verilog)
+    print(f"emitted Verilog: {path} ({len(verilog.splitlines())} lines, "
+          f"one case-function per shared table cell)")
 
 
 if __name__ == "__main__":

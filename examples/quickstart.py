@@ -7,9 +7,10 @@
 4. verify DAIS interpreter == JAX eval **bit-exactly**,
 5. report accuracy / EBOPs / estimated FPGA LUTs.
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  PYTHONPATH=src python examples/quickstart.py [--smoke | --steps N]
 """
 
+import argparse
 import time
 
 import jax
@@ -25,15 +26,25 @@ from repro.data.synthetic import jsc_hlf
 from repro.nn.base import merge_aux
 from repro.optim.adam import AdamConfig, adam_init, adam_update, cosine_restarts
 
-STEPS = 600
 BATCH = 1024
 IN_F, IN_I = 4, 3  # input fixed-point format (paper: no clamping needed)
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale run for CI: few steps, small data, "
+                         "same train -> compile -> verify pipeline")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="override the training step count")
+    args = ap.parse_args(argv)
+    steps = args.steps if args.steps is not None else (30 if args.smoke else 600)
+    n_train, n_test = (2000, 500) if args.smoke else (20000, 5000)
+    batch = 256 if args.smoke else BATCH
+
     # ---------------------------------------------------------------- data
-    xtr, ytr = jsc_hlf(seed=0, n=20000, split="train")
-    xte, yte = jsc_hlf(seed=0, n=5000, split="test")
+    xtr, ytr = jsc_hlf(seed=0, n=n_train, split="train")
+    xte, yte = jsc_hlf(seed=0, n=n_test, split="test")
     # inputs arrive pre-quantized, as they would from the detector front-end
     xtr = int_to_float(quantize_to_int(xtr, IN_F, IN_I, True, "SAT"), IN_F)
     xte = int_to_float(quantize_to_int(xte, IN_F, IN_I, True, "SAT"), IN_F)
@@ -45,9 +56,10 @@ def main():
     k1, k2 = jax.random.split(key)
     params = {"l1": l1.init(k1), "l2": l2.init(k2)}
     opt = adam_init(params)
-    beta = BetaSchedule(5e-7, 1e-4, STEPS)     # paper §V-A HLF JSC range
+    beta = BetaSchedule(5e-7, 1e-4, steps)     # paper §V-A HLF JSC range
     acfg = AdamConfig(lr=3e-3)
-    sched = cosine_restarts(3e-3, first_period=STEPS // 2, warmup=30)
+    sched = cosine_restarts(3e-3, first_period=max(steps // 2, 1),
+                            warmup=min(30, steps // 2))
 
     @jax.jit
     def step(params, opt, x, y, s):
@@ -67,13 +79,13 @@ def main():
 
     t0 = time.time()
     rng = np.random.default_rng(0)
-    for s in range(STEPS):
-        idx = rng.integers(0, len(xtr), BATCH)
+    for s in range(steps):
+        idx = rng.integers(0, len(xtr), batch)
         params, opt, ce, ebops = step(params, opt, jnp.asarray(xtr[idx]),
                                       jnp.asarray(ytr[idx]), jnp.asarray(s))
         if s % 100 == 0:
             print(f"step {s:4d}  ce={float(ce):.4f}  ebops={float(ebops):9.1f}")
-    print(f"training: {time.time()-t0:.1f}s for {STEPS} steps")
+    print(f"training: {time.time()-t0:.1f}s for {steps} steps")
 
     # ----------------------------------------------------- evaluate (JAX)
     h, _ = l1.apply(params["l1"], jnp.asarray(xte), train=False)

@@ -83,21 +83,27 @@ class OpGroup:
 
 @dataclasses.dataclass(frozen=True)
 class Segment:
-    """One lowered layer's span in the flat program (frontend metadata).
+    """One lowered (layer, spatial site)'s span in the flat program.
 
-    ``compile_sequential`` records a Segment per layer so backends can
-    recover the layer structure the SSA list flattens away: ``in_regs`` are
-    the registers the layer consumed (the previous segment's ``out_regs``,
-    or IN instructions for the first layer) and ``out_regs`` its per-channel
-    results.  The accelerator engine uses this to fuse a whole "lut" segment
-    into one pre-composed table gather; backends that don't understand a
-    segment can always fall back to the flat instruction list.
+    The graph frontend (``core/lower.py``) records a Segment per layer *and
+    per spatial site* so backends can recover the structure the SSA list
+    flattens away: ``in_regs`` are the registers the site consumed (a patch
+    of the previous layer's ``out_regs``, IN instructions, or zero-pad
+    CONSTs) and ``out_regs`` its per-channel results.  All ``n_sites``
+    segments of one convolutional layer share ``layer_id`` — and therefore
+    one entry in ``DaisProgram.tables`` — which is the FPGA weight-sharing
+    story: one table set per layer, many LLUT instructions.  The accelerator
+    engine uses this to compose each layer's tables once and gather
+    per-site; backends that don't understand a segment can always fall back
+    to the flat instruction list.
     """
 
-    kind: str                    # "lut" | "hgq"
+    kind: str                    # "lut" | "hgq" | "acc" | "relu"
     layer_id: int
     in_regs: Tuple[int, ...]
     out_regs: Tuple[int, ...]
+    site: int = 0                # spatial site index within the layer
+    n_sites: int = 1             # sites sharing tables[layer_id]
 
 
 @dataclasses.dataclass
@@ -289,13 +295,23 @@ class DaisProgram:
 # Stable enumerations of the wire format — append-only: the artifact cache
 # (repro/serve/artifact.py) content-hashes the arrays produced here, so
 # reordering an existing entry would silently invalidate every saved bundle.
+#
+# Version history (``from_arrays`` negotiates all of them):
+#   1 — flat sequential programs; seg_meta is (n, 4): kind, layer_id,
+#       n_in, n_out (one segment per layer).
+#   2 — graph-lowered programs; seg_meta grows to (n, 6) with the spatial
+#       ``site``/``n_sites`` columns, and segment kinds "acc"/"relu" exist.
+#       Shared conv tables need no new arrays: many segments simply point
+#       at the same ``table{lid}_*`` entry (stored once — the dedup).
 _OP_CODES: Tuple[str, ...] = ("IN", "CONST", "REQUANT", "LLUT", "CMUL",
                               "ADD", "SUB")
 _MODE_CODES: Tuple[str, ...] = ("", "SAT", "WRAP")
-_SEG_KINDS: Tuple[str, ...] = ("lut", "hgq")
+_SEG_KINDS: Tuple[str, ...] = ("lut", "hgq", "acc", "relu")
 _TABLE_FIELDS: Tuple[str, ...] = ("f_in", "i_in", "f_out", "i_out",
                                   "in_width", "out_width", "codes")
 _MAX_ARGS = 6  # REQUANT is the widest op: (src, f, i, signed, mode, src_f)
+WIRE_VERSION = 2
+_WIRE_VERSIONS = (1, 2)
 
 
 def _program_to_arrays(prog: "DaisProgram") -> Dict[str, np.ndarray]:
@@ -315,14 +331,15 @@ def _program_to_arrays(prog: "DaisProgram") -> Dict[str, np.ndarray]:
 
     # segments: fixed-width metadata + one concatenated register list
     seg_meta = np.asarray(
-        [[_SEG_KINDS.index(s.kind), s.layer_id, len(s.in_regs), len(s.out_regs)]
-         for s in prog.segments], np.int64).reshape(-1, 4)
+        [[_SEG_KINDS.index(s.kind), s.layer_id, len(s.in_regs),
+          len(s.out_regs), s.site, s.n_sites]
+         for s in prog.segments], np.int64).reshape(-1, 6)
     seg_regs = np.asarray(
         [r for s in prog.segments for r in (*s.in_regs, *s.out_regs)],
         np.int64)
 
     out = {
-        "version": np.asarray([1], np.int64),
+        "version": np.asarray([WIRE_VERSION], np.int64),
         "instr_op": op, "instr_nargs": nargs, "instr_args": args,
         "instr_reg": reg,
         "outputs": np.asarray(prog.outputs, np.int64),
@@ -341,8 +358,10 @@ def _program_to_arrays(prog: "DaisProgram") -> Dict[str, np.ndarray]:
 
 def _program_from_arrays(arrays: Dict[str, np.ndarray]) -> "DaisProgram":
     version = int(np.asarray(arrays["version"]).ravel()[0])
-    if version != 1:
-        raise ValueError(f"unknown DaisProgram wire-format version {version}")
+    if version not in _WIRE_VERSIONS:
+        raise ValueError(
+            f"unknown DaisProgram wire-format version {version} "
+            f"(this reader understands {_WIRE_VERSIONS})")
     prog = DaisProgram()
     op, nargs = arrays["instr_op"], arrays["instr_nargs"]
     args, reg = arrays["instr_args"], arrays["instr_reg"]
@@ -361,12 +380,18 @@ def _program_from_arrays(arrays: Dict[str, np.ndarray]) -> "DaisProgram":
     prog.output_f = [int(f) for f in arrays["output_f"]]
     cursor = 0
     seg_regs = arrays["seg_regs"]
-    for kind, lid, n_in, n_out in np.asarray(arrays["seg_meta"], np.int64):
+    seg_meta = np.asarray(arrays["seg_meta"], np.int64)
+    if version == 1:  # v1 segments predate the site axis: one site per layer
+        pad = np.broadcast_to(np.asarray([0, 1], np.int64),
+                              (seg_meta.shape[0], 2))
+        seg_meta = np.concatenate([seg_meta, pad], axis=1)
+    for kind, lid, n_in, n_out, site, n_sites in seg_meta:
         regs = [int(r) for r in seg_regs[cursor:cursor + n_in + n_out]]
         cursor += n_in + n_out
         prog.segments.append(Segment(
             kind=_SEG_KINDS[int(kind)], layer_id=int(lid),
-            in_regs=tuple(regs[:n_in]), out_regs=tuple(regs[n_in:])))
+            in_regs=tuple(regs[:n_in]), out_regs=tuple(regs[n_in:]),
+            site=int(site), n_sites=int(n_sites)))
     for lid in arrays["table_ids"]:
         fields = {fld: np.asarray(arrays[f"table{int(lid)}_{fld}"])
                   for fld in _TABLE_FIELDS}
@@ -415,142 +440,18 @@ def _tree_add(prog: DaisProgram, regs: List[int], f: int) -> int:
 
 
 # --------------------------------------------------------------------------- #
-# frontend: compile a Sequential of LUT/HGQ layers into a DAIS program
+# frontend: lives in core/lower.py (graph lowering with a per-layer-type
+# registry); this wrapper keeps the historical import path working.
 # --------------------------------------------------------------------------- #
 def compile_sequential(layers: Sequence, params_list: Sequence[dict],
                        input_f: int, input_i: int,
                        input_signed: bool = True) -> DaisProgram:
-    """Lower a list of (LUTDense | HGQDense) layers to DAIS.
+    """Lower a flat list of (LUTDense | HGQDense) layers to DAIS.
 
-    The float input is assumed pre-quantized to (input_f, input_i); each
-    layer's quantizers then govern all internal grids, matching the HGQ →
-    da4ml flow of Fig. 1.
+    Compatibility wrapper over the graph frontend —
+    ``repro.core.lower.lower`` is the general entry point (convs, hybrid
+    architectures, structural ops); this builds the trivial chain graph.
     """
-    from repro.core.hgq_layers import HGQDense
-    from repro.core.lut_layers import LUTDense
-    from repro.core.quant import int_bits
-    from repro.core.tables import extract_tables
+    from repro.core.lower import compile_sequential as _impl
 
-    prog = DaisProgram()
-    c_in = layers[0].c_in
-    prog.input_f = [input_f] * c_in
-    prog.input_signed = [input_signed] * c_in
-    in_w = input_f + input_i + (1 if input_signed else 0)
-    regs = [prog.emit("IN", (k,), Reg(input_f, in_w, input_signed))
-            for k in range(c_in)]
-
-    for lid, (layer, params) in enumerate(zip(layers, params_list)):
-        in_regs = list(regs)
-        if isinstance(layer, LUTDense):
-            regs = _lower_lut_dense(prog, lid, layer, params, regs)
-            kind = "lut"
-        elif isinstance(layer, HGQDense):
-            regs = _lower_hgq_dense(prog, lid, layer, params, regs)
-            kind = "hgq"
-        else:
-            raise TypeError(f"cannot lower layer type {type(layer)}")
-        prog.segments.append(Segment(kind=kind, layer_id=lid,
-                                     in_regs=tuple(in_regs),
-                                     out_regs=tuple(regs)))
-
-    prog.outputs = regs
-    prog.output_f = [prog.instrs[r].reg.f for r in regs]
-    return prog
-
-
-def _lower_lut_dense(prog: DaisProgram, lid: int, layer, params, in_regs) -> List[int]:
-    from repro.core.tables import extract_tables
-
-    t = extract_tables(layer, params)
-    prog.tables[lid] = t
-    F = t.common_f_out()
-    out_regs: List[int] = []
-    for i in range(t.c_out):
-        terms: List[int] = []
-        for j in range(t.c_in):
-            m = int(t.in_width[j, i])
-            n = int(t.out_width[j, i])
-            if m <= 0 or n <= 0:
-                continue  # pruned cell
-            src = in_regs[j]
-            rq = prog.emit(
-                "REQUANT",
-                (src, int(t.f_in[j, i]), int(t.i_in[j, i]), True, "WRAP",
-                 prog.instrs[src].reg.f),
-                Reg(int(t.f_in[j, i]), m, True))
-            lu = prog.emit("LLUT", (rq, lid, j, i), Reg(int(t.f_out[j, i]), n, True))
-            if int(t.f_out[j, i]) != F:
-                lu = prog.emit("CMUL", (lu, 1 << (F - int(t.f_out[j, i])), 0),
-                               Reg(F, n + F - int(t.f_out[j, i]), True))
-            terms.append(lu)
-        if not terms:  # fully pruned output
-            out_regs.append(prog.emit("CONST", (0,), Reg(F, 1, True)))
-        else:
-            out_regs.append(_tree_add(prog, terms, F))
-    return out_regs
-
-
-def _lower_hgq_dense(prog: DaisProgram, lid: int, layer, params, in_regs) -> List[int]:
-    """Lower an HGQ dense layer: per-element constant multiplies + adds.
-
-    Activation quantizer grids come from q_a; weights use their per-element
-    (f, i).  Nonlinear activations other than relu are not representable in
-    plain DAIS (da4ml would emit them as L-LUTs); relu is lowered as a
-    saturating REQUANT with lo clamped at 0 via the unsigned grid.
-    """
-    import numpy as np
-
-    from repro.core.quant import int_bits, quantize_to_int
-
-    fa, ia = int_bits(params["q_a"], layer.q_a)
-    fw, iw = int_bits(params["q_w"], layer.q_w)
-    fa = np.broadcast_to(fa, (layer.c_in,))
-    ia = np.broadcast_to(ia, (layer.c_in,))
-    w = np.asarray(params["w"], np.float64)
-    w_codes = quantize_to_int(w, fw, iw, layer.q_w.signed, layer.q_w.overflow)
-    bias = np.asarray(params.get("b", np.zeros(layer.c_out)), np.float64)
-
-    ka = 1 if layer.q_a.signed else 0
-    # quantize inputs once per j
-    act_regs = []
-    for j in range(layer.c_in):
-        src = in_regs[j]
-        wdt = int(fa[j] + ia[j] + ka)
-        act_regs.append(prog.emit(
-            "REQUANT",
-            (src, int(fa[j]), int(ia[j]), layer.q_a.signed,
-             layer.q_a.overflow, prog.instrs[src].reg.f),
-            Reg(int(fa[j]), max(wdt, 1), layer.q_a.signed)))
-
-    out_regs: List[int] = []
-    for i in range(layer.c_out):
-        F = int(max((fw[j, i] + fa[j]) for j in range(layer.c_in)))
-        terms: List[int] = []
-        for j in range(layer.c_in):
-            code = int(w_codes[j, i])
-            if code == 0:
-                continue
-            f_prod = int(fw[j, i] + fa[j])
-            wdt = prog.instrs[act_regs[j]].reg.width + \
-                max(abs(code).bit_length() + 1, 1)
-            r = prog.emit("CMUL", (act_regs[j], code, int(fw[j, i])),
-                          Reg(f_prod, wdt, True))
-            if f_prod != F:
-                r = prog.emit("CMUL", (r, 1 << (F - f_prod), 0),
-                              Reg(F, wdt + F - f_prod, True))
-            terms.append(r)
-        b_code = int(np.round(bias[i] * 2.0 ** F))
-        b_width = max(abs(b_code).bit_length() + 1, 1)
-        if b_code != 0 or not terms:
-            terms.append(prog.emit("CONST", (b_code,), Reg(F, b_width, True)))
-        acc = _tree_add(prog, terms, F)
-        if layer.activation == "relu":
-            # relu == clamp to the non-negative grid of the same precision
-            wdt = prog.instrs[acc].reg.width
-            acc = prog.emit("REQUANT", (acc, F, max(wdt - F, 1), False, "SAT", F),
-                            Reg(F, wdt, False))
-        elif layer.activation is not None:
-            raise NotImplementedError(
-                f"activation {layer.activation!r} needs an L-LUT lowering")
-        out_regs.append(acc)
-    return out_regs
+    return _impl(layers, params_list, input_f, input_i, input_signed)

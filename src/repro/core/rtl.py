@@ -8,6 +8,14 @@ tool's job (the paper relies on global retiming).  We cannot run Vivado in
 this environment, so this backend is exercised only for well-formedness
 (emit + structural checks) — bit-exact verification happens at the DAIS
 interpreter level instead (Fig. 1's "DAIS-level simulation" path).
+
+Shared conv tables: the graph frontend (``core/lower.py``) stores one
+``LayerTables`` per layer no matter how many spatial sites the layer has,
+so this backend emits **one function per live table cell** and every site's
+LLUT instruction simply *instantiates* (calls) it — the Verilog mirror of
+the FPGA weight-sharing story.  Unsigned registers (relu outputs, unsigned
+activation grids) are declared as unsigned wires and zero-extended where
+they feed signed arithmetic.
 """
 
 from __future__ import annotations
@@ -21,23 +29,45 @@ def _w(reg) -> int:
     return max(reg.width, 1)
 
 
+def _decl(prog: DaisProgram, ridx: int) -> str:
+    reg = prog.instrs[ridx].reg
+    sign = "signed " if reg.signed else ""
+    return f"  wire {sign}[{_w(reg)-1}:0] r{ridx}"
+
+
+def _ref(prog: DaisProgram, ridx: int) -> str:
+    """Reference a register inside signed arithmetic (zero-extend unsigned)."""
+    if prog.instrs[ridx].reg.signed:
+        return f"r{ridx}"
+    return f"$signed({{1'b0, r{ridx}}})"
+
+
 def emit_verilog(prog: DaisProgram, name: str = "hgq_lut_model") -> str:
     lines: List[str] = []
     n_in = len(prog.input_f)
-    n_out = len(prog.outputs)
     in_w = [max(prog.instrs[k].reg.width, 1) for k in range(n_in)]
 
-    ports = [f"    input  wire signed [{in_w[k]-1}:0] in_{k}" for k in range(n_in)]
-    ports += [
-        f"    output wire signed [{_w(prog.instrs[r].reg)-1}:0] out_{k}"
-        for k, r in enumerate(prog.outputs)
-    ]
+    ports = []
+    for k in range(n_in):
+        sign = "signed " if prog.input_signed[k] else ""
+        ports.append(f"    input  wire {sign}[{in_w[k]-1}:0] in_{k}")
+    for k, r in enumerate(prog.outputs):
+        reg = prog.instrs[r].reg
+        sign = "signed " if reg.signed else ""
+        ports.append(f"    output wire {sign}[{_w(reg)-1}:0] out_{k}")
     lines.append(f"module {name} (")
     lines.append(",\n".join(ports))
     lines.append(");")
 
-    # truth tables as functions
+    # one function per live table cell, shared by every site that calls it
+    n_sites = {}
+    for seg in prog.segments:
+        if seg.kind == "lut":
+            n_sites[seg.layer_id] = max(n_sites.get(seg.layer_id, 1),
+                                        seg.n_sites)
     for lid, t in prog.tables.items():
+        lines.append(f"  // layer {lid}: {t.n_luts()} shared table functions"
+                     f", instantiated at {n_sites.get(lid, 1)} site(s)")
         for j in range(t.c_in):
             for i in range(t.c_out):
                 m = int(t.in_width[j, i])
@@ -58,7 +88,7 @@ def emit_verilog(prog: DaisProgram, name: str = "hgq_lut_model") -> str:
 
     for ridx, ins in enumerate(prog.instrs):
         w = _w(ins.reg)
-        decl = f"  wire signed [{w-1}:0] r{ridx}"
+        decl = _decl(prog, ridx)
         op, a = ins.op, ins.args
         if op == "IN":
             lines.append(f"{decl} = in_{a[0]};")
@@ -67,12 +97,12 @@ def emit_verilog(prog: DaisProgram, name: str = "hgq_lut_model") -> str:
             lines.append(f"{decl} = {w}'d{code};")
         elif op == "REQUANT":
             src, f, i, signed, mode, src_f = a
-            sw = _w(prog.instrs[src].reg)
             shift = f - src_f
             if shift >= 0:
-                expr = f"(r{src} <<< {shift})"
+                expr = f"({_ref(prog, src)} <<< {shift})"
             else:
-                expr = f"(r{src} >>> {-shift})"  # truncation; rounding folded upstream
+                # truncation; rounding folded upstream
+                expr = f"({_ref(prog, src)} >>> {-shift})"
             if mode == "SAT":
                 width = f + i + (1 if signed else 0)
                 hi = (1 << (width - 1)) - 1 if signed else (1 << width) - 1
@@ -87,10 +117,19 @@ def emit_verilog(prog: DaisProgram, name: str = "hgq_lut_model") -> str:
             lines.append(f"{decl} = llut_{lid}_{j}_{i}(r{src}[{m-1}:0]);")
         elif op == "CMUL":
             src, code, _f = a
-            lines.append(f"{decl} = r{src} * $signed({code});")
+            lines.append(f"{decl} = {_ref(prog, src)} * $signed({code});")
         elif op in ("ADD", "SUB"):
+            # align operands onto the common grid f = max(fa, fb), exactly
+            # as the interpreter does (dais.run) — mixed-grid adds are legal
             sym = "+" if op == "ADD" else "-"
-            lines.append(f"{decl} = r{a[0]} {sym} r{a[1]};")
+            fa = prog.instrs[a[0]].reg.f
+            fb = prog.instrs[a[1]].reg.f
+            f = max(fa, fb)
+            ea = _ref(prog, a[0]) if f == fa else \
+                f"({_ref(prog, a[0])} <<< {f - fa})"
+            eb = _ref(prog, a[1]) if f == fb else \
+                f"({_ref(prog, a[1])} <<< {f - fb})"
+            lines.append(f"{decl} = {ea} {sym} {eb};")
         else:
             raise ValueError(op)
 

@@ -113,9 +113,39 @@ class LayerTables:
         live = (self.in_width > 0) & (self.out_width > 0)
         return int(self.f_out[live].max()) if live.any() else 0
 
+    def gather_params(self, x_f):
+        """``(in_shift, mask, out_shift)`` for batched-gather evaluation.
 
-def extract_tables(layer: LUTDense, params: dict) -> LayerTables:
-    """Enumerate all input codes of every cell through the trained MLPs."""
+        The one derivation shared by every gather-style backend
+        (``lookup_codes``'s jax port ``kernels.lut_serve.lower_tables`` and
+        the fused serving stage): requantize input ``j`` onto cell
+        ``(j, i)``'s grid with ``in_shift = f_in - x_f``, index with the
+        WRAP ``mask = entry_sizes() - 1``, then align heterogeneous output
+        grids with ``out_shift = max(common_f_out() - f_out, 0)`` — the
+        clamp matters because a *pruned* cell (codes all 0) may keep an
+        ``f_out`` above the common grid of the live cells.
+        """
+        xf = np.broadcast_to(np.asarray(x_f, np.int64), (self.c_in,))
+        in_shift = (self.f_in - xf[:, None]).astype(np.int64)
+        mask = (self.entry_sizes() - 1).astype(np.int64)
+        out_shift = np.maximum(self.common_f_out() - self.f_out,
+                               0).astype(np.int64)
+        return in_shift, mask, out_shift
+
+
+def extract_tables(layer, params: dict) -> LayerTables:
+    """Enumerate all input codes of every cell through the trained MLPs.
+
+    Accepts ``LUTDense`` or any conv wrapper exposing a ``dense`` view
+    (``LUTConv1D/2D``): a convolution's cells are exactly its dense
+    equivalent's ``(kernel*C_in, C_out)`` grid, extracted **once** and
+    shared by every spatial site of the lowered program.
+    """
+    if not isinstance(layer, LUTDense):
+        dense = getattr(layer, "dense", None)
+        if not isinstance(dense, LUTDense):
+            raise TypeError(f"cannot extract truth tables from {type(layer)}")
+        layer = dense
     f_in, i_in = int_bits(params["q_in"], layer.q_in)
     f_out, i_out = int_bits(params["q_out"], layer.q_out)
     k_in = 1 if layer.q_in.signed else 0

@@ -9,18 +9,25 @@ also the artifact we serve.
 
 Lowering strategy
 -----------------
-Two paths, picked automatically:
+Two paths, picked automatically (``ServeEngine.path`` reports which ran;
+a fallback to the generic path logs its reason and records it on
+``ServeEngine.fuse_reason``):
 
-1. **Fused per-layer path** (programs that are a closed chain of "lut"
-   segments, i.e. anything from ``compile_sequential`` over LUT-Dense
-   stacks): for every cell, the whole REQUANT → LLUT → align-CMUL chain is
-   a pure function of one input register's integer code, so it is
-   pre-composed at compile time into a single table indexed by the code's
-   two's-complement bits.  A layer then runs as three array ops — mask,
-   batched gather, Σ over C_in — which is where the ≥10× over the numpy
-   interpreter comes from (``benchmarks/serve_bench.py``).
+1. **Fused per-layer path** (chains of per-site segments from the graph
+   frontend ``core/lower.py`` — LUT-Dense stacks, LUT/HGQ convs, hybrid
+   models, window accumulation): every layer becomes one
+   :class:`FusedStage`.  The layer's tables are composed **once** and
+   shared by all spatial sites — a "lut" layer keeps its
+   :class:`~repro.core.tables.LayerTables` and runs as per-site gather →
+   requant → batched table gather → Σ; an "hgq" layer's per-cell
+   REQUANT → CMUL → align chains are enumerated over all input codes into
+   an equivalent table (relu folds into a vectorized epilogue); window
+   sums and standalone relus become table-free gather/sum stages.  The op
+   count scales with model *depth*, not instruction count — the ≥10× over
+   the numpy interpreter in ``benchmarks/serve_bench.py``.
 
-2. **Generic group path** (anything else, e.g. hybrid HGQ programs):
+2. **Generic group path** (anything the composer rejects — non-chain
+   dataflow, un-enumerable operand widths, exotic instruction shapes):
    ``DaisProgram.schedule()`` levelizes the SSA program and batches mutually
    independent same-op instructions into :class:`~repro.core.dais.OpGroup`\\ s.
    Each group becomes a handful of array ops over ``(B, n_columns)`` values:
@@ -55,14 +62,17 @@ Values are int32 when every register *and transient* fits
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+import logging
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dais import DaisProgram, OpGroup
+from repro.core.dais import DaisProgram, OpGroup, _requant
 from repro.core.tables import LayerTables
+
+logger = logging.getLogger(__name__)
 
 # int32 holds any value chain whose declared register width is <= 30 bits:
 # REQUANT's 2**width span and the wrap offset ``code - lo`` both stay under
@@ -139,6 +149,8 @@ class ServeEngine:
     n_groups: int               # op groups (generic) or layer stages (fused)
     dtype: object
     fused: bool                 # True: pre-composed per-layer table path
+    path: str                   # "fused" | "generic" — which lowering ran
+    fuse_reason: str            # why the fused path was skipped ("" if fused)
     input_f: List[int]
     input_signed: List[bool]
     input_widths: np.ndarray    # (n_inputs,) physical code widths
@@ -213,6 +225,11 @@ def compile_program(prog: DaisProgram, *, mesh=None,
     register values is sharded over its DP axes via
     ``parallel.sharding.constrain`` (the program itself is replicated: it is
     weights, i.e. a few KB of tables and shift constants).
+
+    The chosen lowering is recorded on ``ServeEngine.path`` ("fused" /
+    "generic"); a fall-back from the fused path is never silent — its
+    reason is logged and kept on ``ServeEngine.fuse_reason`` so tests and
+    benchmarks can assert which path ran and why.
     """
     if dtype is None:
         # required_width covers transient pre-clamp REQUANT / pre-add align
@@ -222,16 +239,27 @@ def compile_program(prog: DaisProgram, *, mesh=None,
     in_instrs = [ins for ins in prog.instrs if ins.op == "IN"]
     input_widths = np.asarray([ins.reg.width for ins in in_instrs], np.int64)
 
-    run, n_groups, fused = None, 0, False
+    run, n_groups, reason = None, 0, "fused path disabled (fuse_layers=False)"
     if fuse_layers:
-        run, n_groups = _try_fused_runner(prog, dtype, mesh, stages=stages)
-        fused = run is not None
+        if stages is None:
+            stages, reason = compose_fused_stages(prog, dtype)
+        else:
+            reason = ""
+        if stages is not None:
+            run, n_groups = _fused_runner(stages, dtype, mesh), stages.n_stages()
+    fused = run is not None
     if run is None:
+        if fuse_layers:
+            logger.warning(
+                "fused lowering unavailable (%s); using the generic "
+                "levelized group runner", reason)
         run, n_groups = _group_runner(prog, dtype, mesh)
 
     return ServeEngine(
         n_inputs=len(prog.input_f), n_outputs=len(prog.outputs),
         n_instrs=prog.n_instrs(), n_groups=n_groups, dtype=dtype, fused=fused,
+        path="fused" if fused else "generic",
+        fuse_reason="" if fused else reason,
         input_f=list(prog.input_f), input_signed=list(prog.input_signed),
         input_widths=input_widths, output_f=list(prog.output_f),
         mesh=mesh, _runner=jax.jit(run) if jit else run)
@@ -357,156 +385,551 @@ def _prepare_group(prog: DaisProgram, g: OpGroup, locate, dtype):
 
 
 # --------------------------------------------------------------------------- #
-# fused per-layer path: pre-composed tables on the incoming register grids
+# fused per-layer path: tables composed once per layer, gathered per site
 # --------------------------------------------------------------------------- #
-# One composed table may not exceed this many entries (the layer-2+ entry
-# count is 2**width of the previous layer's accumulator registers).
+# Caps on what the composer will enumerate: one stage's table may not exceed
+# _MAX_COMPOSED_ELEMS entries, and a single operand chain is only enumerated
+# when its input register is at most _MAX_ENUM_WIDTH bits wide.
 _MAX_COMPOSED_ELEMS = 1 << 24
+_MAX_ENUM_WIDTH = 20
 
 
-def _compose_lut_segment(prog: DaisProgram, seg, dtype):
-    """Fold one "lut" segment into a single (C_in, C_out, E_max) int table.
+class _ComposeError(Exception):
+    """Raised inside the composer; the message is the fall-back reason."""
 
-    For every cell (j, i), the lowered instruction chain
-    REQUANT(src grid → f_in) → LLUT → CMUL(1 << (F - f_out)) is a pure
-    function of input register j's integer code, so we enumerate all
-    ``2**width_j`` codes once at compile time and bake the chain into a
-    table indexed by the code's two's-complement bits (the WRAP contract of
-    ``core.tables.LayerTables``).  At run time the whole layer is then
-    ``table[j, i, x_j & mask_j]`` summed over j — bit-exact vs the
-    instruction-at-a-time interpreter because every folded step is the same
-    exact integer function and the final Σ is exact integer arithmetic
-    (tree vs linear order is immaterial).
 
-    Returns ``(table, masks)`` or None when the segment doesn't fit the
-    pattern (register-count mismatch, oversized table, codes too wide to
-    enumerate in ``dtype``).
+@dataclasses.dataclass
+class EpiOp:
+    """One vectorized per-channel epilogue op applied after a stage's Σ.
+
+    ``REQUANT``: ``params`` is ``(S, co, 4)`` = (grid shift, width, signed,
+    apply) with the overflow ``mode`` shared — ``apply == 0`` marks
+    channels whose output folded entirely into their term/bias (no
+    epilogue instruction), which pass through untouched; ``CMUL``:
+    ``params`` is ``(S, co)`` constant codes (1 = pass-through).
     """
-    t = prog.tables[seg.layer_id]
-    ci, co = t.c_in, t.c_out
-    if len(seg.in_regs) != ci or len(seg.out_regs) != co:
-        return None
-    in_f = [prog.instrs[r].reg.f for r in seg.in_regs]
-    in_w = [max(prog.instrs[r].reg.width, 1) for r in seg.in_regs]
-    in_s = [prog.instrs[r].reg.signed for r in seg.in_regs]
-    n_entries = [1 << w for w in in_w]
-    e_max = max(n_entries)
-    if ci * co * e_max > _MAX_COMPOSED_ELEMS:
-        return None
-    up_max = max(int(np.max(np.maximum(t.f_in[j] - in_f[j], 0)))
-                 for j in range(ci))
-    if dtype == jnp.int32 and max(in_w) + up_max > _INT32_MAX_WIDTH:
-        return None
 
-    F = t.common_f_out()
-    live = (t.in_width > 0) & (t.out_width > 0)
-    out_shift = np.maximum(F - t.f_out, 0).astype(np.int64)
-    sizes = t.entry_sizes()
-    table = np.zeros((ci, co, e_max), np.int64)
-    cols = np.arange(co)[None, :]
-    for j in range(ci):
-        c = np.arange(n_entries[j], dtype=np.int64)
-        if in_s[j]:  # signed register: index bits are the two's complement
-            c = np.where(c >= n_entries[j] // 2, c - n_entries[j], c)
-        # same vectorized requant the generic path runs per batch, evaluated
-        # once per possible code (host-side, eager)
-        rq = np.asarray(jax.device_get(_requant_cols(
-            jnp.asarray(c[:, None], dtype),
-            jnp.asarray(t.f_in[j].astype(np.int64) - in_f[j], dtype),
-            jnp.asarray(t.in_width[j], dtype),
-            jnp.asarray(np.ones(co, bool)), "WRAP")), np.int64)  # (E_j, co)
-        idx = rq & (sizes[j] - 1)[None, :]
-        vals = t.codes[j][cols, idx]                             # (E_j, co)
-        vals = np.where(live[j][None, :], vals << out_shift[j][None, :], 0)
-        table[j, :, :n_entries[j]] = vals.T
-    masks = np.asarray(n_entries, np.int64) - 1
-    return table, masks
+    op: str                      # "REQUANT" | "CMUL"
+    mode: str                    # REQUANT overflow mode; "" for CMUL
+    params: np.ndarray
+
+
+@dataclasses.dataclass
+class FusedStage:
+    """One layer of the fused runner, shared tables + per-site gathers.
+
+    ``gather`` is ``(S, J)``: for each of the layer's ``S`` spatial sites,
+    the ``J`` columns of the incoming flat value matrix it reads (the value
+    ``n_cols`` addresses an implicit all-zero column — the im2col zero
+    pad).  Kind "lut" then computes, per cell ``(j, i)``,
+    ``table[j, i, mask & shift_round(v)] << out_shift`` and sums over
+    ``j`` — the table is stored **once** and indexed by every site, which
+    is the whole point of the shared-table lowering.  Kind "sum" is the
+    table-free variant (window accumulation, standalone relu):
+    ``Σ_j sign * (v << shift)``.  Both add ``bias`` and then apply the
+    ``epilogue`` ops (e.g. an HGQ layer's relu clamp).  The stage output is
+    ``(B, S, co)`` reshaped to the next stage's flat ``(B, S*co)``.
+    """
+
+    kind: str                    # "lut" | "sum"
+    gather: np.ndarray           # (S, J) int64; == n_cols -> zero column
+    n_cols: int                  # incoming flat width
+    bias: np.ndarray             # (S, co) int64
+    epilogue: List[EpiOp] = dataclasses.field(default_factory=list)
+    # kind "lut"
+    in_shift: Optional[np.ndarray] = None   # (J, co) grid shifts
+    mask: Optional[np.ndarray] = None       # (J, co) index masks
+    table: Optional[np.ndarray] = None      # (J, co, E) int64, site-shared
+    out_shift: Optional[np.ndarray] = None  # (J, co) alignment shifts
+    # kind "sum"
+    shifts: Optional[np.ndarray] = None     # (S, J) alignment shifts
+    signs: Optional[np.ndarray] = None      # (S, J) in {-1, 0, +1}
+
+    @property
+    def n_sites(self) -> int:
+        return self.gather.shape[0]
+
+    @property
+    def c_out(self) -> int:
+        return self.bias.shape[1]
 
 
 @dataclasses.dataclass
 class FusedStages:
-    """The compile-time product of the fused per-layer path, as plain data.
+    """The compile-time product of the fused path, as plain data.
 
-    One entry per layer: ``tables[k]`` is the pre-composed ``(ci, co, E_k)``
-    int64 table of layer ``k`` (every cell's REQUANT → LLUT → align chain
-    folded over all input codes) and ``masks[k]`` the ``(ci,)`` two's-
-    complement index masks; ``in_cols`` maps program inputs to the first
-    layer's columns.  This is everything the fused runner closes over, split
-    out so the compiled-artifact cache (``repro/serve/artifact.py``) can
+    One :class:`FusedStage` per graph layer plus the output column
+    selection.  This is everything the fused runner closes over, split out
+    so the compiled-artifact cache (``repro/serve/artifact.py``) can
     persist it and :func:`compile_program` can rebuild the engine from a
-    bundle without re-running the (layer-enumeration) composition.
+    bundle without re-running the composition pass.
     """
 
-    tables: List[np.ndarray]
-    masks: List[np.ndarray]
-    in_cols: np.ndarray
+    stages: List[FusedStage]
+    out_cols: np.ndarray         # (n_outputs,) columns of the final stage
 
     def n_stages(self) -> int:
-        return len(self.tables)
+        return len(self.stages)
 
 
-def compose_fused_stages(prog: DaisProgram,
-                         dtype: Optional[object] = None) -> Optional[FusedStages]:
-    """Pre-compose a closed chain of "lut" segments into per-layer tables.
+# ---------------------------------------------------------------- composer
+def _reg_fmt(prog: DaisProgram, r: int):
+    reg = prog.instrs[r].reg
+    return (reg.f, max(reg.width, 1), reg.signed)
 
-    Returns ``None`` when the program does not fit the fused pattern (hybrid
-    segments, broken chain, oversized or un-enumerable tables) — callers then
-    fall back to the generic :class:`OpGroup` lowering.
+
+_MIXED_FMT = "mixed"
+
+
+def _stage_gather(prog: DaisProgram, segs, colmap, n_cols):
+    """Per-site column gather + per-position incoming formats.
+
+    Registers absent from ``colmap`` must be zero CONSTs (the im2col pads)
+    and map to the implicit zero column ``n_cols``.  A position whose
+    format differs across sites reports the :data:`_MIXED_FMT` sentinel —
+    only table-building stage kinds need uniform formats (the
+    chain-as-epilogue and table-free sum kinds don't), so the decision to
+    reject is theirs (:func:`_stage_fmts`).
+    """
+    n_sites, j_n = len(segs), len(segs[0].in_regs)
+    gather = np.full((n_sites, j_n), n_cols, np.int64)
+    fmts: List[Optional[tuple]] = [None] * j_n
+    pad_fmts: List[Optional[tuple]] = [None] * j_n
+    for s, seg in enumerate(segs):
+        if len(seg.in_regs) != j_n:
+            raise _ComposeError("sites disagree on patch size")
+        for j, r in enumerate(seg.in_regs):
+            if r in colmap:
+                gather[s, j] = colmap[r]
+                fmt = _reg_fmt(prog, r)
+                if fmts[j] is None:
+                    fmts[j] = fmt
+                elif fmts[j] != fmt:
+                    fmts[j] = _MIXED_FMT
+            else:
+                ins = prog.instrs[r]
+                if ins.op != "CONST" or ins.args[0] != 0:
+                    raise _ComposeError(
+                        f"input register r{r} is neither a previous-stage "
+                        f"output nor a zero pad")
+                pad_fmts[j] = _reg_fmt(prog, r)
+    fmts = [f if f is not None else p for f, p in zip(fmts, pad_fmts)]
+    return gather, fmts
+
+
+def _stage_fmts(fmts) -> List[tuple]:
+    """Uniform per-position formats, or a compose error for mixed ones."""
+    for j, f in enumerate(fmts):
+        if f == _MIXED_FMT:
+            raise _ComposeError(
+                f"position {j} has site-dependent register formats")
+    return fmts
+
+
+def _compose_lut_stage(prog: DaisProgram, segs, gather, fmts) -> FusedStage:
+    """A "lut" layer: keep the shared LayerTables, requant + gather per site.
+
+    The REQUANT → LLUT → align-CMUL chain of every cell is a pure function
+    of one incoming code, evaluated at run time as shift-round → mask →
+    table gather → align shift (the WRAP contract of
+    ``core.tables.LayerTables``), so arbitrarily wide incoming registers
+    never need enumerating and the table is exactly ``t.codes`` — stored
+    once, indexed by all ``S`` sites.
+    """
+    t = prog.tables.get(segs[0].layer_id)
+    if t is None:
+        raise _ComposeError(f"layer {segs[0].layer_id} has no tables")
+    ci, co = t.c_in, t.c_out
+    if gather.shape[1] != ci or any(len(s.out_regs) != co for s in segs):
+        raise _ComposeError("segment register counts don't match its tables")
+    if int(np.asarray(t.codes).size) > _MAX_COMPOSED_ELEMS:
+        raise _ComposeError(f"table too large ({t.codes.size} entries)")
+    in_f = np.asarray([f for f, _w, _s in _stage_fmts(fmts)], np.int64)
+    in_shift, mask, out_shift = t.gather_params(in_f)
+    return FusedStage(
+        kind="lut", gather=gather, n_cols=0,
+        bias=np.zeros((len(segs), co), np.int64),
+        in_shift=in_shift, mask=mask,
+        table=np.asarray(t.codes, np.int64), out_shift=out_shift)
+
+
+def _unary_chain(prog: DaisProgram, out_reg: int, symbols) -> Tuple[List[int], int]:
+    """Longest REQUANT/CMUL/LLUT chain ending at ``out_reg``; returns the
+    chain (outermost first) and the register it bottoms out on."""
+    chain, r = [], out_reg
+    while r not in symbols and prog.instrs[r].op in ("REQUANT", "CMUL", "LLUT"):
+        chain.append(r)
+        r = prog.instrs[r].args[0]
+    return chain, r
+
+
+def _collect_terms(prog: DaisProgram, root: int, symbols):
+    """Decompose the ADD/SUB tree below ``root`` into univariate terms.
+
+    Returns ``(terms, consts)``: each term is ``(j, sign, shift, chain)``
+    — a unary instruction chain (innermost first) on symbol ``j``, shifted
+    onto the root grid and signed; each const is ``(value, sign, shift,
+    chain)``.  Raises :class:`_ComposeError` on anything else (the segment
+    is then not a sum of univariate functions and cannot fuse).
+    """
+    terms, consts = [], []
+
+    def walk(r, sign, shift, suffix):
+        if r in symbols:
+            terms.append((symbols[r], sign, shift, list(reversed(suffix))))
+            return
+        ins = prog.instrs[r]
+        if ins.op == "CONST":
+            consts.append((int(ins.args[0]), sign, shift, list(reversed(suffix))))
+        elif ins.op in ("REQUANT", "CMUL", "LLUT"):
+            walk(ins.args[0], sign, shift, suffix + [r])
+        elif ins.op in ("ADD", "SUB"):
+            if suffix:
+                # a unary op below an ADD consumed by another unary chain is
+                # fine; an ADD *inside* a unary suffix is not univariate
+                raise _ComposeError("ADD nested inside a unary chain")
+            ra, rb = ins.args
+            fa, fb = prog.instrs[ra].reg.f, prog.instrs[rb].reg.f
+            f = max(fa, fb)
+            walk(ra, sign, shift + (f - fa), [])
+            walk(rb, sign * (-1 if ins.op == "SUB" else 1),
+                 shift + (f - fb), [])
+        else:
+            raise _ComposeError(f"op {ins.op} inside a segment body")
+
+    ins = prog.instrs[root]
+    if ins.op in ("ADD", "SUB"):
+        ra, rb = ins.args
+        fa, fb = prog.instrs[ra].reg.f, prog.instrs[rb].reg.f
+        f = max(fa, fb)
+        walk(ra, 1, f - fa, [])
+        walk(rb, -1 if ins.op == "SUB" else 1, f - fb, [])
+    else:
+        walk(root, 1, 0, [])
+    return terms, consts
+
+
+def _eval_chain(prog: DaisProgram, chain: List[int], values: np.ndarray) -> np.ndarray:
+    """Exactly evaluate a unary instruction chain on integer codes."""
+    v = np.asarray(values, np.int64)
+    for r in chain:
+        ins = prog.instrs[r]
+        if ins.op == "REQUANT":
+            _src, f, i, signed, mode, src_f = ins.args
+            v = _requant(v, src_f, f, i, signed, mode)
+        elif ins.op == "CMUL":
+            v = v * np.int64(ins.args[1])
+        elif ins.op == "LLUT":
+            _src, lid, j, i = ins.args
+            t = prog.tables[lid]
+            m = int(t.in_width[j, i])
+            size = 1 << m if m > 0 else 1
+            v = t.codes[j, i, np.mod(v, size)]
+        else:  # unreachable: _unary_chain/_collect_terms only pass these ops
+            raise _ComposeError(f"op {ins.op} in a unary chain")
+    return v
+
+
+def _chain_key(prog: DaisProgram, chain: List[int]) -> tuple:
+    """Structural fingerprint of a unary chain (op + non-register args)."""
+    return tuple((prog.instrs[r].op,) + tuple(prog.instrs[r].args[1:])
+                 for r in chain)
+
+
+def _decompose_site(prog: DaisProgram, seg):
+    """Per-output structure of one site: (epilogue chain, terms, consts)."""
+    symbols = {r: j for j, r in enumerate(seg.in_regs)}
+    outs = []
+    for out_reg in seg.out_regs:
+        chain, r = _unary_chain(prog, out_reg, symbols)
+        if r in symbols or prog.instrs[r].op == "CONST":
+            # pure univariate chain (or folded constant): no epilogue, the
+            # whole chain lives in the term/const
+            terms, consts = _collect_terms(prog, out_reg, symbols)
+            outs.append(([], terms, consts))
+        elif prog.instrs[r].op in ("ADD", "SUB"):
+            terms, consts = _collect_terms(prog, r, symbols)
+            outs.append((list(reversed(chain)), terms, consts))
+        else:
+            raise _ComposeError(f"op {prog.instrs[r].op} at a segment output")
+    return outs
+
+
+def _epilogue_ops(prog: DaisProgram, per_site_epis, co: int) -> List[EpiOp]:
+    """Vectorize per-(site, channel) epilogue chains into shared EpiOps.
+
+    Every channel/site must agree on the op-name sequence; channels whose
+    output folded to a constant/pure chain carry ``apply == 0`` and pass
+    through untouched (a fake "identity" requant could clamp legal values
+    of unsigned registers at the dtype width cap).
+    """
+    n_sites = len(per_site_epis)
+    shapes = {tuple(prog.instrs[r].op for r in epi)
+              for site in per_site_epis for epi in site if epi}
+    if not shapes:
+        return []
+    if len(shapes) > 1:
+        raise _ComposeError("outputs disagree on epilogue structure")
+    ops = next(iter(shapes))
+    out: List[EpiOp] = []
+    for k, op in enumerate(ops):
+        if op == "REQUANT":
+            params = np.zeros((n_sites, co, 4), np.int64)
+            params[..., 1] = 1            # harmless width for masked channels
+            mode = None
+            for s, site in enumerate(per_site_epis):
+                for i, epi in enumerate(site):
+                    if not epi:
+                        continue
+                    _src, f, ib, signed, m, src_f = prog.instrs[epi[k]].args
+                    if mode is None:
+                        mode = m
+                    elif mode != m:
+                        raise _ComposeError("mixed REQUANT modes in epilogue")
+                    width = f + ib + (1 if signed else 0)
+                    params[s, i] = (f - src_f, width, int(bool(signed)), 1)
+            out.append(EpiOp(op="REQUANT", mode=mode or "SAT", params=params))
+        elif op == "CMUL":
+            params = np.ones((n_sites, co), np.int64)
+            for s, site in enumerate(per_site_epis):
+                for i, epi in enumerate(site):
+                    if epi:
+                        params[s, i] = int(prog.instrs[epi[k]].args[1])
+            out.append(EpiOp(op="CMUL", mode="", params=params))
+        else:
+            raise _ComposeError(f"op {op} in an epilogue (not vectorizable)")
+    return out
+
+
+def _chain_only_site(prog: DaisProgram, site) -> Optional[List[int]]:
+    """The single REQUANT/CMUL-only chain of a one-output site, or None.
+
+    The shape a standalone relu lowers to: one unshifted positive bare-ish
+    term whose unary chain can run *as the epilogue* on the gathered value
+    itself — no enumeration, so the operand may be arbitrarily wide.
+    """
+    epi, terms, consts = site[0]
+    if epi or consts or len(terms) != 1:
+        return None
+    _j, sign, shift, chain = terms[0]
+    if (sign != 1 or shift != 0 or not chain
+            or any(prog.instrs[r].op not in ("REQUANT", "CMUL")
+                   for r in chain)):
+        return None
+    return chain
+
+
+def _compose_enum_stage(prog: DaisProgram, segs, gather, fmts) -> FusedStage:
+    """An "hgq"/"acc"/"relu" layer: decompose each output into a sum of
+    univariate chains, then the cheapest faithful stage: table-free "sum"
+    (every term a bare register — window accumulation), chain-as-epilogue
+    (standalone relu), or each chain enumerated over its input register's
+    code space into a site-shared table ("lut" semantics without
+    LayerTables).
+    """
+    n_sites, j_n = gather.shape
+    co = len(segs[0].out_regs)
+    if any(len(s.out_regs) != co for s in segs):
+        raise _ComposeError("sites disagree on output count")
+    sites = [_decompose_site(prog, seg) for seg in segs]
+    site0 = sites[0]
+
+    # table-free chain-as-epilogue (standalone relu): per-site chains may
+    # differ in params (per-channel grids) — only the op sequence must
+    # agree, which _epilogue_ops enforces
+    if co == 1 and j_n == 1:
+        chains = [_chain_only_site(prog, site) for site in sites]
+        if all(c is not None for c in chains):
+            return FusedStage(
+                kind="sum", gather=gather, n_cols=0,
+                bias=np.zeros((n_sites, 1), np.int64),
+                epilogue=_epilogue_ops(prog, [[c] for c in chains], co),
+                shifts=np.zeros((n_sites, 1), np.int64),
+                signs=np.ones((n_sites, 1), np.int64))
+
+    # shared structure check: term chains must be identical across sites
+    key0 = [[(j, sign, shift, _chain_key(prog, chain))
+             for j, sign, shift, chain in terms]
+            for _epi, terms, _consts in site0]
+    for s, site in enumerate(sites[1:], start=1):
+        key = [[(j, sign, shift, _chain_key(prog, chain))
+                for j, sign, shift, chain in terms]
+               for _epi, terms, _consts in site]
+        if key != key0:
+            raise _ComposeError(
+                f"site {s} disagrees with site 0 on term structure")
+
+    bias = np.zeros((n_sites, co), np.int64)
+    for s, site in enumerate(sites):
+        for i, (_epi, _terms, consts) in enumerate(site):
+            for value, sign, shift, chain in consts:
+                v = int(_eval_chain(prog, chain, np.asarray([value]))[0])
+                bias[s, i] += sign * (v << shift)
+    epilogue = _epilogue_ops(prog, [[epi for epi, _t, _c in site]
+                                    for site in sites], co)
+
+    all_terms = [t for _epi, terms, _c in site0 for t in terms]
+    if co == 1 and all(not chain for _j, _sg, _sh, chain in all_terms):
+        # table-free: window accumulation / plain aligned sums
+        shifts = np.zeros((n_sites, j_n), np.int64)
+        signs = np.zeros((n_sites, j_n), np.int64)
+        for s, site in enumerate(sites):
+            for _epi, terms, _c in site:
+                for j, sign, shift, _chain in terms:
+                    if signs[s, j]:
+                        raise _ComposeError(
+                            "register used twice in one table-free sum")
+                    signs[s, j], shifts[s, j] = sign, shift
+        return FusedStage(kind="sum", gather=gather, n_cols=0, bias=bias,
+                          epilogue=epilogue, shifts=shifts, signs=signs)
+
+    # enumerated tables: one (J, co, E) table shared by every site
+    widths = [w for _f, w, _s in _stage_fmts(fmts)]
+    if max(widths) > _MAX_ENUM_WIDTH:
+        raise _ComposeError(
+            f"operand register too wide to enumerate "
+            f"({max(widths)} > {_MAX_ENUM_WIDTH} bits)")
+    e_max = 1 << max(widths)
+    if j_n * co * e_max > _MAX_COMPOSED_ELEMS:
+        raise _ComposeError(
+            f"composed table too large ({j_n * co * e_max} entries)")
+    table = np.zeros((j_n, co, e_max), np.int64)
+    mask = np.zeros((j_n, co), np.int64)
+    codes = []
+    for j, (_f, w, signed) in enumerate(fmts):
+        e = np.arange(1 << w, dtype=np.int64)
+        codes.append(np.where(e >= (1 << w) // 2, e - (1 << w), e)
+                     if signed else e)
+        mask[j, :] = (1 << w) - 1
+    for i, (_epi, terms, _c) in enumerate(site0):
+        for j, sign, shift, chain in terms:
+            v = _eval_chain(prog, chain, codes[j])
+            table[j, i, :len(v)] += sign * (v << shift)
+    return FusedStage(kind="lut", gather=gather, n_cols=0, bias=bias,
+                      epilogue=epilogue,
+                      in_shift=np.zeros((j_n, co), np.int64), mask=mask,
+                      table=table,
+                      out_shift=np.zeros((j_n, co), np.int64))
+
+
+def compose_fused_stages(prog: DaisProgram, dtype: Optional[object] = None
+                         ) -> Tuple[Optional[FusedStages], str]:
+    """Compose a chain of per-site segments into per-layer fused stages.
+
+    Returns ``(stages, "")`` on success, or ``(None, reason)`` when the
+    program does not fit the fused pattern — callers then fall back to the
+    generic :class:`OpGroup` lowering (same semantics, more ops) and should
+    surface ``reason``.
     """
     if dtype is None:
-        dtype = _pick_dtype(prog.required_width())
-    segs = prog.segments
-    if not segs or any(s.kind != "lut" for s in segs):
-        return None
-    first = [prog.instrs[r] for r in segs[0].in_regs]
-    if any(ins.op != "IN" for ins in first):
-        return None
-    for a, b in zip(segs[:-1], segs[1:]):
-        if tuple(a.out_regs) != tuple(b.in_regs):
-            return None
-    if tuple(prog.outputs) != tuple(segs[-1].out_regs):
-        return None
+        try:
+            dtype = _pick_dtype(prog.required_width())
+        except ValueError as e:
+            return None, str(e)
+    if not prog.segments:
+        return None, "program has no segment metadata"
+    groups: List[list] = []
+    for seg in prog.segments:
+        if groups and groups[-1][0].layer_id == seg.layer_id:
+            groups[-1].append(seg)
+        else:
+            groups.append([seg])
+    colmap = {idx: int(ins.args[0]) for idx, ins in enumerate(prog.instrs)
+              if ins.op == "IN"}
+    n_cols = len(prog.input_f)
+    stages: List[FusedStage] = []
+    try:
+        for segs in groups:
+            kinds = {s.kind for s in segs}
+            sites = sorted(s.site for s in segs)
+            if len(kinds) != 1 or sites != list(range(len(segs))) or \
+                    any(s.n_sites != len(segs) for s in segs):
+                raise _ComposeError(
+                    f"layer {segs[0].layer_id} has inconsistent site metadata")
+            gather, fmts = _stage_gather(prog, segs, colmap, n_cols)
+            if segs[0].kind == "lut":
+                stage = _compose_lut_stage(prog, segs, gather, fmts)
+            else:
+                stage = _compose_enum_stage(prog, segs, gather, fmts)
+            stage.n_cols = n_cols
+            stages.append(stage)
+            colmap = {r: s * stage.c_out + i
+                      for s, seg in enumerate(segs)
+                      for i, r in enumerate(seg.out_regs)}
+            n_cols = len(segs) * stage.c_out
+        out_cols = np.asarray([colmap[r] for r in prog.outputs], np.int64)
+    except _ComposeError as e:
+        return None, str(e)
+    except KeyError as e:
+        return None, f"non-chain dataflow (register {e} skips a stage)"
+    return FusedStages(stages=stages, out_cols=out_cols), ""
 
-    tables, masks = [], []
-    for seg in segs:
-        composed = _compose_lut_segment(prog, seg, dtype)
-        if composed is None:
-            return None
-        tables.append(composed[0])
-        masks.append(composed[1])
-    in_cols = np.asarray([ins.args[0] for ins in first], np.int64)
-    return FusedStages(tables=tables, masks=masks, in_cols=in_cols)
+
+# ------------------------------------------------------------------ runner
+def _prepare_stage(stage: FusedStage, dtype):
+    """Close one FusedStage over device constants -> (B, n_cols) -> (B, S*co)."""
+    gather = jnp.asarray(np.asarray(stage.gather, np.int32))
+    bias = jnp.asarray(stage.bias, dtype)[None]             # (1, S, co)
+    epis = []
+    for e in stage.epilogue:
+        if e.op == "REQUANT":
+            epis.append((e.op, e.mode,
+                         jnp.asarray(e.params[..., 0], dtype)[None],
+                         jnp.asarray(e.params[..., 1], dtype)[None],
+                         jnp.asarray(e.params[..., 2] != 0)[None],
+                         jnp.asarray(e.params[..., 3] != 0)[None]))
+        else:
+            epis.append((e.op, "", jnp.asarray(e.params, dtype)[None],
+                         None, None, None))
+
+    if stage.kind == "lut":
+        in_shift = jnp.asarray(stage.in_shift, dtype)       # (J, co)
+        mask = jnp.asarray(stage.mask, dtype)
+        table = jnp.asarray(stage.table, dtype)             # (J, co, E)
+        out_shift = jnp.asarray(stage.out_shift, dtype)
+        jj = jnp.arange(table.shape[0])[:, None]
+        ii = jnp.arange(table.shape[1])[None, :]
+
+        def body(g):                                        # g: (B, S, J)
+            code = _shift_round(g[..., None], in_shift)     # (B, S, J, co)
+            idx = code & mask
+            vals = table[jj, ii, idx] << out_shift
+            return vals.sum(axis=2)                         # (B, S, co)
+    else:
+        shifts = jnp.asarray(stage.shifts, dtype)[None]     # (1, S, J)
+        signs = jnp.asarray(stage.signs, dtype)[None]
+
+        def body(g):
+            return (signs * (g << shifts)).sum(axis=-1)[..., None]
+
+    def ex(v):
+        b = v.shape[0]
+        vz = jnp.concatenate([v, jnp.zeros((b, 1), v.dtype)], axis=1)
+        acc = body(vz[:, gather]) + bias
+        for op, mode, p0, p1, p2, apply in epis:
+            if op == "REQUANT":
+                acc = jnp.where(apply, _requant_cols(acc, p0, p1, p2, mode),
+                                acc)
+            else:
+                acc = acc * p0
+        return acc.reshape(b, -1)
+    return ex
 
 
 def _fused_runner(stages: FusedStages, dtype, mesh):
     """Close a :class:`FusedStages` over device constants -> runner fn."""
-    dev_stages = [(jnp.asarray(table, dtype), jnp.asarray(mask, dtype),
-                   jnp.arange(table.shape[0])[:, None],
-                   jnp.arange(table.shape[1])[None, :])
-                  for table, mask in zip(stages.tables, stages.masks)]
-    in_cols = np.asarray(stages.in_cols, np.int64)
+    prepared = [_prepare_stage(st, dtype) for st in stages.stages]
+    out_cols = np.asarray(stages.out_cols, np.int64)
 
     def _run(x):
         if mesh is not None:
             from repro.parallel.sharding import constrain
             x = constrain(x, mesh, "batch", None)
-        v = x[:, in_cols]
-        for table, masks, jj, ii in dev_stages:
-            idx = (v & masks[None, :])[:, :, None]      # (B, ci, 1)
-            v = table[jj, ii, idx].sum(axis=1)          # gather -> Σ over j
-        return v
+        v = x
+        for ex in prepared:
+            v = ex(v)
+        return v[:, out_cols]
     return _run
-
-
-def _try_fused_runner(prog: DaisProgram, dtype, mesh,
-                      stages: Optional[FusedStages] = None):
-    """Build the fused per-layer runner, or (None, 0) if the program is not
-    a closed chain of composable "lut" segments."""
-    if stages is None:
-        stages = compose_fused_stages(prog, dtype)
-    if stages is None:
-        return None, 0
-    return _fused_runner(stages, dtype, mesh), stages.n_stages()
 
 
 # --------------------------------------------------------------------------- #
@@ -522,13 +945,9 @@ def lower_tables(t: LayerTables, x_f, x_width: int = 16,
     the physical width of the input codes (bounds the internal dtype).
     """
     ci, co = t.c_in, t.c_out
-    xf = np.broadcast_to(np.asarray(x_f, np.int64), (ci,))
-    shift = (t.f_in - xf[:, None]).astype(np.int64)         # (ci, co)
-    sizes_np = t.entry_sizes()                              # (ci, co)
-    F = t.common_f_out()
-    # F >= f_out for every LIVE cell; pruned cells (codes all 0) may have a
-    # larger f_out, so clamp their (value-irrelevant) shift at 0
-    out_shift_np = np.maximum(F - t.f_out, 0).astype(np.int64)  # (ci, co)
+    # (in_shift, mask, out_shift) incl. the pruned-cell out-shift clamp:
+    # one derivation, shared with the fused stage composer
+    shift, masks_np, out_shift_np = t.gather_params(x_f)    # (ci, co) each
 
     width_bound = max(
         int(x_width + max(shift.max(), 0)) + 1,
@@ -538,7 +957,7 @@ def lower_tables(t: LayerTables, x_f, x_width: int = 16,
 
     codes_d = jnp.asarray(t.codes, dtype)
     sh = jnp.asarray(shift, dtype)[None]                    # (1, ci, co)
-    masks = jnp.asarray(sizes_np - 1, dtype)[None]
+    masks = jnp.asarray(masks_np, dtype)[None]
     out_shift = jnp.asarray(out_shift_np, dtype)[None]
     jj = jnp.arange(ci)[:, None]
     ii = jnp.arange(co)[None, :]
@@ -582,9 +1001,9 @@ def verify_engine(engine: ServeEngine, prog: DaisProgram, *,
     batches = [rng.integers(lo, hi + 1, (n_random, len(lo)), dtype=np.int64)]
     sizes = hi - lo + 1
     n_exhaustive = 0
-    # float product: may overflow to inf for wide input spaces, which simply
-    # (and correctly) skips the exhaustive sweep instead of raising
-    if float(np.prod(sizes.astype(np.float64))) <= exhaustive_limit:
+    # log-domain size test: wide input spaces (e.g. a 100-sample 12-bit
+    # waveform context) would overflow a plain product
+    if np.sum(np.log2(sizes.astype(np.float64))) <= np.log2(exhaustive_limit):
         grid = np.indices(tuple(int(s) for s in sizes))
         batches.append(grid.reshape(len(lo), -1).T + lo[None, :])
         n_exhaustive = batches[-1].shape[0]

@@ -26,11 +26,18 @@ padded power-of-two batches, and a synthetic open-loop traffic driver
 (Poisson arrivals at ``--rate`` req/s) reports p50/p99 latency and
 throughput against the numpy-interpreter baseline.
 
+``--model pid-hybrid`` swaps the LUT-Dense stack for the paper's hybrid
+conv PID architecture (``repro.models.pid``), lowered through the graph
+frontend (``core.lower``) so its conv layers share one table set across
+all spatial sites and the engine runs on the fused shared-table path.
+
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen15_05b --smoke \
         --batch 4 --prompt-len 32 --gen 16
     PYTHONPATH=src python -m repro.launch.serve --engine tables \
         --lut-dims 16,20,5 --batch 1024 --gen 8
+    PYTHONPATH=src python -m repro.launch.serve --engine tables \
+        --model pid-hybrid --ctx 100 --batch 1024
     PYTHONPATH=src python -m repro.launch.serve --engine tables \
         --artifact /tmp/model.npz --skip-verify-cached --serve-loop \
         --rate 2000 --requests 2048
@@ -61,6 +68,15 @@ def main(argv=None) -> None:
     ap.add_argument("--seed", type=int, default=0)
     # --engine tables model spec (untrained init is fine: serving exactness
     # is a property of the compiled tables, not of the weights' quality)
+    ap.add_argument("--model", choices=("lut-stack", "pid-hybrid"),
+                    default="lut-stack",
+                    help="lut-stack: LUT-Dense chain from --lut-dims; "
+                         "pid-hybrid: the paper's hybrid conv PID model "
+                         "(HGQ conv -> LUT convs -> LUT head -> window sum) "
+                         "compiled through the graph frontend")
+    ap.add_argument("--ctx", type=int, default=100,
+                    help="pid-hybrid waveform context length in samples "
+                         "(multiple of the 20-sample DAQ window)")
     ap.add_argument("--lut-dims", default="16,20,5",
                     help="comma-separated layer widths of the LUT-Dense stack")
     ap.add_argument("--lut-hidden", type=int, default=8)
@@ -151,6 +167,33 @@ def main(argv=None) -> None:
 # --------------------------------------------------------------------------- #
 # --engine tables: the compiled integer LUT artifact as the serving runtime
 # --------------------------------------------------------------------------- #
+def _build_model_program(args):
+    """Lower the requested model spec to a DAIS program (untrained init)."""
+    if args.model == "pid-hybrid":
+        from repro.core.lower import lower
+        from repro.models.pid import (build_pid_graph, build_pid_layers,
+                                      init_pid_params)
+
+        layers = build_pid_layers(hidden=args.lut_hidden)
+        params = init_pid_params(layers, jax.random.PRNGKey(args.seed))
+        graph = build_pid_graph(layers, n_samples=args.ctx)
+        prog = lower(graph, [*params, None])
+        return prog, f"model=pid-hybrid ctx={args.ctx}"
+
+    from repro.core.dais import compile_sequential
+    from repro.core.lut_layers import LUTDense
+
+    dims = [int(d) for d in args.lut_dims.split(",")]
+    if len(dims) < 2:
+        raise SystemExit("--lut-dims needs at least in,out (e.g. 16,5)")
+    layers = [LUTDense(ci, co, hidden=args.lut_hidden, use_batchnorm=(k == 0))
+              for k, (ci, co) in enumerate(zip(dims[:-1], dims[1:]))]
+    keys = jax.random.split(jax.random.PRNGKey(args.seed), len(layers))
+    params = [l.init(k) for l, k in zip(layers, keys)]
+    prog = compile_sequential(layers, params, args.in_f, args.in_i)
+    return prog, f"model=lut-stack dims={dims}"
+
+
 def _tables_engine(args, mesh):
     """Build (or cold-start) the verified integer engine per the CLI flags.
 
@@ -162,8 +205,6 @@ def _tables_engine(args, mesh):
     * otherwise compile from the model spec, run the gate, and (when
       ``--artifact`` is set) save the bundle for the next cold start.
     """
-    from repro.core.dais import compile_sequential
-    from repro.core.lut_layers import LUTDense
     from repro.kernels.lut_serve import compile_program, verify_engine
     from repro.serve.artifact import build_engine, load_artifact, save_artifact
 
@@ -173,7 +214,7 @@ def _tables_engine(args, mesh):
         engine = build_engine(art, mesh=mesh)
         t_load = time.time() - t0
         print(f"[serve] artifact loaded: {args.artifact} "
-              f"(hash {art.content_hash[:12]}, fused={art.stages is not None}, "
+              f"(hash {art.content_hash[:12]}, path={engine.path}, "
               f"{t_load:.2f}s — no re-lowering)")
         if args.skip_verify_cached and art.attestation:
             att = art.attestation
@@ -190,17 +231,8 @@ def _tables_engine(args, mesh):
                   f"(gate {time.time() - t0:.2f}s)")
         return art.prog, engine
 
-    dims = [int(d) for d in args.lut_dims.split(",")]
-    if len(dims) < 2:
-        raise SystemExit("--lut-dims needs at least in,out (e.g. 16,5)")
-    hidden = args.lut_hidden
-    layers = [LUTDense(ci, co, hidden=hidden, use_batchnorm=(k == 0))
-              for k, (ci, co) in enumerate(zip(dims[:-1], dims[1:]))]
-    keys = jax.random.split(jax.random.PRNGKey(args.seed), len(layers))
-    params = [l.init(k) for l, k in zip(layers, keys)]
-
     t0 = time.time()
-    prog = compile_sequential(layers, params, args.in_f, args.in_i)
+    prog, model_desc = _build_model_program(args)
     t_compile = time.time() - t0
     t0 = time.time()
     engine = compile_program(prog, mesh=mesh)
@@ -208,8 +240,9 @@ def _tables_engine(args, mesh):
                          n_random=256 if args.smoke else 2048,
                          seed=args.seed)
     t_gate = time.time() - t0
-    print(f"[serve] engine=tables dims={dims} instrs={prog.n_instrs()} "
-          f"groups={engine.n_groups} dtype={np.dtype(engine.dtype).name} "
+    print(f"[serve] engine=tables {model_desc} instrs={prog.n_instrs()} "
+          f"path={engine.path} groups={engine.n_groups} "
+          f"dtype={np.dtype(engine.dtype).name} "
           f"mesh={tuple(mesh.devices.shape)}")
     print(f"[serve] bit-exact gate PASSED: {gate['random']} random + "
           f"{gate['exhaustive']} exhaustive rows vs DaisProgram.run "

@@ -1,0 +1,60 @@
+"""The paper's CEPC gas-detector PID hybrid architecture (§V-F), reusable.
+
+One canonical definition of the hybrid model — conventional (matmul) HGQ
+conv frontend, LUT-Conv stack, time-independent LUT head, window-count
+accumulation — shared by the training example (``examples/pid_hybrid.py``)
+and the serving launcher (``launch/serve.py --model pid-hybrid``), so the
+architecture that trains is byte-for-byte the architecture that compiles,
+serves, and emits RTL.
+
+The 12-bit unsigned ADC input grid (``IN_F`` fractional + ``IN_I`` integer
+bits, samples clamped to ``[0, 8)``) matches the synthetic waveform
+generator's clamp (``data/synthetic.cepc_waveform``).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.core.hgq_layers import HGQConv1D
+from repro.core.lower import GraphInput, ModelGraph, WindowSum
+from repro.core.lut_layers import LUTConv1D, LUTDense
+
+WINDOW = 20          # samples per DAQ cycle (256-bit bus / 12-bit samples)
+IN_F, IN_I = 9, 3    # 12-bit unsigned ADC grid: [0, 8) in 2**-9 steps
+
+
+def build_pid_layers(window: int = WINDOW, features: int = 8,
+                     hidden: int = 8) -> Tuple:
+    """(front, lc1, lc2, head) exactly as the paper prescribes."""
+    front = HGQConv1D(c_in=1, c_out=features, kernel=window, stride=window,
+                      activation="relu")          # conventional conv frontend
+    lc1 = LUTConv1D(c_in=features, c_out=8, kernel=3, padding="SAME",
+                    hidden=hidden)
+    lc2 = LUTConv1D(c_in=8, c_out=4, kernel=3, padding="SAME", hidden=hidden)
+    head = LUTDense(4, 1, hidden=hidden)          # per-window count regressor
+    return front, lc1, lc2, head
+
+
+def init_pid_params(layers, key) -> list:
+    return [layer.init(k)
+            for layer, k in zip(layers, jax.random.split(key, len(layers)))]
+
+
+def build_pid_graph(layers, n_samples: int,
+                    in_f: int = IN_F, in_i: int = IN_I) -> ModelGraph:
+    """The compilable graph: layers + window accumulation over a fixed
+    ``n_samples``-sample context (must be a multiple of the front window).
+
+    The lowered program maps one waveform context to its predicted total
+    cluster count; ``lower(graph, [*params, None])`` compiles it.
+    """
+    window = layers[0].kernel
+    if n_samples % window:
+        raise ValueError(f"context length {n_samples} is not a multiple of "
+                         f"the {window}-sample DAQ window")
+    return ModelGraph(
+        input=GraphInput(shape=(n_samples, 1), f=in_f, i=in_i, signed=False),
+        nodes=[*layers, WindowSum()])

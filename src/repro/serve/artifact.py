@@ -8,12 +8,26 @@ atomic ``.npz``:
 
 * ``prog/*``  — the serialized :class:`~repro.core.dais.DaisProgram`
   (``DaisProgram.to_arrays`` wire format: instructions, register formats,
-  segments, truth tables),
-* ``fused/*`` — the pre-composed per-layer tables + masks
-  (:class:`~repro.kernels.lut_serve.FusedStages`), when the program fuses,
+  per-site segments, truth tables — stored **once per layer** no matter
+  how many spatial sites share them),
+* ``fused/*`` — the composed per-layer stages
+  (:class:`~repro.kernels.lut_serve.FusedStages`: site-shared tables,
+  per-site gathers, epilogue ops), when the program fuses,
 * ``meta_json`` — format version, the **content hash**, and the
   ``verify_engine`` **attestation** (gate statistics recorded when the
   bundle was written).
+
+Format versions (negotiated by :func:`load_artifact`):
+
+* **v2** (current) — graph-lowered programs with the shared-table layout:
+  segments carry the spatial site axis and ``fused/*`` holds the
+  generalized stage IR.  Hybrid conv programs fuse and round-trip.
+* **v1** (read-only) — flat sequential programs.  v1 bundles still load
+  bit-exactly: the program deserializes through the versioned
+  ``DaisProgram.from_arrays``, and the *legacy* ``fused/*`` payload (whose
+  layout the v2 stage IR superseded) is ignored — the engine recomposes
+  its stages from the program on load, paying one composition pass.  A
+  bundle from a *newer* writer is rejected with the version it asked for.
 
 The content hash is a SHA-256 over every data array (name, dtype, shape,
 bytes) *and* the canonical JSON of the remaining metadata — attestation
@@ -39,17 +53,24 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import logging
 import os
 import zipfile
 from typing import Dict, Optional
 
 import numpy as np
 
-from repro.core.dais import DaisProgram
-from repro.kernels.lut_serve import (FusedStages, ServeEngine,
-                                     compile_program, compose_fused_stages)
+from repro.core.dais import _MODE_CODES, DaisProgram
+from repro.kernels.lut_serve import (EpiOp, FusedStage, FusedStages,
+                                     ServeEngine, compile_program,
+                                     compose_fused_stages)
 
-FORMAT_VERSION = 1
+logger = logging.getLogger(__name__)
+
+FORMAT_VERSION = 2
+_SUPPORTED_VERSIONS = (1, 2)
+_STAGE_KINDS = ("lut", "sum")
+_EPI_OPS = ("REQUANT", "CMUL")
 
 
 class ArtifactError(RuntimeError):
@@ -86,12 +107,57 @@ def _data_arrays(prog: DaisProgram,
                  stages: Optional[FusedStages]) -> Dict[str, np.ndarray]:
     arrays = {f"prog/{k}": v for k, v in prog.to_arrays().items()}
     if stages is not None:
-        arrays["fused/in_cols"] = np.asarray(stages.in_cols, np.int64)
         arrays["fused/n_stages"] = np.asarray([stages.n_stages()], np.int64)
-        for k, (table, mask) in enumerate(zip(stages.tables, stages.masks)):
-            arrays[f"fused/table{k}"] = np.asarray(table, np.int64)
-            arrays[f"fused/mask{k}"] = np.asarray(mask, np.int64)
+        arrays["fused/out_cols"] = np.asarray(stages.out_cols, np.int64)
+        for k, st in enumerate(stages.stages):
+            p = f"fused/stage{k}_"
+            arrays[p + "kind"] = np.asarray([_STAGE_KINDS.index(st.kind),
+                                             st.n_cols], np.int64)
+            arrays[p + "gather"] = np.asarray(st.gather, np.int64)
+            arrays[p + "bias"] = np.asarray(st.bias, np.int64)
+            if st.kind == "lut":
+                arrays[p + "in_shift"] = np.asarray(st.in_shift, np.int64)
+                arrays[p + "mask"] = np.asarray(st.mask, np.int64)
+                arrays[p + "table"] = np.asarray(st.table, np.int64)
+                arrays[p + "out_shift"] = np.asarray(st.out_shift, np.int64)
+            else:
+                arrays[p + "shifts"] = np.asarray(st.shifts, np.int64)
+                arrays[p + "signs"] = np.asarray(st.signs, np.int64)
+            arrays[p + "n_epi"] = np.asarray([len(st.epilogue)], np.int64)
+            for m, epi in enumerate(st.epilogue):
+                arrays[p + f"epi{m}_op"] = np.asarray(
+                    [_EPI_OPS.index(epi.op), _MODE_CODES.index(epi.mode)],
+                    np.int64)
+                arrays[p + f"epi{m}_params"] = np.asarray(epi.params, np.int64)
     return arrays
+
+
+def _stages_from_arrays(arrays: Dict[str, np.ndarray]) -> FusedStages:
+    """Rebuild the v2 stage IR written by :func:`_data_arrays`."""
+    n = int(arrays["fused/n_stages"][0])
+    stages = []
+    for k in range(n):
+        p = f"fused/stage{k}_"
+        kind_idx, n_cols = (int(v) for v in arrays[p + "kind"])
+        kind = _STAGE_KINDS[kind_idx]
+        epilogue = []
+        for m in range(int(arrays[p + "n_epi"][0])):
+            op_idx, mode_idx = (int(v) for v in arrays[p + f"epi{m}_op"])
+            epilogue.append(EpiOp(op=_EPI_OPS[op_idx],
+                                  mode=_MODE_CODES[mode_idx],
+                                  params=arrays[p + f"epi{m}_params"]))
+        common = dict(kind=kind, gather=arrays[p + "gather"], n_cols=n_cols,
+                      bias=arrays[p + "bias"], epilogue=epilogue)
+        if kind == "lut":
+            stages.append(FusedStage(
+                **common, in_shift=arrays[p + "in_shift"],
+                mask=arrays[p + "mask"], table=arrays[p + "table"],
+                out_shift=arrays[p + "out_shift"]))
+        else:
+            stages.append(FusedStage(
+                **common, shifts=arrays[p + "shifts"],
+                signs=arrays[p + "signs"]))
+    return FusedStages(stages=stages, out_cols=arrays["fused/out_cols"])
 
 
 def save_artifact(path: str, prog: DaisProgram, *,
@@ -110,7 +176,7 @@ def save_artifact(path: str, prog: DaisProgram, *,
     ``--skip-verify-cached`` trusts.
     """
     if stages is None and compose:
-        stages = compose_fused_stages(prog)
+        stages, _reason = compose_fused_stages(prog)
     arrays = _data_arrays(prog, stages)
     meta_core = {
         "format_version": FORMAT_VERSION,
@@ -156,10 +222,11 @@ def load_artifact(path: str) -> LoadedArtifact:
     if "meta_json" not in arrays:
         raise ArtifactError(f"{path!r} has no meta_json — not a bundle")
     meta = json.loads(bytes(arrays.pop("meta_json")).decode())
-    if meta.get("format_version") != FORMAT_VERSION:
+    version = meta.get("format_version")
+    if version not in _SUPPORTED_VERSIONS:
         raise ArtifactError(
-            f"{path!r}: format_version {meta.get('format_version')} "
-            f"(this reader understands {FORMAT_VERSION})")
+            f"{path!r}: format_version {version} "
+            f"(this reader understands {_SUPPORTED_VERSIONS})")
     meta_core = {k: v for k, v in meta.items() if k != "content_hash"}
     digest = _bundle_digest(arrays, meta_core)
     if digest != meta.get("content_hash"):
@@ -172,12 +239,14 @@ def load_artifact(path: str) -> LoadedArtifact:
         {k[len("prog/"):]: v for k, v in arrays.items()
          if k.startswith("prog/")})
     stages = None
-    if meta.get("fused"):
-        n = int(arrays["fused/n_stages"][0])
-        stages = FusedStages(
-            tables=[arrays[f"fused/table{k}"] for k in range(n)],
-            masks=[arrays[f"fused/mask{k}"] for k in range(n)],
-            in_cols=arrays["fused/in_cols"])
+    if meta.get("fused") and version >= 2:
+        stages = _stages_from_arrays(arrays)
+    elif meta.get("fused"):
+        # backward-compat rule: v1 bundles stay loadable and bit-exact, but
+        # their pre-v2 fused layout is superseded — drop it and let
+        # build_engine recompose stages from the (versioned) program
+        logger.info("v1 bundle %s: legacy fused payload ignored; stages "
+                    "will be recomposed from the program", path)
     return LoadedArtifact(prog=prog, stages=stages, meta=meta,
                           content_hash=digest)
 

@@ -68,7 +68,8 @@ def test_serve_launcher_artifact_cache_and_loop(tmp_path):
     import numpy as np
     with np.load(bundle) as z:
         arrays = {k: z[k].copy() for k in z.files}
-    key = next(k for k in arrays if k.startswith("fused/table"))
+    key = next(k for k in arrays if k.startswith("fused/")
+               and k.endswith("_table"))
     arrays[key][0, 0, 0] ^= 1
     np.savez(bundle, **arrays)
     r3 = subprocess.run(common + ["--skip-verify-cached", "--batch", "16",
@@ -77,6 +78,21 @@ def test_serve_launcher_artifact_cache_and_loop(tmp_path):
                         timeout=600)
     assert r3.returncode != 0
     assert "hash mismatch" in (r3.stderr + r3.stdout)
+
+
+@pytest.mark.slow
+def test_serve_launcher_pid_hybrid():
+    """--model pid-hybrid: the hybrid conv program compiles through the
+    graph frontend, serves on the fused shared-table path, gate passes."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--engine", "tables",
+         "--model", "pid-hybrid", "--ctx", "60", "--smoke",
+         "--batch", "32", "--gen", "1"],
+        env=ENV, cwd=REPO, capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "model=pid-hybrid" in r.stdout
+    assert "path=fused" in r.stdout
+    assert "bit-exact gate PASSED" in r.stdout
 
 
 @pytest.mark.slow

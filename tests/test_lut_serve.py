@@ -88,16 +88,131 @@ def test_two_layer_random_bit_exact(fuse):
         prog.run(codes))
 
 
-def test_hybrid_program_falls_back_to_groups():
-    """HGQ layers aren't "lut" segments — the generic path must cover them."""
+def test_hybrid_program_fuses():
+    """HGQ segments compose too: enumerated per-cell tables + relu epilogue
+    — the fused path now covers hybrid programs instead of falling back."""
     h1 = HGQDense(6, 5, activation="relu")
     l1 = LUTDense(5, 4, hidden=4)
     k1, k2 = jax.random.split(KEY)
     prog = compile_sequential([h1, l1], [h1.init(k1), l1.init(k2)],
                               IN_F, IN_I)
     engine = compile_program(prog)
-    assert not engine.fused
+    assert engine.fused and engine.path == "fused"
+    assert engine.fuse_reason == ""
     verify_engine(engine, prog, n_random=512)
+    # the generic group path still covers the same program bit-exactly
+    generic = compile_program(prog, fuse_layers=False)
+    assert generic.path == "generic"
+    assert "fuse_layers=False" in generic.fuse_reason
+    verify_engine(generic, prog, n_random=512)
+
+
+def test_hybrid_conv_graph_three_way_bit_exact():
+    """The PID shape end-to-end: fused shared-table engine vs generic group
+    engine vs numpy interpreter, all code-for-code equal."""
+    from repro.core.lower import GraphInput, ModelGraph, WindowSum, lower
+    from repro.core.hgq_layers import HGQConv1D
+    from repro.core.lut_layers import LUTConv1D
+
+    t_len = 16
+    front = HGQConv1D(c_in=1, c_out=3, kernel=4, stride=4, activation="relu")
+    lc = LUTConv1D(c_in=3, c_out=3, kernel=3, padding="SAME", hidden=4)
+    head = LUTDense(3, 1, hidden=4)
+    ks = jax.random.split(KEY, 3)
+    params = [front.init(ks[0]), lc.init(ks[1]), head.init(ks[2])]
+    graph = ModelGraph(GraphInput((t_len, 1), IN_F, IN_I),
+                       [front, lc, head, WindowSum()])
+    prog = lower(graph, params + [None])
+
+    fused = compile_program(prog)
+    assert fused.path == "fused"
+    assert fused.n_groups == 4              # one stage per graph layer
+    generic = compile_program(prog, fuse_layers=False)
+    assert generic.path == "generic"
+
+    lo, hi = input_code_bounds(prog)
+    codes = np.random.default_rng(5).integers(lo, hi + 1, (256, len(lo)))
+    ref = prog.run(codes)
+    for eng in (fused, generic):
+        np.testing.assert_array_equal(
+            np.asarray(jax.device_get(eng.run(codes)), np.int64), ref)
+        verify_engine(eng, prog, n_random=128)
+
+
+def test_standalone_relu_wide_operand_fuses_as_epilogue():
+    """A standalone ReLU runs its chain as the stage epilogue — table-free,
+    so operands wider than the enumeration cap (and with per-channel
+    formats) still fuse."""
+    from repro.core.lower import GraphInput, ModelGraph, ReLU, lower
+
+    h1 = HGQDense(6, 3)       # no activation: wide mixed-width accumulators
+    graph = ModelGraph(GraphInput((6,), IN_F, IN_I), [h1, ReLU()])
+    prog = lower(graph, [h1.init(jax.random.PRNGKey(2)), None])
+    engine = compile_program(prog)
+    assert engine.path == "fused" and engine.n_groups == 2
+    verify_engine(engine, prog, n_random=512)
+
+
+def test_structural_relu_flatten_graph_fuses():
+    """Standalone ReLU / Flatten nodes compose too (relu as an enumerated
+    stage, flatten as pure column bookkeeping)."""
+    from repro.core.lower import Flatten, GraphInput, ModelGraph, ReLU, lower
+    from repro.core.lut_layers import LUTConv1D
+
+    conv = LUTConv1D(c_in=2, c_out=3, kernel=2, hidden=4)
+    tail = LUTDense(9, 2, hidden=4)
+    k1, k2 = jax.random.split(KEY)
+    graph = ModelGraph(GraphInput((4, 2), IN_F, IN_I),
+                       [conv, ReLU(), Flatten(), tail])
+    prog = lower(graph, [conv.init(k1), None, None, tail.init(k2)])
+    engine = compile_program(prog)
+    assert engine.path == "fused" and engine.n_groups == 3
+    verify_engine(engine, prog, n_random=512)
+
+
+def test_mixed_epilogue_passthrough_channel_not_clamped():
+    """A channel with no epilogue instruction must pass through the stage's
+    REQUANT epilogue untouched: a fake 'identity' requant would SAT-clamp
+    legal unsigned values near the dtype width cap (regression)."""
+    from repro.core.dais import DaisProgram, Reg, Segment
+    prog = DaisProgram()
+    prog.input_f = [0, 0]
+    prog.input_signed = [True, False]
+    r0 = prog.emit("IN", (0,), Reg(0, 8, True))
+    r1 = prog.emit("IN", (1,), Reg(0, 8, False))
+    # output A: two-term sum + relu requant (real epilogue)
+    a1 = prog.emit("CMUL", (r0, 3, 0), Reg(0, 11, True))
+    a2 = prog.emit("CMUL", (r1, 5, 0), Reg(0, 12, True))
+    s = prog.emit("ADD", (a1, a2), Reg(0, 13, True))
+    out_a = prog.emit("REQUANT", (s, 0, 13, False, "SAT", 0),
+                      Reg(0, 13, False))
+    # output B: pure univariate chain whose unsigned values reach past
+    # 2**29 — above the signed width-30 clamp a fake identity would apply
+    out_b = prog.emit("CMUL", (r1, 1 << 22, 0), Reg(0, 30, False))
+    prog.outputs = [out_a, out_b]
+    prog.output_f = [0, 0]
+    prog.segments.append(Segment(kind="hgq", layer_id=0,
+                                 in_regs=(r0, r1), out_regs=(out_a, out_b)))
+    assert prog.required_width() <= 30          # int32 engine territory
+    engine = compile_program(prog)
+    assert engine.path == "fused"
+    # codes near the top of r1's range drive B beyond 2**29
+    codes = np.stack([np.arange(-128, 128), np.arange(256)], axis=-1)
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(engine.run(codes)), np.int64),
+        prog.run(codes))
+    verify_engine(engine, prog, n_random=256)
+
+
+def test_fuse_fallback_reason_wide_operand():
+    """Un-enumerable HGQ operand widths must fall back *loudly*: the reason
+    is logged and recorded on the engine, never a silent path switch."""
+    h1 = HGQDense(3, 2)
+    prog = compile_sequential([h1], [h1.init(KEY)], input_f=18, input_i=6)
+    engine = compile_program(prog)
+    assert engine.path == "generic" and not engine.fused
+    assert "enumerate" in engine.fuse_reason
+    verify_engine(engine, prog, n_random=256)
 
 
 def test_engine_run_float_matches_interpreter():

@@ -125,9 +125,10 @@ def test_bundle_round_trip_bit_exact_exhaustive(tmp_path):
     assert stats["exhaustive"] == 512        # 8**3 input cross-product
 
 
-def test_bundle_without_fused_payload_falls_back(tmp_path):
-    """Hybrid programs store no fused stages; the loaded engine still runs
-    bit-exactly on the generic group path."""
+def test_hybrid_bundle_round_trips_with_fused_stages(tmp_path):
+    """Hybrid programs fuse under v2: the bundle persists the composed
+    stages (relu epilogue included) and the cold-started engine is
+    bit-exact on the fused path."""
     h1 = HGQDense(5, 4, activation="relu")
     l1 = LUTDense(4, 3, hidden=4)
     k1, k2 = jax.random.split(KEY)
@@ -136,9 +137,87 @@ def test_bundle_without_fused_payload_falls_back(tmp_path):
     path = str(tmp_path / "hybrid.npz")
     save_artifact(path, prog)
     art = load_artifact(path)
-    assert art.stages is None
+    assert art.stages is not None and art.stages.n_stages() == 2
     loaded = build_engine(art)
-    assert not loaded.fused
+    assert loaded.path == "fused"
+    verify_engine(loaded, art.prog, n_random=256)
+
+
+def test_bundle_without_fused_payload_falls_back(tmp_path):
+    """compose=False stores no fused payload; the loaded engine recomposes
+    (or falls back) and still serves bit-exactly."""
+    prog = _lut_stack()
+    path = str(tmp_path / "nofuse.npz")
+    save_artifact(path, prog, compose=False)
+    art = load_artifact(path)
+    assert art.stages is None
+    loaded = build_engine(art)       # recomposed from the program on load
+    verify_engine(loaded, art.prog, n_random=256)
+
+
+def _hybrid_conv_prog():
+    from repro.core.hgq_layers import HGQConv1D
+    from repro.core.lower import GraphInput, ModelGraph, WindowSum, lower
+    from repro.core.lut_layers import LUTConv1D
+
+    front = HGQConv1D(c_in=1, c_out=3, kernel=4, stride=4, activation="relu")
+    lc = LUTConv1D(c_in=3, c_out=3, kernel=3, padding="SAME", hidden=4)
+    head = LUTDense(3, 1, hidden=4)
+    ks = jax.random.split(KEY, 3)
+    params = [front.init(ks[0]), lc.init(ks[1]), head.init(ks[2])]
+    graph = ModelGraph(GraphInput((16, 1), IN_F, IN_I),
+                       [front, lc, head, WindowSum()])
+    return lower(graph, params + [None])
+
+
+def test_conv_hybrid_bundle_round_trip_v2(tmp_path):
+    """Acceptance: artifact v2 round-trips the hybrid conv program (shared
+    conv tables, hgq stage, window sum) bit-exactly on the fused path."""
+    prog = _hybrid_conv_prog()
+    fresh = compile_program(prog)
+    gate = verify_engine(fresh, prog, n_random=256)
+    path = str(tmp_path / "hybrid_conv.npz")
+    save_artifact(path, prog, attestation=gate)
+
+    art = load_artifact(path)
+    assert art.meta["format_version"] == 2
+    assert art.stages is not None and art.stages.n_stages() == 4
+    loaded = build_engine(art)
+    assert loaded.path == "fused"
+
+    lo, hi = input_code_bounds(prog)
+    codes = np.random.default_rng(7).integers(lo, hi + 1, (256, len(lo)))
+    ref = prog.run(codes)
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(loaded.run(codes)), np.int64), ref)
+
+
+def test_v1_bundle_negotiated(tmp_path):
+    """Backward compat: a v1 bundle (pre-site wire format, legacy fused
+    layout) still loads; its fused payload is superseded, so stages are
+    recomposed from the program and serving stays bit-exact."""
+    from repro.serve.artifact import _bundle_digest
+
+    prog = _lut_stack()
+    arrays = {f"prog/{k}": v for k, v in prog.to_arrays().items()}
+    # downgrade the program arrays to wire v1
+    arrays["prog/version"] = np.asarray([1], np.int64)
+    arrays["prog/seg_meta"] = arrays["prog/seg_meta"][:, :4]
+    # legacy fused payload (v1 layout the v2 reader must ignore)
+    arrays["fused/n_stages"] = np.asarray([1], np.int64)
+    arrays["fused/table0"] = np.zeros((2, 2, 2), np.int64)
+    meta_core = {"format_version": 1, "fused": True, "attestation": None}
+    digest = _bundle_digest(arrays, meta_core)
+    meta = {**meta_core, "content_hash": digest}
+    arrays["meta_json"] = np.frombuffer(
+        json.dumps(meta, sort_keys=True).encode(), np.uint8)
+    path = str(tmp_path / "legacy.npz")
+    np.savez(path, **arrays)
+
+    art = load_artifact(path)
+    assert art.meta["format_version"] == 1
+    assert art.stages is None               # legacy fused layout dropped
+    loaded = build_engine(art)              # recomposes from the program
     verify_engine(loaded, art.prog, n_random=256)
 
 
@@ -172,10 +251,27 @@ def test_tampered_fused_stage_rejected(tmp_path):
     save_artifact(path, prog)
 
     def flip_fused(arrays):
-        arrays["fused/table0"][0, 0, 0] ^= 1
+        arrays["fused/stage0_table"][0, 0, 0] ^= 1
     _rewrite(path, flip_fused)
     with pytest.raises(ArtifactError, match="hash mismatch"):
         load_artifact(path)
+
+
+def test_tampered_hybrid_bundle_rejected(tmp_path):
+    """Hybrid v2 bundles stay tamper-evident: program tables, composed
+    stage payloads, and epilogue params are all under the content hash."""
+    prog = _hybrid_conv_prog()
+    path = str(tmp_path / "hybrid_conv.npz")
+    save_artifact(path, prog)
+    for key_suffix in ("_gather", "_bias"):
+        def flip(arrays, suffix=key_suffix):
+            key = next(k for k in arrays if k.startswith("fused/stage")
+                       and k.endswith(suffix))
+            arrays[key].flat[0] += 1
+        _rewrite(path, flip)
+        with pytest.raises(ArtifactError, match="hash mismatch"):
+            load_artifact(path)
+        save_artifact(path, prog)        # restore for the next mutation
 
 
 def test_forged_attestation_rejected(tmp_path):

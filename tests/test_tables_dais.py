@@ -1,4 +1,4 @@
-"""Toolchain tests: truth tables, DAIS lowering, bit-exact interpretation, RTL."""
+"""Toolchain tests: truth tables, graph lowering, bit-exact interpretation, RTL."""
 
 import jax
 import jax.numpy as jnp
@@ -6,8 +6,10 @@ import numpy as np
 import pytest
 
 from repro.core.dais import DaisProgram, Reg, compile_sequential
-from repro.core.hgq_layers import HGQDense
-from repro.core.lut_layers import LUTDense
+from repro.core.hgq_layers import HGQConv1D, HGQDense
+from repro.core.lower import (Flatten, GraphInput, ModelGraph, ReLU,
+                              WindowSum, lower)
+from repro.core.lut_layers import LUTConv1D, LUTConv2D, LUTDense
 from repro.core.quant import int_to_float, quantize_to_int
 from repro.core.rtl import emit_verilog
 from repro.core.tables import extract_tables
@@ -18,6 +20,12 @@ IN_F, IN_I = 4, 2
 
 def _quantized_inputs(n, ci, key=KEY):
     x = np.asarray(jax.random.normal(key, (n, ci))) * 2
+    codes = quantize_to_int(x, IN_F, IN_I, True, "SAT")
+    return codes, int_to_float(codes, IN_F)
+
+
+def _quantized_grid(shape, key=KEY):
+    x = np.asarray(jax.random.normal(key, shape)) * 2
     codes = quantize_to_int(x, IN_F, IN_I, True, "SAT")
     return codes, int_to_float(codes, IN_F)
 
@@ -102,6 +110,193 @@ def test_verilog_emission_wellformed():
     assert len(re.findall(r"\bendfunction\b", v)) == t.n_luts()
     for k in range(4):
         assert f"out_{k}" in v
+
+
+# --------------------------------------------------------------------------- #
+# graph lowering: convs share one table set across sites, hybrids compile
+# --------------------------------------------------------------------------- #
+def test_conv_tables_extracted_via_dense_view():
+    conv = LUTConv1D(c_in=3, c_out=4, kernel=2, hidden=4)
+    p = conv.init(KEY)
+    t_conv = extract_tables(conv, p)
+    t_dense = extract_tables(conv.dense, p)
+    assert t_conv.c_in == 3 * 2
+    for fld in ("f_in", "i_in", "f_out", "i_out", "in_width", "out_width",
+                "codes"):
+        np.testing.assert_array_equal(getattr(t_conv, fld),
+                                      getattr(t_dense, fld))
+    with pytest.raises(TypeError):
+        extract_tables(HGQDense(3, 4), p)
+
+
+@pytest.mark.parametrize("padding,stride", [("VALID", 1), ("SAME", 1),
+                                            ("SAME", 2)])
+def test_lut_conv1d_graph_bit_exact(padding, stride):
+    t_len = 8
+    conv = LUTConv1D(c_in=2, c_out=3, kernel=3, stride=stride,
+                     padding=padding, hidden=4)
+    p = conv.init(KEY)
+    graph = ModelGraph(GraphInput((t_len, 2), IN_F, IN_I), [conv])
+    prog = lower(graph, [p])
+    # the tentpole invariant: ONE table set, shared by every spatial site
+    assert list(prog.tables) == [0]
+    n_sites = {s.n_sites for s in prog.segments}
+    assert len(prog.segments) == n_sites.pop()
+    codes, xq = _quantized_grid((16, t_len, 2))
+    ref, _ = conv.apply(p, jnp.asarray(xq), train=False)
+    out = prog.run_float(xq.reshape(16, -1))
+    np.testing.assert_array_equal(
+        np.asarray(ref, np.float64).reshape(16, -1), out)
+
+
+def test_lut_conv2d_graph_bit_exact():
+    conv = LUTConv2D(c_in=1, c_out=2, kernel=(2, 2), padding="SAME", hidden=4)
+    p = conv.init(KEY)
+    graph = ModelGraph(GraphInput((3, 4, 1), IN_F, IN_I), [conv])
+    prog = lower(graph, [p])
+    assert list(prog.tables) == [0]
+    codes, xq = _quantized_grid((8, 3, 4, 1))
+    ref, _ = conv.apply(p, jnp.asarray(xq), train=False)
+    out = prog.run_float(xq.reshape(8, -1))
+    np.testing.assert_array_equal(
+        np.asarray(ref, np.float64).reshape(8, -1), out)
+
+
+def test_hybrid_conv_graph_bit_exact():
+    """The paper's PID shape: HGQ conv frontend -> LUT conv -> LUT head ->
+    window accumulation, one program, bit-exact vs the JAX eval stack."""
+    t_len = 16
+    front = HGQConv1D(c_in=1, c_out=3, kernel=4, stride=4, activation="relu")
+    lc = LUTConv1D(c_in=3, c_out=3, kernel=3, padding="SAME", hidden=4)
+    head = LUTDense(3, 1, hidden=4)
+    ks = jax.random.split(KEY, 3)
+    params = [front.init(ks[0]), lc.init(ks[1]), head.init(ks[2])]
+    graph = ModelGraph(GraphInput((t_len, 1), IN_F, IN_I),
+                       [front, lc, head, WindowSum()])
+    prog = lower(graph, params + [None])
+    # conv layers share tables; the hgq frontend contributes none
+    assert sorted(prog.tables) == [1, 2]
+    assert [s.kind for s in prog.segments[-5:]] == ["lut"] * 4 + ["acc"]
+
+    codes, xq = _quantized_grid((12, t_len))
+    h, _ = front.apply(params[0], jnp.asarray(xq)[..., None], train=False)
+    h, _ = lc.apply(params[1], h, train=False)
+    y, _ = head.apply(params[2], h, train=False)
+    ref = np.asarray(y[..., 0].sum(axis=1), np.float64)
+    out = prog.run_float(xq)
+    np.testing.assert_array_equal(ref, out[:, 0])
+
+
+def test_relu_and_flatten_structural_nodes():
+    t_len = 4
+    conv = LUTConv1D(c_in=2, c_out=3, kernel=2, hidden=4)
+    tail = LUTDense((t_len - 1) * 3, 2, hidden=4)
+    k1, k2 = jax.random.split(KEY)
+    p1, p2 = conv.init(k1), tail.init(k2)
+    graph = ModelGraph(GraphInput((t_len, 2), IN_F, IN_I),
+                       [conv, ReLU(), Flatten(), tail])
+    prog = lower(graph, [p1, None, None, p2])
+    assert {s.kind for s in prog.segments} == {"lut", "relu"}
+
+    codes, xq = _quantized_grid((16, t_len, 2))
+    h, _ = conv.apply(p1, jnp.asarray(xq), train=False)
+    h = jax.nn.relu(h)
+    ref, _ = tail.apply(p2, h.reshape(16, -1), train=False)
+    out = prog.run_float(xq.reshape(16, -1))
+    np.testing.assert_array_equal(np.asarray(ref, np.float64), out)
+
+
+def test_segment_site_metadata_round_trips():
+    conv = LUTConv1D(c_in=2, c_out=2, kernel=2, hidden=4)
+    p = conv.init(KEY)
+    graph = ModelGraph(GraphInput((5, 2), IN_F, IN_I), [conv])
+    prog = lower(graph, [p])
+    prog2 = DaisProgram.from_arrays(prog.to_arrays())
+    assert prog2.segments == prog.segments
+    assert all(s.n_sites == 4 for s in prog2.segments)
+    assert sorted(s.site for s in prog2.segments) == [0, 1, 2, 3]
+
+
+def test_v1_wire_format_still_loads():
+    """Version negotiation: v1 arrays (4-column seg_meta) deserialize with
+    default site metadata and run bit-identically."""
+    l1 = LUTDense(4, 3, hidden=4)
+    prog = compile_sequential([l1], [l1.init(KEY)], IN_F, IN_I)
+    arrays = prog.to_arrays()
+    arrays["version"] = np.asarray([1], np.int64)
+    arrays["seg_meta"] = arrays["seg_meta"][:, :4]
+    prog2 = DaisProgram.from_arrays(arrays)
+    assert prog2.segments == prog.segments      # site=0, n_sites=1 defaults
+    codes, _ = _quantized_inputs(64, 4)
+    np.testing.assert_array_equal(prog2.run(codes), prog.run(codes))
+
+
+# --------------------------------------------------------------------------- #
+# RTL on hybrid programs: shared functions, per-site instantiation
+# --------------------------------------------------------------------------- #
+def test_verilog_hybrid_conv_structural():
+    import re
+    t_len = 8
+    front = HGQConv1D(c_in=1, c_out=2, kernel=4, stride=4, activation="relu")
+    lc = LUTConv1D(c_in=2, c_out=2, kernel=2, padding="SAME", hidden=4)
+    ks = jax.random.split(KEY, 2)
+    params = [front.init(ks[0]), lc.init(ks[1])]
+    graph = ModelGraph(GraphInput((t_len, 1), IN_F, IN_I),
+                       [front, lc, WindowSum()])
+    prog = lower(graph, params + [None])
+    v = emit_verilog(prog, name="dut")
+
+    assert v.startswith("module dut")
+    assert len(re.findall(r"^module\b", v, re.M)) == \
+        len(re.findall(r"^endmodule\b", v, re.M)) == 1
+    assert len(re.findall(r"\bfunction\b", v)) == \
+        len(re.findall(r"\bendfunction\b", v))
+    # ONE function per live shared-table cell...
+    n_cells = sum(t.n_luts() for t in prog.tables.values())
+    assert len(re.findall(r"\bendfunction\b", v)) == n_cells
+    # ...instantiated once per (site, cell): every LLUT instruction calls one
+    n_calls = len(re.findall(r"= llut_\d+_\d+_\d+\(", v))
+    assert n_calls == prog.count_ops()["LLUT"] > n_cells
+    # hybrid op coverage: weight CMULs, bias CONSTs, relu-as-REQUANT
+    assert re.search(r"\* \$signed\(-?\d+\)", v)            # CMUL
+    assert re.search(r"requant f=\d+ i=\d+ SAT", v)         # relu clamp
+    # relu outputs are unsigned wires, zero-extended into signed arithmetic
+    assert re.search(r"^  wire \[\d+:0\] r\d+", v, re.M)
+    assert "$signed({1'b0, r" in v
+    # ports match the program interface
+    assert len(re.findall(r"input  wire", v)) == len(prog.input_f)
+    assert len(re.findall(r"output wire", v)) == len(prog.outputs)
+    # every site shares the layer's function set: the instantiation comment
+    assert re.search(r"instantiated at 2 site\(s\)", v)
+
+
+def test_verilog_add_aligns_mixed_grids():
+    """ADD with operands on different fractional grids must emit the same
+    alignment shift the interpreter applies (regression: plain 'a + b'
+    silently dropped the << (F - f) on the coarser operand)."""
+    prog = DaisProgram()
+    prog.input_f = [2, 0]
+    prog.input_signed = [True, True]
+    r0 = prog.emit("IN", (0,), Reg(2, 6, True))
+    r1 = prog.emit("IN", (1,), Reg(0, 6, True))
+    s = prog.emit("ADD", (r0, r1), Reg(2, 9, True))
+    prog.outputs = [s]
+    prog.output_f = [2]
+    v = emit_verilog(prog, name="dut")
+    assert "(r1 <<< 2)" in v and "r0 + " in v
+
+
+def test_verilog_port_widths_match_registers():
+    import re
+    l1 = LUTDense(3, 2, hidden=4)
+    prog = compile_sequential([l1], [l1.init(KEY)], IN_F, IN_I)
+    v = emit_verilog(prog, name="dut")
+    for k in range(3):
+        w = prog.instrs[k].reg.width
+        assert re.search(rf"input  wire signed \[{w-1}:0\] in_{k}\b", v)
+    for k, r in enumerate(prog.outputs):
+        w = max(prog.instrs[r].reg.width, 1)
+        assert re.search(rf"output wire signed \[{w-1}:0\] out_{k}\b", v)
 
 
 def test_conversion_speed_32x32():
