@@ -56,15 +56,82 @@ SCHED_MAX_BATCH = 64
 SCHED_DELAY_MS = 2.0
 
 
-def _build(dims, hidden, seed=0):
-    from repro.core.dais import compile_sequential
+def _init_stack(dims, hidden, seed=0, bn_first=True):
+    """LUT-Dense stack + initialized params — one construction for every
+    LUT-stack bench row (the DCE row only varies the batch-norm flag)."""
     from repro.core.lut_layers import LUTDense
 
-    layers = [LUTDense(ci, co, hidden=hidden, use_batchnorm=(k == 0))
+    layers = [LUTDense(ci, co, hidden=hidden,
+                       use_batchnorm=(bn_first and k == 0))
               for k, (ci, co) in enumerate(zip(dims[:-1], dims[1:]))]
     keys = jax.random.split(jax.random.PRNGKey(seed), len(layers))
-    params = [l.init(k) for l, k in zip(layers, keys)]
+    return layers, [l.init(k) for l, k in zip(layers, keys)]
+
+
+def _build(dims, hidden, seed=0):
+    from repro.core.dais import compile_sequential
+
+    layers, params = _init_stack(dims, hidden, seed)
     return compile_sequential(layers, params, IN_F, IN_I)
+
+
+def _build_pruned(dims, hidden, seed=0, frac=0.5):
+    """A LUT-Dense stack with ~``frac`` of the first layer's cells driven
+    dead (constant-0 truth tables), the shape a high-β snapshot takes.
+
+    Deterministic surgery instead of a training run so the bench row is
+    reproducible: zeroing a cell's output projection makes its table
+    constant 0 while the quantizer widths stay positive — exactly the
+    leakage ``core/opt.py`` eliminates.
+    """
+    from repro.core.dais import compile_sequential
+
+    layers, params = _init_stack(dims, hidden, seed, bn_first=False)
+    rng = np.random.default_rng(seed)
+    mask = rng.random((dims[0], dims[1])) < frac
+    mask[: dims[0] // 4] = True          # whole input rows die -> gather shrinks
+    for key in ("w_out", "b_out"):
+        a = np.array(params[0][key], np.float64)
+        a[mask] = 0.0
+        params[0][key] = jnp.asarray(a, jnp.float32)
+    return compile_sequential(layers, params, IN_F, IN_I)
+
+
+def _bench_dce(shape_dims, hidden, codes, *, rounds: int) -> dict:
+    """Fused engine before vs after dead-cell elimination, both gated
+    against the UNoptimized interpreter (the acceptance row: smaller
+    program, narrower gather, faster serving, bit-exact)."""
+    from repro.core.opt import eliminate_dead_cells
+    from repro.kernels.lut_serve import (compile_program,
+                                         compose_fused_stages, verify_engine)
+
+    prog = _build_pruned(shape_dims, hidden)
+    opt_prog, rep = eliminate_dead_cells(prog)
+    engines = []
+    for name, p in (("fused", prog), ("dce", opt_prog)):
+        eng = compile_program(p)
+        assert eng.path == "fused", eng.fuse_reason
+        verify_engine(eng, prog, n_random=256)   # both vs the original oracle
+        engines.append((name, eng))
+    us = _bench_pair(prog, engines, codes, rounds=rounds)
+    gw0, gw1 = rep.total_gather_width()
+    stages_opt, _ = compose_fused_stages(opt_prog)
+    shape = "x".join(map(str, shape_dims))
+    emit(f"serve/engine_dce/{shape}", us["dce"],
+         f"speedup_vs_fused={us['fused'] / us['dce']:.2f}x;"
+         f"lluts={rep.n_llut_before}->{rep.n_llut_after};"
+         f"gather={gw0}->{gw1}")
+    return {
+        "model": "pruned-lut-stack", "dims": shape_dims, "hidden": hidden,
+        "dce": rep.summary(),
+        "n_llut": rep.n_llut_before, "n_llut_live": rep.n_llut_after,
+        "gather_width": gw0, "gather_width_dce": gw1,
+        "n_instrs": rep.n_instrs_before, "n_instrs_dce": rep.n_instrs_after,
+        "fused_table_entries_dce": stages_opt.n_table_entries(),
+        "interp_us": us["interp"],
+        "engine_fused_us": us["fused"], "engine_dce_us": us["dce"],
+        "speedup_dce_vs_fused": us["fused"] / us["dce"],
+    }
 
 
 def _build_hybrid(ctx, seed=0):
@@ -203,6 +270,15 @@ def run(smoke: bool = False) -> None:
     results.append({"model": "pid-hybrid", "ctx": ctx, "batch": batch,
                     "n_instrs": prog.n_instrs(),
                     "n_shared_tables": len(prog.tables), **fields})
+
+    # dead-cell elimination row: a pruned high-β-shaped model, fused engine
+    # before vs after core/opt.py, both bit-exact vs the original program
+    dce_dims = MODELS[0][0]
+    codes = quantize_to_int(rng.normal(0.0, 2.0, (batch, dce_dims[0])),
+                            IN_F, IN_I, True, "SAT")
+    results.append({"batch": batch,
+                    **_bench_dce(dce_dims, MODELS[0][1], codes,
+                                 rounds=rounds)})
 
     if smoke:
         emit("serve/smoke_ok", 0.0, "json_not_written")

@@ -6,6 +6,12 @@ accuracy-vs-EBOPs frontier — no per-point retraining, which is the
 methodological core of HGQ(-LUT)'s "automatic exploration of
 accuracy-resource trade-offs without manual bit-width tuning".
 
+This example stops at the *training-side* frontier (accuracy vs EBOPs).
+The full pipeline version — snapshots checkpointed, every point compiled
+through dead-cell elimination and the bit-exact engine gate, the frontier
+written to BENCH_pareto.json, and a selected point served through the
+artifact + scheduler path — is ``python -m repro.launch.pareto``.
+
 Run:  PYTHONPATH=src python examples/pareto_sweep.py
 """
 

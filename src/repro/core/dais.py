@@ -31,6 +31,16 @@ import numpy as np
 from repro.core.tables import LayerTables
 
 
+# Operand positions of each op's args tuple — the single source of truth
+# for dependency walks (schedule() levelization here, liveness in
+# core/opt.py).  New ops must be added here once, not per consumer.
+OP_DEPS: Dict[str, Tuple[int, ...]] = {
+    "IN": (), "CONST": (),
+    "REQUANT": (0,), "LLUT": (0,), "CMUL": (0,),
+    "ADD": (0, 1), "SUB": (0, 1),
+}
+
+
 @dataclasses.dataclass
 class Reg:
     """Static metadata of one SSA register."""
@@ -170,14 +180,9 @@ class DaisProgram:
         instruction-at-a-time loop — the grouping only exposes the data
         parallelism that the flat SSA list hides.
         """
-        deps = {
-            "IN": (), "CONST": (),
-            "REQUANT": (0,), "LLUT": (0,), "CMUL": (0,),
-            "ADD": (0, 1), "SUB": (0, 1),
-        }
         level = np.zeros(len(self.instrs), np.int64)
         for idx, ins in enumerate(self.instrs):
-            srcs = [ins.args[p] for p in deps[ins.op]]
+            srcs = [ins.args[p] for p in OP_DEPS[ins.op]]
             level[idx] = 1 + max((level[s] for s in srcs), default=-1)
 
         buckets: Dict[Tuple[int, str, str], List[int]] = {}
@@ -445,13 +450,17 @@ def _tree_add(prog: DaisProgram, regs: List[int], f: int) -> int:
 # --------------------------------------------------------------------------- #
 def compile_sequential(layers: Sequence, params_list: Sequence[dict],
                        input_f: int, input_i: int,
-                       input_signed: bool = True) -> DaisProgram:
+                       input_signed: bool = True, *,
+                       optimize: bool = False) -> DaisProgram:
     """Lower a flat list of (LUTDense | HGQDense) layers to DAIS.
 
     Compatibility wrapper over the graph frontend —
     ``repro.core.lower.lower`` is the general entry point (convs, hybrid
     architectures, structural ops); this builds the trivial chain graph.
+    ``optimize=True`` additionally runs the dead-cell elimination pass
+    (``repro.core.opt``).
     """
     from repro.core.lower import compile_sequential as _impl
 
-    return _impl(layers, params_list, input_f, input_i, input_signed)
+    return _impl(layers, params_list, input_f, input_i, input_signed,
+                 optimize=optimize)

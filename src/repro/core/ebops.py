@@ -23,6 +23,7 @@ run (paper §V-A uses an exponential ramp, e.g. 5e-7 → 1e-3 for HLF JSC).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax.numpy as jnp
 import numpy as np
@@ -77,13 +78,63 @@ def estimate_luts(ebops: float) -> float:
 # --------------------------------------------------------------------------- #
 # beta schedule
 # --------------------------------------------------------------------------- #
+# Smallest β the exponential ramp will start from: a ramp is a line in log
+# space, so beta_init <= 0 means log(-inf) and the whole loss goes NaN from
+# step 0.  Non-positive starts are floored here (with a warning) instead.
+BETA_RAMP_EPS = 1e-12
+
+
+def beta_ramp_error(beta_init: float, beta_final: float | None) -> str | None:
+    """CLI-grade validation of an exponential-ramp request; None when valid.
+
+    The single wording both launchers (``launch/train.py``,
+    ``launch/pareto.py``) surface as a clean ``SystemExit`` instead of the
+    :class:`BetaSchedule` constructor's raw ``ValueError`` / ε-floor
+    warning.  ``beta_final=None`` (constant β) accepts any ``beta_init``.
+    """
+    if beta_final is None:
+        return None
+    if beta_final <= 0.0:
+        return (f"beta_final={beta_final} is not a valid ramp endpoint: "
+                f"the β ramp is exponential (log-space), so it must be "
+                f"> 0.  Omit it for a constant β.")
+    if beta_init <= 0.0:
+        return (f"beta_init={beta_init} cannot start an exponential ramp "
+                f"(log(β₀) diverges); use a small positive value such as "
+                f"the paper's 5e-7.")
+    return None
+
+
 @dataclasses.dataclass(frozen=True)
 class BetaSchedule:
-    """Exponential β ramp over training steps (constant if beta_final is None)."""
+    """Exponential β ramp over training steps (constant if beta_final is None).
+
+    The ramp interpolates log-linearly between ``beta_init`` and
+    ``beta_final`` (paper §V-A, e.g. 5e-7 → 1e-3 for HLF JSC), so both
+    endpoints must be positive.  ``beta_final <= 0`` is a configuration
+    error and raises; ``beta_init <= 0`` is floored to :data:`BETA_RAMP_EPS`
+    with a warning (the constant schedule, ``beta_final=None``, accepts any
+    ``beta_init`` including 0 — no log is taken).
+    """
 
     beta_init: float = 5e-7
     beta_final: float | None = 1e-3
     total_steps: int = 1000
+
+    def __post_init__(self):
+        if self.beta_final is None:
+            return
+        if self.beta_final <= 0.0:
+            raise ValueError(
+                f"BetaSchedule: beta_final={self.beta_final} — the "
+                f"exponential ramp needs a positive endpoint (use "
+                f"beta_final=None for a constant β)")
+        if self.beta_init <= 0.0:
+            warnings.warn(
+                f"BetaSchedule: beta_init={self.beta_init} <= 0 would make "
+                f"the log-space ramp NaN; flooring to {BETA_RAMP_EPS:g}",
+                stacklevel=2)
+            object.__setattr__(self, "beta_init", BETA_RAMP_EPS)
 
     def __call__(self, step) -> jnp.ndarray:
         b0 = jnp.asarray(self.beta_init, jnp.float32)

@@ -117,12 +117,23 @@ class _Ctx:
 # --------------------------------------------------------------------------- #
 # driver
 # --------------------------------------------------------------------------- #
-def lower(graph: ModelGraph, params_list: Sequence) -> DaisProgram:
+def lower(graph: ModelGraph, params_list: Sequence, *,
+          optimize: bool = False) -> DaisProgram:
     """Lower a :class:`ModelGraph` to a DAIS program.
 
     ``params_list`` aligns with ``graph.nodes`` (``None`` for structural
     ops).  The float input is assumed pre-quantized to the input grid; each
     layer's quantizers govern all internal grids from there on.
+
+    ``optimize=True`` runs the dead-cell elimination pass
+    (:func:`repro.core.opt.eliminate_dead_cells`) on the lowered program:
+    cells that β·EBOPs pruning drove to a constant-0 truth table — which
+    the per-cell emission below cannot see, it marks and skips only
+    *width*-pruned cells (``m <= 0 or n <= 0``) — are folded out, dead
+    chains are compacted, and shared-table rows with no live lookup are
+    sliced from both the tables and every site's gather.  The optimized
+    program is bit-exact (``tests/test_opt.py`` property-tests it; serving
+    re-gates it with ``verify_engine`` against the unoptimized oracle).
     """
     if len(params_list) != len(graph.nodes):
         raise ValueError(
@@ -150,18 +161,22 @@ def lower(graph: ModelGraph, params_list: Sequence) -> DaisProgram:
     outputs = [int(r) for r in np.asarray(regs).reshape(-1)]
     prog.outputs = outputs
     prog.output_f = [prog.instrs[r].reg.f for r in outputs]
+    if optimize:
+        from repro.core.opt import eliminate_dead_cells
+        prog, _report = eliminate_dead_cells(prog)
     return prog
 
 
 def compile_sequential(layers: Sequence, params_list: Sequence[dict],
                        input_f: int, input_i: int,
-                       input_signed: bool = True) -> DaisProgram:
+                       input_signed: bool = True, *,
+                       optimize: bool = False) -> DaisProgram:
     """Lower a flat stack of dense layers: the trivial chain ModelGraph."""
     graph = ModelGraph(
         input=GraphInput(shape=(layers[0].c_in,), f=input_f, i=input_i,
                          signed=input_signed),
         nodes=list(layers))
-    return lower(graph, list(params_list))
+    return lower(graph, list(params_list), optimize=optimize)
 
 
 # --------------------------------------------------------------------------- #

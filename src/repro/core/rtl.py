@@ -59,20 +59,26 @@ def emit_verilog(prog: DaisProgram, name: str = "hgq_lut_model") -> str:
     lines.append(",\n".join(ports))
     lines.append(");")
 
-    # one function per live table cell, shared by every site that calls it
+    # one function per live table cell, shared by every site that calls it.
+    # "Live" means *referenced*: a cell pruned at training time, or whose
+    # LLUT instructions were folded away by the DCE pass (core/opt.py),
+    # gets no case function — dead cells must not survive into RTL.
+    used_cells = {(ins.args[1], ins.args[2], ins.args[3])
+                  for ins in prog.instrs if ins.op == "LLUT"}
     n_sites = {}
     for seg in prog.segments:
         if seg.kind == "lut":
             n_sites[seg.layer_id] = max(n_sites.get(seg.layer_id, 1),
                                         seg.n_sites)
     for lid, t in prog.tables.items():
-        lines.append(f"  // layer {lid}: {t.n_luts()} shared table functions"
+        n_used = sum(1 for (l, _j, _i) in used_cells if l == lid)
+        lines.append(f"  // layer {lid}: {n_used} shared table functions"
                      f", instantiated at {n_sites.get(lid, 1)} site(s)")
         for j in range(t.c_in):
             for i in range(t.c_out):
                 m = int(t.in_width[j, i])
                 n = int(t.out_width[j, i])
-                if m <= 0 or n <= 0:
+                if m <= 0 or n <= 0 or (lid, j, i) not in used_cells:
                     continue
                 lines.append(f"  function automatic signed [{n-1}:0] llut_{lid}_{j}_{i};")
                 lines.append(f"    input [{m-1}:0] idx;")

@@ -176,7 +176,15 @@ def extract_tables(layer, params: dict) -> LayerTables:
 
     out_codes = quantize_to_int(y, f_out[None], i_out[None],
                                 layer.q_out.signed, "SAT")       # (E, ci, co)
-    # pruned cells emit exactly 0
+    # Pruned cells emit exactly 0.  Note the deliberate train/deploy
+    # boundary for the (m <= 0, n > 0) corner: the fake-quant forward
+    # (einsum and fused Pallas paths alike) still adds such a cell's
+    # constant MLP(0) through its live output quantizer, while every
+    # deployment artifact — these tables, the DAIS lowering, RTL, the
+    # serving engine — prunes it to 0, matching the EBOPs surrogate that
+    # already charges it nothing.  Models whose β pressure parks cells in
+    # that corner with MLP(0) far from 0 will show a (small) train→deploy
+    # accuracy gap; tests/test_tables_dais.py pins this contract.
     live = (m > 0) & (n > 0)
     out_codes = np.where(live[None], out_codes, 0)
     return LayerTables(

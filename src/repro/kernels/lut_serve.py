@@ -471,6 +471,16 @@ class FusedStages:
     def n_stages(self) -> int:
         return len(self.stages)
 
+    def n_table_entries(self) -> int:
+        """Total stored truth-table entries across the "lut" stages.
+
+        Shrinks under the dead-cell elimination pass (``repro.core.opt``)
+        when pruned rows are sliced out of the shared tables;
+        ``benchmarks/serve_bench.py`` records it on the DCE row.
+        """
+        return int(sum(st.table.size for st in self.stages
+                       if st.table is not None))
+
 
 # ---------------------------------------------------------------- composer
 def _reg_fmt(prog: DaisProgram, r: int):

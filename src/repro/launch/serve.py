@@ -85,6 +85,11 @@ def main(argv=None) -> None:
     ap.add_argument("--in-i", type=int, default=2,
                     help="integer bits of the request input grid")
     # compiled-artifact cache + async serving loop (--engine tables only)
+    ap.add_argument("--dce", action="store_true",
+                    help="run the dead-cell elimination pass (core/opt.py) "
+                         "on the lowered program before compiling; the "
+                         "bit-exact gate then checks the optimized engine "
+                         "against the UNoptimized interpreter")
     ap.add_argument("--artifact", default=None,
                     help="bundle path: load it when present, else compile "
                          "and save it there")
@@ -209,6 +214,12 @@ def _tables_engine(args, mesh):
     from repro.serve.artifact import build_engine, load_artifact, save_artifact
 
     if args.artifact and os.path.exists(args.artifact):
+        if args.dce:
+            raise SystemExit(
+                "--dce applies at compile time and cannot rewrite an "
+                "existing bundle (its stages and attestation cover the "
+                "stored program).  Delete the bundle (or point --artifact "
+                "elsewhere) and re-run with --dce to save an optimized one.")
         t0 = time.time()
         art = load_artifact(args.artifact)
         engine = build_engine(art, mesh=mesh)
@@ -234,9 +245,17 @@ def _tables_engine(args, mesh):
     t0 = time.time()
     prog, model_desc = _build_model_program(args)
     t_compile = time.time() - t0
+    oracle = prog
+    if args.dce:
+        from repro.core.opt import eliminate_dead_cells
+        prog, report = eliminate_dead_cells(prog)
+        print(f"[serve] dce: {report.summary()}")
     t0 = time.time()
     engine = compile_program(prog, mesh=mesh)
-    gate = verify_engine(engine, prog,
+    # with --dce the gate runs the engine built from the OPTIMIZED program
+    # against the UNoptimized interpreter — it proves the pass, not just
+    # the lowering
+    gate = verify_engine(engine, oracle,
                          n_random=256 if args.smoke else 2048,
                          seed=args.seed)
     t_gate = time.time() - t0

@@ -41,8 +41,15 @@ def main(argv=None) -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--beta-init", type=float, default=0.0)
-    ap.add_argument("--beta-final", type=float, default=0.0)
+    # β trade-off schedule.  None defaults matter: `or`-style fallbacks would
+    # silently turn an explicit `--beta-final 0.0` into "constant β" and ramp
+    # the default run from β=0 (log(0) → NaN loss).
+    ap.add_argument("--beta-init", type=float, default=None,
+                    help="β at step 0 (default: 0 constant, or 5e-7 — the "
+                         "paper's ramp start — when --beta-final is set)")
+    ap.add_argument("--beta-final", type=float, default=None,
+                    help="β at the last step for the exponential ramp "
+                         "(omit for constant β at --beta-init)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
@@ -60,12 +67,22 @@ def main(argv=None) -> None:
     from repro.optim.adam import AdamConfig, cosine_restarts
     from repro.train.steps import TrainHParams, init_state, make_train_step
 
+    from repro.core.ebops import beta_ramp_error
+
+    if args.beta_final is None:
+        beta_init = args.beta_init if args.beta_init is not None else 0.0
+    else:
+        # ramp requested: default the start to the paper's 5e-7 (§V-A)
+        beta_init = args.beta_init if args.beta_init is not None else 5e-7
+    err = beta_ramp_error(beta_init, args.beta_final)
+    if err:
+        raise SystemExit(f"--beta-init/--beta-final: {err}")
+
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
     hp = TrainHParams(
         adam=AdamConfig(lr=args.lr),
-        beta=BetaSchedule(args.beta_init or 0.0,
-                          args.beta_final or None, args.steps),
+        beta=BetaSchedule(beta_init, args.beta_final, args.steps),
         lr_schedule=cosine_restarts(args.lr, first_period=max(args.steps // 2, 10),
                                     warmup=min(20, args.steps // 10 + 1)),
     )

@@ -104,3 +104,57 @@ def test_train_launcher_smoke():
         env=ENV, cwd=REPO, capture_output=True, text=True, timeout=600)
     assert r.returncode == 0, r.stderr[-2000:]
     assert "done: 4 steps" in r.stdout
+
+
+def test_train_launcher_rejects_zero_beta_final():
+    """Regression: `--beta-final 0.0` used to silently mean "constant β"
+    (falsy-zero flag handling); it must now be an explicit error."""
+    from repro.launch.train import main
+    with pytest.raises(SystemExit, match="beta-final"):
+        main(["--arch", "olmo_1b", "--smoke", "--steps", "1",
+              "--beta-final", "0.0"])
+    with pytest.raises(SystemExit, match="beta-init"):
+        main(["--arch", "olmo_1b", "--smoke", "--steps", "1",
+              "--beta-init", "0.0", "--beta-final", "1e-3"])
+
+
+@pytest.mark.slow
+def test_train_launcher_beta_ramp_finite():
+    """`--beta-final 1e-3` (the paper ramp, defaulting β₀ to 5e-7) trains
+    with finite printed loss — regression for the log(0) NaN ramp."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "olmo_1b",
+         "--smoke", "--steps", "4", "--batch", "2", "--seq", "32",
+         "--log-every", "1", "--beta-final", "1e-3"],
+        env=ENV, cwd=REPO, capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "done: 4 steps" in r.stdout
+    assert "nan" not in r.stdout.lower(), r.stdout
+
+
+@pytest.mark.slow
+def test_pareto_launcher_smoke(tmp_path):
+    """The β-sweep Pareto launcher: one ramped run, ≥3 operating points
+    with accuracy/EBOPs/LUT/latency fields, a selected point served
+    through the artifact + scheduler path, and a JSON report."""
+    import json
+    out = str(tmp_path / "pareto.json")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.pareto", "--smoke",
+         "--out", out, "--ckpt-dir", str(tmp_path / "ckpt"),
+         "--serve-requests", "48"],
+        env=ENV, cwd=REPO, capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "frontier" in r.stdout and "served" in r.stdout
+    with open(out) as fh:
+        payload = json.load(fh)
+    points = payload["points"]
+    assert len(points) >= 3
+    for p in points:
+        for key in ("beta", "val_acc", "test_acc", "ebops", "est_luts",
+                    "n_llut", "n_llut_live", "gather_width",
+                    "gather_width_dce", "engine_us", "rows_per_s"):
+            assert key in p, key
+        assert p["verify"]["random"] > 0          # every point was gated
+    assert payload["serve"]["engine"]["p50_ms"] > 0
+    assert os.path.exists(payload["serve"]["bundle"])

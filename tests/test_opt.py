@@ -1,0 +1,302 @@
+"""Dead-cell elimination (core/opt.py): bit-exactness + shrink properties.
+
+The contract under test: for any lowered program, the DCE'd program is
+bit-exact against the original on every input (exhaustively on small input
+spaces, random sampling on wide ones, with the size test in the log
+domain), keeps its segment metadata valid for the fused engine lowering,
+and actually removes what pruning killed — constant-0 cells, their gather
+slots, and their RTL case functions.
+"""
+
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dais import DaisProgram, Reg, compile_sequential
+from repro.core.lower import GraphInput, ModelGraph, lower
+from repro.core.lut_layers import LUTConv1D, LUTDense
+from repro.core.opt import eliminate_dead_cells, verify_optimized
+from repro.core.rtl import emit_verilog
+from repro.kernels.lut_serve import compile_program, verify_engine
+
+KEY = jax.random.PRNGKey(7)
+IN_F, IN_I = 4, 2
+
+
+# --------------------------------------------------------------------------- #
+# param surgery: force width-pruned and constant-0 cells deterministically
+# --------------------------------------------------------------------------- #
+def _prune_in(params, mask):
+    """Drive q_in widths of masked cells below zero (width-pruned input)."""
+    for k in ("f", "i"):
+        a = np.array(params["q_in"][k])
+        a[mask] = -8.0
+        params["q_in"][k] = jnp.asarray(a)
+    return params
+
+
+def _prune_out(params, mask):
+    """Drive q_out widths of masked cells below zero (width-pruned output)."""
+    for k in ("f", "i"):
+        a = np.array(params["q_out"][k])
+        a[mask] = -8.0
+        params["q_out"][k] = jnp.asarray(a)
+    return params
+
+
+def _zero_cells(params, mask):
+    """Zero the cell MLP output so the truth table is constant 0 while the
+    quantizer widths stay positive — the leakage case DCE exists for."""
+    for k in ("w_out", "b_out"):
+        a = np.array(params[k], np.float64)
+        a[mask] = 0.0
+        params[k] = jnp.asarray(a, jnp.float32)
+    return params
+
+
+def _assert_bit_exact(prog, opt):
+    verify_optimized(prog, opt, n_random=512, seed=1)
+
+
+# --------------------------------------------------------------------------- #
+# property: DCE'd programs are bit-exact, on narrow and wide input spaces
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_dce_bit_exact_random_pruning(seed):
+    """Random pruning masks over a 2-layer stack: optimized == original."""
+    rng = np.random.default_rng(seed)
+    l1 = LUTDense(5, 7, hidden=4, use_batchnorm=(seed == 0))
+    l2 = LUTDense(7, 3, hidden=4)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    p1, p2 = l1.init(k1), l2.init(k2)
+    p1 = _prune_out(p1, rng.random((5, 7)) < 0.3)
+    p1 = _zero_cells(p1, rng.random((5, 7)) < 0.3)
+    p2 = _prune_in(p2, rng.random((7, 3)) < 0.3)
+    prog = compile_sequential([l1, l2], [p1, p2], IN_F, IN_I)
+    opt, rep = eliminate_dead_cells(prog)
+    assert rep.n_instrs_after <= rep.n_instrs_before
+    _assert_bit_exact(prog, opt)
+    # the engine built from the OPTIMIZED program must match the
+    # UNoptimized interpreter — the serve-time gate
+    verify_engine(compile_program(opt), prog, n_random=256)
+
+
+def test_dce_exhaustive_on_small_input_space():
+    """Exhaustive cross-product: 2 inputs on a 3-bit grid = 64 rows."""
+    l1 = LUTDense(2, 4, hidden=4)
+    p1 = l1.init(KEY)
+    p1 = _zero_cells(p1, np.asarray([[True, False, True, False],
+                                     [False, False, True, True]]))
+    prog = compile_sequential([l1], [p1], 1, 1)   # 3-bit signed inputs
+    opt, rep = eliminate_dead_cells(prog)
+    stats = verify_optimized(prog, opt, n_random=64, seed=0)
+    assert stats["exhaustive"] == 64              # the full input space ran
+    assert rep.n_llut_after == rep.n_llut_before - 4
+
+
+def test_dce_wide_input_space_samples_randomly():
+    """Wide input spaces must not overflow the exhaustive size test (log
+    domain) — 16 inputs x 7-bit grids is ~2^112 rows, so only random rows
+    run."""
+    l1 = LUTDense(16, 3, hidden=4)
+    prog = compile_sequential([l1], [l1.init(KEY)], IN_F, IN_I)
+    opt, _rep = eliminate_dead_cells(prog)
+    stats = verify_optimized(prog, opt, n_random=128, seed=0)
+    assert stats["exhaustive"] == 0
+
+
+# --------------------------------------------------------------------------- #
+# shrink properties: gather slots, tables, RTL functions actually go away
+# --------------------------------------------------------------------------- #
+def test_dce_drops_constant_zero_cells_and_rows():
+    """Constant-0 cells fold; fully-dead input rows leave the tables, the
+    fused gather, and the Verilog."""
+    l1 = LUTDense(6, 5, hidden=4)
+    l2 = LUTDense(5, 2, hidden=4)
+    k1, k2 = jax.random.split(KEY)
+    p1, p2 = l1.init(k1), l2.init(k2)
+    mask = np.zeros((6, 5), bool)
+    mask[2, :] = True                 # row 2: every cell constant 0
+    mask[0, 3] = True                 # plus a scattered dead cell
+    p1 = _zero_cells(p1, mask)
+    prog = compile_sequential([l1, l2], [p1, p2], IN_F, IN_I)
+    opt, rep = eliminate_dead_cells(prog)
+
+    assert rep.n_llut_after == rep.n_llut_before - int(mask.sum())
+    assert rep.dropped_rows[0] == 1
+    assert opt.tables[0].c_in == 5
+    gw0, gw1 = rep.total_gather_width()
+    assert gw1 == gw0 - 1
+    # lut segments shrank their per-site gather accordingly
+    seg0 = [s for s in opt.segments if s.layer_id == 0]
+    assert all(len(s.in_regs) == 5 for s in seg0)
+
+    _assert_bit_exact(prog, opt)
+    eng = compile_program(opt)
+    assert eng.path == "fused", eng.fuse_reason
+    verify_engine(eng, prog, n_random=256)
+
+    # RTL: dead cells get no case function, live ones keep theirs
+    v = emit_verilog(opt, name="dut")
+    used = {(ins.args[1], ins.args[2], ins.args[3])
+            for ins in opt.instrs if ins.op == "LLUT"}
+    assert len(re.findall(r"\bendfunction\b", v)) == len(used)
+    v_plain = emit_verilog(prog, name="dut")
+    assert len(re.findall(r"\bendfunction\b", v)) == \
+        len(re.findall(r"\bendfunction\b", v_plain)) - int(mask.sum())
+
+
+def test_dce_lower_optimize_kwarg():
+    l1 = LUTDense(4, 3, hidden=4)
+    p1 = _zero_cells(l1.init(KEY), np.asarray([[1, 0, 0]] * 4, bool))
+    graph = ModelGraph(GraphInput((4,), IN_F, IN_I), [l1])
+    plain = lower(graph, [p1])
+    opt = lower(graph, [p1], optimize=True)
+    assert opt.n_instrs() < plain.n_instrs()
+    codes = np.random.default_rng(0).integers(-32, 32, (128, 4))
+    np.testing.assert_array_equal(opt.run(codes), plain.run(codes))
+
+
+def test_dce_conv_shared_tables_shrink():
+    """Conv layers share ONE table set across sites; dropping a dead input
+    row must shrink every site's patch gather consistently."""
+    conv = LUTConv1D(c_in=2, c_out=3, kernel=2, padding="SAME", hidden=4)
+    p = conv.init(KEY)
+    mask = np.zeros((4, 3), bool)
+    mask[1, :] = True                 # kernel-position-0/channel-1 row dies
+    p = _zero_cells(p, mask)
+    graph = ModelGraph(GraphInput((5, 2), IN_F, IN_I), [conv])
+    prog = lower(graph, [p])
+    opt, rep = eliminate_dead_cells(prog)
+    assert rep.dropped_rows[0] == 1
+    assert opt.tables[0].c_in == 3
+    assert all(len(s.in_regs) == 3 for s in opt.segments)
+    _assert_bit_exact(prog, opt)
+    eng = compile_program(opt)
+    assert eng.path == "fused", eng.fuse_reason
+    verify_engine(eng, prog, n_random=256)
+
+
+def test_dce_hybrid_program_stays_fused():
+    """Multi-site hybrid programs must keep the fused engine path through
+    DCE.  Regression: pad-driven folds at conv-border sites used to
+    collapse `x + 0` to a narrower alias (and dead-register stand-ins to
+    width-1 CONSTs), making register formats site-dependent and silently
+    demoting the whole program to the generic group runner — the exact
+    opposite of what --dce promises on `--model pid-hybrid`."""
+    from repro.core.lower import lower as lower_graph
+    from repro.models.pid import (build_pid_graph, build_pid_layers,
+                                  init_pid_params)
+
+    layers = build_pid_layers()
+    params = init_pid_params(layers, jax.random.PRNGKey(0))
+    prog = lower_graph(build_pid_graph(layers, n_samples=40),
+                       [*params, None])
+    assert compile_program(prog).path == "fused"
+    opt, rep = eliminate_dead_cells(prog)
+    # SAME-pad border sites fold pad-driven LLUT chains
+    assert rep.n_llut_after < rep.n_llut_before
+    eng = compile_program(opt)
+    assert eng.path == "fused", eng.fuse_reason
+    verify_engine(eng, prog, n_random=256)
+
+
+def test_dce_fully_pruned_layer_degrades_gracefully():
+    """A layer whose every cell is pruned must still lower, optimize to
+    constants, serve, and emit RTL — not crash the pipeline."""
+    l1 = LUTDense(4, 3, hidden=4)
+    l2 = LUTDense(3, 2, hidden=4)
+    k1, k2 = jax.random.split(KEY)
+    p1, p2 = l1.init(k1), l2.init(k2)
+    p2 = _prune_out(p2, np.ones((3, 2), bool))
+    prog = compile_sequential([l1, l2], [p1, p2], IN_F, IN_I)
+    opt, rep = eliminate_dead_cells(prog)
+    assert rep.n_llut_after == 0
+    _assert_bit_exact(prog, opt)
+    codes = np.random.default_rng(0).integers(-32, 32, (32, 4))
+    assert np.all(opt.run(codes) == 0)            # fully pruned -> constant 0
+    eng = compile_program(opt)
+    verify_engine(eng, prog, n_random=128)
+    v = emit_verilog(opt, name="dut")
+    assert "endmodule" in v and "endfunction" not in v
+
+
+def test_dce_artifact_round_trip():
+    """Optimized programs persist through the bundle format bit-exactly."""
+    from repro.serve.artifact import build_engine, load_artifact, save_artifact
+
+    l1 = LUTDense(4, 4, hidden=4)
+    p1 = _zero_cells(l1.init(KEY), np.eye(4, dtype=bool))
+    prog = compile_sequential([l1], [p1], IN_F, IN_I)
+    opt, _rep = eliminate_dead_cells(prog)
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        path = f"{d}/opt.npz"
+        save_artifact(path, opt, attestation={"random": 1})
+        art = load_artifact(path)
+        eng = build_engine(art)
+        verify_engine(eng, prog, n_random=256)
+
+
+# --------------------------------------------------------------------------- #
+# constant folding through ADD/SUB/REQUANT chains (hand-built programs)
+# --------------------------------------------------------------------------- #
+def _tiny_prog():
+    prog = DaisProgram()
+    prog.input_f = [0]
+    prog.input_signed = [True]
+    x = prog.emit("IN", (0,), Reg(0, 4, True))
+    return prog, x
+
+
+def test_dce_folds_const_chains():
+    prog, x = _tiny_prog()
+    c = prog.emit("CONST", (3,), Reg(0, 3, True))
+    r = prog.emit("REQUANT", (c, 2, 4, True, "SAT", 0), Reg(2, 7, True))
+    m = prog.emit("CMUL", (r, 5, 0), Reg(2, 11, True))
+    s = prog.emit("ADD", (m, x), Reg(2, 12, True))    # const + live
+    d = prog.emit("SUB", (s, m), Reg(2, 13, True))    # (x + 60) - 60
+    prog.outputs = [d]
+    prog.output_f = [2]
+    opt, rep = eliminate_dead_cells(prog)
+    _assert_bit_exact(prog, opt)
+    # 3 << 2 = 12, * 5 = 60: the chain folds to one CONST
+    consts = [i for i in opt.instrs if i.op == "CONST"]
+    assert all(i.args[0] in (60, -60) for i in consts)
+    assert rep.n_const_folded >= 1
+
+
+def test_dce_add_zero_collapses():
+    prog, x = _tiny_prog()
+    z = prog.emit("CONST", (0,), Reg(0, 1, True))
+    s = prog.emit("ADD", (x, z), Reg(0, 5, True))     # x + 0 on same grid
+    z2 = prog.emit("CONST", (0,), Reg(2, 1, True))
+    s2 = prog.emit("ADD", (s, z2), Reg(2, 8, True))   # x + 0, grid change
+    n = prog.emit("SUB", (z2, s2), Reg(2, 9, True))   # 0 - x
+    prog.outputs = [s, s2, n]
+    prog.output_f = [0, 2, 2]
+    opt, _rep = eliminate_dead_cells(prog)
+    _assert_bit_exact(prog, opt)
+    assert not any(i.op == "ADD" for i in opt.instrs)
+    # grid-changing x+0 became an exact shift; 0-x a negating CMUL
+    codes = {i.args[1] for i in opt.instrs if i.op == "CMUL"}
+    assert codes == {4, -1}
+
+
+def test_dce_llut_with_const_index_folds():
+    """An LLUT whose index chain is constant folds to its table entry."""
+    l1 = LUTDense(2, 2, hidden=4)
+    l2 = LUTDense(2, 2, hidden=4)
+    k1, k2 = jax.random.split(KEY)
+    p1, p2 = l1.init(k1), l2.init(k2)
+    # layer-1 output channel 0 is fully pruned -> constant 0 feeds layer 2,
+    # so layer 2's row-0 lookups run on a constant index and must fold
+    p1 = _prune_out(p1, np.asarray([[True, False], [True, False]]))
+    prog = compile_sequential([l1, l2], [p1, p2], IN_F, IN_I)
+    opt, rep = eliminate_dead_cells(prog)
+    _assert_bit_exact(prog, opt)
+    assert rep.n_llut_after < rep.n_llut_before
+    verify_engine(compile_program(opt), prog, n_random=256)

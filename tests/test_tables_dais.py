@@ -1,5 +1,7 @@
 """Toolchain tests: truth tables, graph lowering, bit-exact interpretation, RTL."""
 
+import re
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -229,6 +231,123 @@ def test_v1_wire_format_still_loads():
     assert prog2.segments == prog.segments      # site=0, n_sites=1 defaults
     codes, _ = _quantized_inputs(64, 4)
     np.testing.assert_array_equal(prog2.run(codes), prog.run(codes))
+
+
+# --------------------------------------------------------------------------- #
+# pruned-cell leakage audit: conv shared-site tables, fused IR, RTL
+# --------------------------------------------------------------------------- #
+def _prune_with_stale_f_out(params, mask):
+    """Width-prune masked cells' INPUTS while leaving a large stale f_out.
+
+    The hazard under test (tables.py clamps for it): a pruned cell can keep
+    an ``f_out`` above the live cells' common grid, and every backend's
+    out-alignment shift must clamp it instead of shifting by a negative
+    amount or blowing up the register width.  The cells' MLP outputs are
+    zeroed too, so the fake-quant forward and the deployment artifacts
+    agree exactly (see the train/deploy boundary note in
+    ``tables.extract_tables``).
+    """
+    for k in ("f", "i"):
+        a = np.array(params["q_in"][k])
+        a[mask] = -8.0
+        params["q_in"][k] = jnp.asarray(a)
+    f = np.array(params["q_out"]["f"])
+    f[mask] = 11.0                      # way above any live cell's grid
+    params["q_out"]["f"] = jnp.asarray(f)
+    for k in ("w_out", "b_out"):
+        a = np.array(params[k], np.float64)
+        a[mask] = 0.0
+        params[k] = jnp.asarray(a, jnp.float32)
+    return params
+
+
+def test_input_pruned_cell_deploys_as_zero():
+    """Deployment contract: an (in_width <= 0, out_width > 0) cell is
+    pruned to 0 in the tables even though the fake-quant forward still
+    adds its constant MLP(0) — the documented train/deploy boundary."""
+    layer = LUTDense(2, 2, hidden=4)
+    p = layer.init(KEY)
+    for k in ("f", "i"):
+        a = np.array(p["q_in"][k])
+        a[0, 0] = -8.0
+        p["q_in"][k] = jnp.asarray(a)
+    t = extract_tables(layer, p)
+    assert t.in_width[0, 0] <= 0 < t.out_width[0, 0]
+    np.testing.assert_array_equal(t.codes[0, 0], 0)
+    # the fake-quant eval keeps the constant MLP(0) contribution — if this
+    # ever changes, training/deployment have been unified and the boundary
+    # note in extract_tables should be retired
+    y0 = layer.cell_mlp(p, jnp.zeros((1, 2, 2)))[0, 0, 0]
+    assert float(jnp.abs(y0)) > 0.0
+
+
+@pytest.mark.parametrize("padding", ["VALID", "SAME"])
+def test_lut_conv1d_pruned_cells_exhaustive(padding):
+    """Conv shared-site tables with pruned cells (incl. stale f_out):
+    graph lowering, fused engine, and interpreter agree on the FULL input
+    space, and the RTL carries no case function for the pruned cells."""
+    from repro.kernels.lut_serve import compile_program, verify_engine
+
+    t_len = 3
+    conv = LUTConv1D(c_in=1, c_out=2, kernel=2, padding=padding, hidden=4)
+    p = conv.init(KEY)
+    mask = np.zeros((2, 2), bool)
+    mask[1, 0] = True                   # kernel position 1 -> output 0
+    p = _prune_with_stale_f_out(p, mask)
+    t = extract_tables(conv, p)
+    assert t.in_width[1, 0] <= 0 and t.f_out[1, 0] == 11
+    assert t.f_out[1, 0] > t.common_f_out()     # the stale-grid hazard
+    np.testing.assert_array_equal(t.codes[1, 0], 0)
+
+    graph = ModelGraph(GraphInput((t_len, 1), 1, 1), [conv])  # 3-bit inputs
+    prog = lower(graph, [p])
+    # pruned cells emit no instructions at ANY site
+    assert prog.count_ops()["LLUT"] == \
+        t.n_luts() * prog.segments[0].n_sites
+
+    # exhaustive: 3 inputs x 3-bit grids = 512 rows
+    grid = np.indices((8,) * t_len).reshape(t_len, -1).T - 4
+    ref, _ = conv.apply(p, jnp.asarray(grid.astype(np.float64) * 0.5)[..., None],
+                        train=False)
+    out = prog.run_float(grid * 0.5)
+    np.testing.assert_array_equal(
+        np.asarray(ref, np.float64).reshape(len(grid), -1), out)
+
+    eng = compile_program(prog)
+    assert eng.path == "fused", eng.fuse_reason
+    gate = verify_engine(eng, prog, n_random=64)
+    assert gate["exhaustive"] == 512
+
+    v = emit_verilog(prog, name="dut")
+    assert "llut_0_1_0" not in v                # pruned cell: no function
+    assert len(re.findall(r"\bendfunction\b", v)) == t.n_luts()
+
+
+def test_lut_conv2d_pruned_cells_bit_exact():
+    from repro.kernels.lut_serve import compile_program, verify_engine
+
+    conv = LUTConv2D(c_in=1, c_out=2, kernel=(2, 2), padding="SAME", hidden=4)
+    p = conv.init(KEY)
+    mask = np.zeros((4, 2), bool)
+    mask[0, :] = True                   # a whole kernel position pruned
+    mask[2, 1] = True
+    p = _prune_with_stale_f_out(p, mask)
+    t = extract_tables(conv, p)
+    assert np.all(t.in_width[mask] <= 0)
+
+    graph = ModelGraph(GraphInput((3, 3, 1), IN_F, IN_I), [conv])
+    prog = lower(graph, [p])
+    codes, xq = _quantized_grid((16, 3, 3, 1))
+    ref, _ = conv.apply(p, jnp.asarray(xq), train=False)
+    out = prog.run_float(xq.reshape(16, -1))
+    np.testing.assert_array_equal(
+        np.asarray(ref, np.float64).reshape(16, -1), out)
+
+    eng = compile_program(prog)
+    assert eng.path == "fused", eng.fuse_reason
+    verify_engine(eng, prog, n_random=256)
+    v = emit_verilog(prog, name="dut")
+    assert len(re.findall(r"\bendfunction\b", v)) == t.n_luts()
 
 
 # --------------------------------------------------------------------------- #

@@ -67,6 +67,45 @@ def test_beta_schedule_exponential():
     assert 1e-6 < mid < 1e-4                 # geometric midpoint ~1e-5
 
 
+def test_beta_schedule_rejects_nonpositive_final():
+    with pytest.raises(ValueError, match="beta_final"):
+        BetaSchedule(5e-7, 0.0, 100)
+    with pytest.raises(ValueError, match="beta_final"):
+        BetaSchedule(5e-7, -1e-3, 100)
+    # the constant schedule takes no log: 0 stays a legal off-switch
+    b = BetaSchedule(0.0, None, 100)
+    assert float(b(jnp.asarray(50))) == 0.0
+
+
+def test_beta_schedule_floors_zero_init():
+    """Regression: beta_init=0 with a finite beta_final used to produce
+    log(0) = -inf and NaN β from step 0."""
+    with pytest.warns(UserWarning, match="flooring"):
+        b = BetaSchedule(0.0, 1e-3, 100)
+    vals = np.asarray([float(b(jnp.asarray(s))) for s in range(0, 100, 7)])
+    assert np.all(np.isfinite(vals))
+    assert float(b(jnp.asarray(99))) == pytest.approx(1e-3, rel=1e-3)
+
+
+def test_beta_ramp_paper_range_finite_loss():
+    """The paper's 5e-7 → 1e-3 HLF ramp must train with finite loss on the
+    LUT-stack step factory, end to end (the `--beta-final 1e-3` path)."""
+    from repro.core.lut_layers import LUTDense
+    from repro.train.steps import make_lut_train_step
+
+    layers = [LUTDense(6, 8, hidden=4), LUTDense(8, 3, hidden=4)]
+    hp = TrainHParams(adam=AdamConfig(lr=3e-3),
+                      beta=BetaSchedule(5e-7, 1e-3, 12))
+    step_fn, init_fn = make_lut_train_step(layers, hp, donate=False)
+    params, opt = init_fn(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (32, 6)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 3, 32))
+    for _ in range(12):
+        params, opt, metrics = step_fn(params, opt, {"x": x, "y": y})
+        assert np.isfinite(float(metrics["loss"])), metrics
+
+
 def test_ebops_lut_formula():
     # m >= Y: 2^(m-X) * n   with X=6, Y=5
     assert float(ebops_lut(jnp.asarray(8.0), jnp.asarray(4.0))) == 2 ** 2 * 4
