@@ -2,7 +2,11 @@
 
 Writes ``BENCH_kernels.json`` with, per shape: forward and backward (full
 train-mode VJP over all 9 inputs) median walltime for both implementations,
-plus an analytic peak-HBM-intermediate estimate.  The structural point of the
+plus an analytic peak-HBM-intermediate estimate.  A ``serve_kernels``
+section compares the serve-side lowerings at the acceptance batch: the
+fused per-stage engine vs the single-launch bit-packed Pallas mega-kernel
+(``kernels/lut_serve_pallas.py``) — walltime, launches per inference
+(n_stages vs 1), and packed-table bytes vs the fused int64 tables.  The structural point of the
 fused pair is the memory column: the einsum train path materialises the
 (B, C_in, H, C_out) hidden tensor in HBM twice (forward save + cotangent
 rebuild), while the fused forward and the recompute backward keep every
@@ -67,6 +71,71 @@ def _peak_bytes(b, ci, h, co):
 
 SMOKE_SHAPES = [(32, 4, 4, 8)]
 
+# serve-kernel section: LUT-Dense stacks compiled to DAIS and served at the
+# acceptance batch, per-stage fused engine vs the single-launch mega-kernel
+SERVE_MODELS = [([16, 20, 5], 8), ([32, 32, 5], 8)]
+SERVE_BATCH = 1024
+
+
+def _serve_kernel_rows(smoke: bool) -> list:
+    """Per-stage vs mega-kernel serve microbench (ISSUE 6).
+
+    Columns per model: walltime of the fused per-stage engine (one XLA op
+    chain per stage) vs the single-``pallas_call`` mega-kernel, launches
+    per inference, and the packed-table footprint (lane-packed,
+    out-shift-folded) vs the int64 tables the fused engine gathers from.
+    Both engines pass ``verify_engine`` before anything is timed.
+    """
+    import numpy as np
+
+    from benchmarks.serve_bench import IN_F, IN_I, _build
+    from repro.core.quant import quantize_to_int
+    from repro.kernels.lut_serve import (compile_program,
+                                         compose_fused_stages, verify_engine)
+
+    models = SERVE_MODELS[:1] if smoke else SERVE_MODELS
+    batch = 128 if smoke else SERVE_BATCH
+    warmup, iters = (1, 1) if smoke else (2, 15)
+    rng = np.random.default_rng(0)
+    rows = []
+    for dims, hidden in models:
+        prog = _build(dims, hidden)
+        codes = quantize_to_int(rng.normal(0.0, 2.0, (batch, dims[0])),
+                                IN_F, IN_I, True, "SAT")
+        engines = {}
+        for name in ("fused", "pallas"):
+            eng = compile_program(prog, engine=name)
+            assert eng.path == name, eng.fuse_reason
+            verify_engine(eng, prog, n_random=256)   # never time a liar
+            engines[name] = eng
+        stages, _ = compose_fused_stages(prog)
+        fused_table_bytes = int(sum(
+            np.asarray(st.table, np.int64).nbytes
+            for st in stages.stages if st.kind == "lut"))
+        xs = {n: jnp.asarray(codes, e.dtype) for n, e in engines.items()}
+        us = {n: time_call(e._runner, xs[n], warmup=warmup, iters=iters)
+              for n, e in engines.items()}
+        shape = "x".join(map(str, dims))
+        row = {
+            "dims": dims, "hidden": hidden, "batch": batch,
+            "per_stage_us": us["fused"], "mega_kernel_us": us["pallas"],
+            "speedup_mega_vs_per_stage": us["fused"] / us["pallas"],
+            "launches_per_inference": {
+                "fused": engines["fused"].n_launches,
+                "pallas": engines["pallas"].n_launches},
+            "packed_table_bytes": engines["pallas"].packed_table_bytes,
+            "fused_table_bytes": fused_table_bytes,
+        }
+        rows.append(row)
+        emit(f"kernels/serve/mega/{shape}", us["pallas"],
+             f"vs_per_stage={us['fused'] / us['pallas']:.2f}x;"
+             f"launches={engines['fused'].n_launches}->1;"
+             f"packed_B={row['packed_table_bytes']}"
+             f"/{fused_table_bytes}")
+        emit(f"kernels/serve/per_stage/{shape}", us["fused"],
+             f"launches={engines['fused'].n_launches}")
+    return rows
+
 
 def run(smoke: bool = False) -> None:
     interpret = jax.default_backend() != "tpu"
@@ -101,7 +170,11 @@ def run(smoke: bool = False) -> None:
                 emit(f"kernels/{d}/{impl}/{shape}", row[f"{d}_us"][impl],
                      f"peak_B={row['peak_intermediate_bytes'][impl]}")
 
+    serve_rows = _serve_kernel_rows(smoke)
     if smoke:
+        assert serve_rows and all(
+            r["launches_per_inference"]["pallas"] == 1
+            and r["packed_table_bytes"] > 0 for r in serve_rows)
         emit("kernels/smoke_ok", 0.0, "json_not_written")
         return
     payload = {
@@ -111,6 +184,15 @@ def run(smoke: bool = False) -> None:
         "note": ("fused fwd+bwd never materialise the (B,C_in,H,C_out) hidden "
                  "tensor; interpret-mode walltime on CPU is not the TPU story"),
         "results": results,
+        "serve_kernels": {
+            "batch": SERVE_BATCH,
+            "note": ("per_stage = kernels/lut_serve.py fused engine (one "
+                     "jitted op chain per stage); mega_kernel = kernels/"
+                     "lut_serve_pallas.py single pallas_call over the whole "
+                     "chain, lane-packed out-shift-folded tables; both "
+                     "bit-exact-gated before timing"),
+            "results": serve_rows,
+        },
     }
     with open(OUT_JSON, "w") as fh:
         json.dump(payload, fh, indent=2)

@@ -2,13 +2,15 @@
 
 Writes ``BENCH_serve.json`` with, per LUT-Dense model:
 
-* **raw batch path** — median walltime of ``DaisProgram.run`` (the
+* **raw batch path** — best-of-N walltime of ``DaisProgram.run`` (the
   scalar-instruction numpy interpreter) against the accelerator engine of
-  ``kernels/lut_serve.py`` in both its fused per-layer form and the generic
-  levelized-group form, at the acceptance batch size of 1024 rows.  The
-  fused engine executes each layer as mask → batched table gather → Σ, so
-  its op count scales with model *depth* while the interpreter dispatches
-  one numpy op per instruction — the speedup column is the point.
+  ``kernels/lut_serve.py`` in three lowerings — the single-launch
+  bit-packed Pallas mega-kernel (``kernels/lut_serve_pallas.py``), the
+  fused per-layer form, and the generic levelized-group form — at the
+  acceptance batch size of 1024 rows.  The pallas row also records its
+  packed-table bytes, launches per inference, and the fused-relative
+  speedup (``speedup_pallas_vs_fused``), the mega-kernel's headline
+  column.
 * **latency under load** — the async micro-batching scheduler
   (``repro/serve/scheduler.py``) fed by the open-loop synthetic driver:
   p50/p99 request latency and achieved throughput at a fixed offered rate
@@ -108,10 +110,12 @@ def _bench_dce(shape_dims, hidden, codes, *, rounds: int) -> dict:
     prog = _build_pruned(shape_dims, hidden)
     opt_prog, rep = eliminate_dead_cells(prog)
     engines = []
-    for name, p in (("fused", prog), ("dce", opt_prog)):
-        eng = compile_program(p)
-        assert eng.path == "fused", eng.fuse_reason
-        verify_engine(eng, prog, n_random=256)   # both vs the original oracle
+    for name, p, eng_pref in (("fused", prog, "fused"),
+                              ("dce", opt_prog, "fused"),
+                              ("dce_pallas", opt_prog, "pallas")):
+        eng = compile_program(p, engine=eng_pref)
+        assert eng.path == eng_pref, eng.fuse_reason
+        verify_engine(eng, prog, n_random=256)   # all vs the original oracle
         engines.append((name, eng))
     us = _bench_pair(prog, engines, codes, rounds=rounds)
     gw0, gw1 = rep.total_gather_width()
@@ -121,6 +125,9 @@ def _bench_dce(shape_dims, hidden, codes, *, rounds: int) -> dict:
          f"speedup_vs_fused={us['fused'] / us['dce']:.2f}x;"
          f"lluts={rep.n_llut_before}->{rep.n_llut_after};"
          f"gather={gw0}->{gw1}")
+    emit(f"serve/engine_dce_pallas/{shape}", us["dce_pallas"],
+         f"speedup_vs_dce={us['dce'] / us['dce_pallas']:.2f}x;"
+         f"packed_bytes={engines[2][1].packed_table_bytes}")
     return {
         "model": "pruned-lut-stack", "dims": shape_dims, "hidden": hidden,
         "dce": rep.summary(),
@@ -128,9 +135,12 @@ def _bench_dce(shape_dims, hidden, codes, *, rounds: int) -> dict:
         "gather_width": gw0, "gather_width_dce": gw1,
         "n_instrs": rep.n_instrs_before, "n_instrs_dce": rep.n_instrs_after,
         "fused_table_entries_dce": stages_opt.n_table_entries(),
+        "packed_table_bytes_dce": engines[2][1].packed_table_bytes,
         "interp_us": us["interp"],
         "engine_fused_us": us["fused"], "engine_dce_us": us["dce"],
+        "engine_dce_pallas_us": us["dce_pallas"],
         "speedup_dce_vs_fused": us["fused"] / us["dce"],
+        "speedup_dce_pallas_vs_dce": us["dce"] / us["dce_pallas"],
     }
 
 
@@ -169,29 +179,40 @@ def _bench_pair(prog, engines, codes, rounds: int = 25) -> dict:
 
 
 def _bench_engines(prog, codes, shape: str, *, rounds: int):
-    """Gate + bench the fused and generic engines against the interpreter.
+    """Gate + bench the pallas, fused and generic engines vs the interpreter.
 
     The one engine-comparison block shared by the LUT-Dense rows and the
-    hybrid-program row: builds both lowerings, refuses to time either
+    hybrid-program row: builds all three lowerings, refuses to time any
     unless it passes the bit-exactness gate, and returns
     ``(row_fields, engines)`` with the ``engine_*_us``/``speedup_*``
-    columns plus the matching ``emit`` lines.
+    columns plus the matching ``emit`` lines.  The pallas row additionally
+    records its packed-table footprint and the fused-relative speedup —
+    the mega-kernel's headline column.
     """
     from repro.kernels.lut_serve import compile_program, verify_engine
 
     engines = []
-    for name, fuse in (("fused", True), ("groups", False)):
-        eng = compile_program(prog, fuse_layers=fuse)
+    for name in ("pallas", "fused", "groups"):
+        eng = compile_program(prog, engine=name)
         verify_engine(eng, prog, n_random=256)   # never bench a liar
         engines.append((name, eng))
-    assert engines[0][1].path == "fused", engines[0][1].fuse_reason
+    assert engines[0][1].path == "pallas", engines[0][1].fuse_reason
+    assert engines[1][1].path == "fused", engines[1][1].fuse_reason
     us = _bench_pair(prog, engines, codes, rounds=rounds)
     fields = {"interp_us": us["interp"]}
-    for name, _ in engines:
+    for name, eng in engines:
         fields[f"engine_{name}_us"] = us[name]
         fields[f"speedup_{name}"] = us["interp"] / us[name]
+        extra = ""
+        if name == "pallas":
+            fields["speedup_pallas_vs_fused"] = us["fused"] / us["pallas"]
+            fields["packed_table_bytes"] = eng.packed_table_bytes
+            fields["n_launches_pallas"] = eng.n_launches
+            fields["n_launches_fused"] = engines[1][1].n_launches
+            extra = (f";vs_fused={us['fused'] / us['pallas']:.2f}x"
+                     f";packed_bytes={eng.packed_table_bytes}")
         emit(f"serve/engine_{name}/{shape}", us[name],
-             f"speedup={us['interp'] / us[name]:.1f}x")
+             f"speedup={us['interp'] / us[name]:.1f}x{extra}")
     emit(f"serve/interp/{shape}", us["interp"],
          f"n_instrs={prog.n_instrs()}")
     return fields, engines
@@ -218,6 +239,7 @@ def _bench_scheduler(prog, engine, shape: str, *, n_requests: int,
     for s in compare_under_load(prog, engine, codes, cfg, rates=rates):
         rows.append({
             "backend": s["backend"], "offered_rate": s["offered_rate"],
+            "engine_path": s.get("engine_path"),
             "n_requests": n_requests,
             "max_batch": SCHED_MAX_BATCH,
             "max_delay_ms": SCHED_DELAY_MS,
@@ -228,7 +250,9 @@ def _bench_scheduler(prog, engine, shape: str, *, n_requests: int,
         })
         load = (f"{s['offered_rate']:.0f}rps" if s["offered_rate"] > 0
                 else "burst")
-        emit(f"serve/sched_{s['backend']}/{shape}/{load}",
+        tag = (f"sched_{s['backend']}" if s["backend"] != "engine"
+               else f"sched_{s.get('engine_path') or 'engine'}")
+        emit(f"serve/{tag}/{shape}/{load}",
              s["p50_ms"] * 1e3,
              f"p99_ms={s['p99_ms']:.2f};rows_s={s['rows_per_s']:.0f}")
     return rows
@@ -254,8 +278,12 @@ def run(smoke: bool = False) -> None:
         fields, engines = _bench_engines(prog, codes, shape, rounds=rounds)
         row = {"dims": dims, "hidden": hidden, "batch": batch,
                "n_instrs": prog.n_instrs(), **fields}
-        row["scheduler"] = _bench_scheduler(
-            prog, engines[0][1], shape, n_requests=n_requests, rates=rates)
+        # p50/p99 under load on BOTH serving paths (pallas + fused) behind
+        # the identical scheduler; rows carry engine_path from stats()
+        row["scheduler"] = [
+            s for _name, eng in engines[:2]
+            for s in _bench_scheduler(prog, eng, shape,
+                                      n_requests=n_requests, rates=rates)]
         results.append(row)
 
     # hybrid conv program (graph frontend): fused shared-table engine vs
@@ -281,6 +309,17 @@ def run(smoke: bool = False) -> None:
                                  rounds=rounds)})
 
     if smoke:
+        # the smoke leg proves the pallas columns exist and came from the
+        # mega-kernel path, without publishing cold-container numbers
+        for row in results:
+            if "engine_pallas_us" in row:
+                assert row["speedup_pallas_vs_fused"] > 0
+                assert row["packed_table_bytes"] > 0
+                assert row["n_launches_pallas"] == 1
+        assert any("engine_pallas_us" in r for r in results)
+        assert any(s.get("engine_path") == "pallas"
+                   for r in results for s in r.get("scheduler", []))
+        emit("serve/pallas_smoke_ok", 0.0, "pallas rows present")
         emit("serve/smoke_ok", 0.0, "json_not_written")
         return
     payload = {

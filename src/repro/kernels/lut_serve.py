@@ -63,6 +63,7 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import warnings
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -92,6 +93,41 @@ def _pick_dtype(max_width: int):
             f"program has {max_width}-bit registers; the int64 engine needs "
             f"JAX_ENABLE_X64=1 (int32 covers widths <= {_INT32_MAX_WIDTH})")
     return jnp.int64
+
+
+def _check_dtype(dtype, max_width: int) -> None:
+    """Reject an explicitly requested dtype that the program overflows.
+
+    Two silent-wrap holes closed here: asking for int32 on a program whose
+    transients need more than :data:`_INT32_MAX_WIDTH` bits, and asking for
+    int64 while ``JAX_ENABLE_X64`` is off — jax then *silently* downgrades
+    every array to int32, which wraps identically badly.
+    """
+    if max_width <= _INT32_MAX_WIDTH:
+        return
+    with warnings.catch_warnings():
+        # jax's own "requested dtype int64 ... truncated" chatter — our
+        # ValueError below is the one actionable signal
+        warnings.simplefilter("ignore")
+        actual = jnp.asarray(0, dtype).dtype  # what arrays will really get
+    if actual != jnp.dtype(jnp.int64):
+        hint = ("set JAX_ENABLE_X64=1 so int64 is honored"
+                if not _x64_enabled() else "pass dtype=None or jnp.int64")
+        raise ValueError(
+            f"program has {max_width}-bit registers/transients but the "
+            f"requested engine dtype resolves to {np.dtype(actual).name} "
+            f"(covers <= {_INT32_MAX_WIDTH} bits) — values would "
+            f"overflow-wrap; {hint}")
+
+
+class EnginePathWarning(UserWarning):
+    """A preferred engine lowering was unavailable and compile fell back.
+
+    Emitted by :func:`compile_program` at compile time (in addition to the
+    log line and ``ServeEngine.fuse_reason``) so a perf regression cannot
+    hide as a quiet path downgrade; ``launch/serve.py --require-fused`` /
+    ``--require-pallas`` turn the same condition into a hard failure.
+    """
 
 
 # --------------------------------------------------------------------------- #
@@ -149,14 +185,18 @@ class ServeEngine:
     n_groups: int               # op groups (generic) or layer stages (fused)
     dtype: object
     fused: bool                 # True: pre-composed per-layer table path
-    path: str                   # "fused" | "generic" — which lowering ran
-    fuse_reason: str            # why the fused path was skipped ("" if fused)
+    path: str                   # "pallas" | "fused" | "generic"
+    fuse_reason: str            # downgrade reason(s); "" when the preferred
+                                # path ran
     input_f: List[int]
     input_signed: List[bool]
     input_widths: np.ndarray    # (n_inputs,) physical code widths
     output_f: List[int]
     mesh: object                # Mesh | None — request batches shard over DP
     _runner: Callable
+    n_launches: int = 0         # kernel launches per inference (pallas: 1;
+                                # fused/generic: one per stage/group)
+    packed_table_bytes: int = 0  # lane-packed table bytes ("pallas" only)
 
     def run(self, x_codes) -> jax.Array:
         """(B, n_inputs) integer codes -> (B, n_outputs) integer codes.
@@ -204,8 +244,12 @@ class ServeEngine:
 def compile_program(prog: DaisProgram, *, mesh=None,
                     dtype: Optional[object] = None,
                     fuse_layers: bool = True,
+                    engine: Optional[str] = None,
                     stages: Optional["FusedStages"] = None,
-                    jit: bool = True) -> ServeEngine:
+                    packed: Optional[object] = None,
+                    jit: bool = True,
+                    block_batch: Optional[int] = None,
+                    interpret: Optional[bool] = None) -> ServeEngine:
     """Lower a DAIS program to a jitted accelerator engine.
 
     When the program is a closed chain of "lut" segments (the
@@ -221,48 +265,90 @@ def compile_program(prog: DaisProgram, *, mesh=None,
     a compiled-artifact bundle) — skips the table-composition pass entirely,
     which is the cold-start cost ``launch/serve.py --artifact`` avoids.
 
+    ``engine``: preferred lowering — ``"pallas"`` (the single-launch
+    bit-packed mega-kernel of ``kernels/lut_serve_pallas.py``),
+    ``"fused"`` (per-stage jitted JAX ops; the default), or ``"groups"``
+    (force the generic levelized runner).  Unavailable preferences degrade
+    ``pallas -> fused -> generic``; ``packed`` optionally supplies a
+    pre-packed :class:`~repro.kernels.lut_serve_pallas.PackedStages` (from
+    a v3 artifact bundle), and ``block_batch`` / ``interpret`` pass
+    through to the Pallas runner.  ``fuse_layers=False`` is the legacy
+    spelling of ``engine="groups"``.
+
     ``mesh``: optional ``jax.sharding.Mesh`` — the batch axis of inputs and
     register values is sharded over its DP axes via
     ``parallel.sharding.constrain`` (the program itself is replicated: it is
     weights, i.e. a few KB of tables and shift constants).
 
-    The chosen lowering is recorded on ``ServeEngine.path`` ("fused" /
-    "generic"); a fall-back from the fused path is never silent — its
-    reason is logged and kept on ``ServeEngine.fuse_reason`` so tests and
-    benchmarks can assert which path ran and why.
+    The chosen lowering is recorded on ``ServeEngine.path`` ("pallas" /
+    "fused" / "generic"); a fall-back from a preferred path is never
+    silent — every downgrade raises :class:`EnginePathWarning` at compile
+    time, is logged, and is kept on ``ServeEngine.fuse_reason`` so tests
+    and benchmarks can assert which path ran and why.
     """
+    want = engine if engine is not None else \
+        ("fused" if fuse_layers else "groups")
+    if want not in ("pallas", "fused", "groups"):
+        raise ValueError(
+            f"unknown engine {want!r} (choices: pallas, fused, groups)")
     if dtype is None:
         # required_width covers transient pre-clamp REQUANT / pre-add align
         # values, which can exceed every declared register width
         dtype = _pick_dtype(prog.required_width())
+    else:
+        _check_dtype(dtype, prog.required_width())
 
     in_instrs = [ins for ins in prog.instrs if ins.op == "IN"]
     input_widths = np.asarray([ins.reg.width for ins in in_instrs], np.int64)
 
-    run, n_groups, reason = None, 0, "fused path disabled (fuse_layers=False)"
-    if fuse_layers:
+    run, n_groups, path = None, 0, "generic"
+    n_launches, packed_bytes = 0, 0
+    downgrades: List[str] = []
+    reason = ""
+    if want in ("pallas", "fused") and stages is None:
+        stages, reason = compose_fused_stages(prog, dtype)
+    if want == "pallas":
         if stages is None:
-            stages, reason = compose_fused_stages(prog, dtype)
+            downgrades.append(f"pallas (and fused) unavailable: {reason}")
         else:
-            reason = ""
+            from repro.kernels import lut_serve_pallas as _pallas
+            try:
+                if packed is None:
+                    packed = _pallas.pack_stages(stages, dtype)
+                run = _pallas.pallas_runner(packed, dtype, mesh,
+                                            block_batch=block_batch,
+                                            interpret=interpret)
+                path, n_groups = "pallas", packed.n_stages()
+                n_launches, packed_bytes = 1, packed.table_bytes()
+            except _pallas.PackError as e:
+                downgrades.append(f"pallas unavailable: {e}")
+    if run is None and want in ("pallas", "fused"):
         if stages is not None:
-            run, n_groups = _fused_runner(stages, dtype, mesh), stages.n_stages()
-    fused = run is not None
+            run, path = _fused_runner(stages, dtype, mesh), "fused"
+            n_groups = n_launches = stages.n_stages()
+        elif want == "fused":
+            downgrades.append(f"fused unavailable: {reason}")
     if run is None:
-        if fuse_layers:
-            logger.warning(
-                "fused lowering unavailable (%s); using the generic "
-                "levelized group runner", reason)
         run, n_groups = _group_runner(prog, dtype, mesh)
+        path, n_launches = "generic", n_groups
+    if want == "groups" and not fuse_layers and engine is None:
+        # legacy spelling: keep the documented fuse_reason wording
+        downgrades = ["fused path disabled (fuse_layers=False)"]
+    elif downgrades:
+        msg = (f"engine path downgraded to {path!r}: "
+               + "; ".join(downgrades))
+        warnings.warn(EnginePathWarning(msg), stacklevel=2)
+        logger.warning("%s", msg)
 
     return ServeEngine(
         n_inputs=len(prog.input_f), n_outputs=len(prog.outputs),
-        n_instrs=prog.n_instrs(), n_groups=n_groups, dtype=dtype, fused=fused,
-        path="fused" if fused else "generic",
-        fuse_reason="" if fused else reason,
+        n_instrs=prog.n_instrs(), n_groups=n_groups, dtype=dtype,
+        fused=path in ("fused", "pallas"), path=path,
+        fuse_reason="; ".join(downgrades),
         input_f=list(prog.input_f), input_signed=list(prog.input_signed),
         input_widths=input_widths, output_f=list(prog.output_f),
-        mesh=mesh, _runner=jax.jit(run) if jit else run)
+        mesh=mesh, _runner=jax.jit(run) if jit else run,
+        n_launches=n_launches, packed_table_bytes=packed_bytes)
 
 
 def _group_runner(prog: DaisProgram, dtype, mesh):

@@ -1,0 +1,377 @@
+"""Serve-side Pallas mega-kernel: the whole stage chain in ONE launch.
+
+The fused engine of ``kernels/lut_serve.py`` is already a single jitted
+function, but XLA lowers it as a chain of full-batch ops: every stage
+materializes its ``(B, S, J, co)`` requant/gather intermediates before the
+next stage starts, so at production batch sizes the inter-stage activations
+round-trip through HBM (on CPU: blow out the cache) once per stage.  This
+module executes the *entire* :class:`~repro.kernels.lut_serve.FusedStages`
+chain inside one ``pl.pallas_call``: per batch tile, site-gather → requant
+→ table-gather → Σ → epilogue for every stage back to back, with the
+inter-stage values living in the tile's registers/VMEM and only the input
+codes and final output codes touching HBM.
+
+Packing (:func:`pack_stages` → :class:`PackedStages`)
+-----------------------------------------------------
+The compile-time lowering from ``FusedStages``, done once per engine:
+
+* **out-shift folding** — a "lut" stage's per-cell alignment shift
+  (``table[...] << out_shift``, an extra op over the full ``(B,S,J,co)``
+  gather result) is applied to the *table entries* at pack time.  Exact:
+  the runtime sums the same shifted magnitudes the fused engine computes.
+* **int8/int16/int32 lane packing** — each stage's (DCE-sliced, post
+  ``core/opt.py`` row slicing) shared table is stored in the narrowest
+  signed lane dtype holding every folded entry; the kernel's gather reads
+  the lane and **sign-extends** (``astype`` to the compute dtype).  Tables
+  the fused engine keeps at 4–8 B/entry typically pack to 1 B/entry, which
+  is what makes whole-chain table residency realistic.
+* **in-shift elision** — stages whose per-cell input grids already match
+  (every ``in_shift == 0`` — all enumerated HGQ stages, and LUT stages
+  whose incoming grid equals the table grid) statically skip the
+  round-half-to-even ``_shift_round`` block, the widest intermediate of
+  the fused runtime.
+* **sum-stage coefficients** — a table-free stage's ``sign * (v << shift)``
+  becomes one multiply by the precomputed ``coef = sign << shift``
+  (alignment shifts are non-negative by construction; packing refuses
+  otherwise rather than guess).
+* **residency budget** — packing fails with :exc:`PackError` (and the
+  engine falls back to the fused path, never silently) when the packed
+  tables + stage constants exceed ``vmem_budget`` bytes: a chain whose
+  tables cannot stay resident gains nothing from a single launch.
+
+Execution (:func:`pallas_runner`)
+---------------------------------
+Grid = 1-D over batch tiles (``block_batch`` rows per program instance,
+shrunk to the padded batch for small scheduler buckets).  The stage loop is
+statically unrolled inside the kernel; gather/output indices are baked in
+as constants, while tables, masks, shifts, biases and epilogue parameters
+arrive as full-array block inputs (VMEM-resident across the chain).  A
+second grid axis over stage width is deliberately absent: stages are
+all-to-all (every output column may read any input column), so a width
+tile would have to re-materialize the full inter-stage vector anyway —
+width stays a vector axis inside the tile and the residency budget bounds
+it instead.  Bit-exactness reuses the same ``_shift_round`` /
+``_requant_cols`` primitives as the fused engine and is gated by the same
+``verify_engine`` before anything serves or is benchmarked.
+
+On non-TPU backends the kernel runs with ``interpret=True`` (under ``jit``
+this still compiles to XLA), so CPU CI executes the identical kernel
+logic; CPU speedups come from tile-resident intermediates and the packing
+optimizations above, not from Mosaic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.lut_serve import (EpiOp, FusedStages, _requant_cols,
+                                     _shift_round)
+
+# default batch tile: big enough to amortize the grid step, small enough
+# that a few stages of (TB, S, co) intermediates stay cache/VMEM-resident
+# (picked by sweeping 64..1024 at batch 1024 on the bench models)
+DEF_BLOCK_BATCH = 512
+
+# packed tables + stage constants must fit comfortably in VMEM (~16 MB on
+# current TPUs) with room for the batch tile and its intermediates
+DEF_VMEM_BUDGET = 8 << 20
+
+
+class PackError(Exception):
+    """The stage chain cannot be packed; message is the fallback reason."""
+
+
+@dataclasses.dataclass
+class PackedStage:
+    """One stage of the mega-kernel, constants pre-folded and lane-packed.
+
+    Mirrors :class:`~repro.kernels.lut_serve.FusedStage` with the runtime
+    work moved to pack time: ``table`` holds the out-shift-folded entries
+    in the narrowest signed lane dtype (sign-extended on read),
+    ``in_shift`` is ``None`` when the whole stage needs no input requant,
+    and a "sum" stage carries the single ``coef`` multiplier instead of
+    (signs, shifts).
+    """
+
+    kind: str                    # "lut" | "sum"
+    gather: np.ndarray           # (S, J) int64; == n_cols -> zero column
+    n_cols: int                  # incoming flat width
+    bias: np.ndarray             # (S, co)
+    epilogue: List[EpiOp]
+    # kind "lut"
+    in_shift: Optional[np.ndarray] = None  # (J, co); None == all zero
+    mask: Optional[np.ndarray] = None      # (J, co)
+    table: Optional[np.ndarray] = None     # (J, co, E), lane dtype
+    # kind "sum"
+    coef: Optional[np.ndarray] = None      # (S, J) = sign << shift
+
+    @property
+    def n_sites(self) -> int:
+        return self.gather.shape[0]
+
+    @property
+    def c_out(self) -> int:
+        return self.bias.shape[1]
+
+
+@dataclasses.dataclass
+class PackedStages:
+    """The packed lowering of a :class:`FusedStages` chain (plain data).
+
+    Persisted by the compiled-artifact bundle (format v3) so a cold start
+    skips the packing pass; :func:`pallas_runner` turns it into the
+    single-launch runtime.
+    """
+
+    stages: List[PackedStage]
+    out_cols: np.ndarray         # (n_outputs,) columns of the final stage
+    n_cols0: int                 # input width of the first stage
+
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+    def table_bytes(self) -> int:
+        """Bytes of packed (lane-dtype, out-shift-folded) tables."""
+        return int(sum(st.table.nbytes for st in self.stages
+                       if st.table is not None))
+
+    def resident_bytes(self) -> int:
+        """Everything the kernel keeps resident: tables + stage constants."""
+        total = 0
+        for st in self.stages:
+            for a in (st.table, st.mask, st.in_shift, st.bias, st.coef,
+                      st.gather):
+                if a is not None:
+                    total += a.nbytes
+            total += sum(np.asarray(e.params).nbytes for e in st.epilogue)
+        return total
+
+
+def _lane_dtype(a: np.ndarray, ed) -> np.dtype:
+    """Narrowest signed integer dtype holding every value of ``a``.
+
+    Bounded above by the engine dtype ``ed`` — a table whose folded values
+    need more bits than the engine computes in would already be an
+    overflow bug upstream.
+    """
+    if a.size == 0:
+        return np.dtype(np.int8)
+    lo, hi = int(a.min()), int(a.max())
+    for dt in (np.int8, np.int16, np.int32):
+        info = np.iinfo(dt)
+        if lo >= info.min and hi <= info.max \
+                and np.dtype(dt).itemsize <= np.dtype(ed).itemsize:
+            return np.dtype(dt)
+    return np.dtype(ed)
+
+
+def pack_stages(stages: FusedStages, dtype: Optional[object] = None, *,
+                vmem_budget: int = DEF_VMEM_BUDGET) -> PackedStages:
+    """Lower composed stages to the packed mega-kernel layout.
+
+    ``dtype`` is the engine compute dtype (int32/int64); ``None`` packs
+    with int64 arithmetic, which is wrap-identical for any program the
+    int32 engine legally runs (``required_width() <= 30`` bounds every
+    transient).  Raises :exc:`PackError` when the chain cannot be packed
+    faithfully or busts the residency budget.
+    """
+    ed = np.int32 if (dtype is not None
+                      and jnp.dtype(dtype) == jnp.dtype(jnp.int32)) \
+        else np.int64
+    packed: List[PackedStage] = []
+    for st in stages.stages:
+        bias = np.asarray(st.bias, np.int64).astype(ed)
+        epis = [EpiOp(op=e.op, mode=e.mode,
+                      params=np.asarray(e.params, np.int64))
+                for e in st.epilogue]
+        if st.kind == "lut":
+            out_shift = np.asarray(st.out_shift, np.int64)
+            if (out_shift < 0).any():
+                raise PackError("negative out_shift cannot fold into a table")
+            # fold the per-cell alignment shift into the entries, in engine
+            # arithmetic so any wrap matches the fused runtime bit-for-bit
+            shifted = np.asarray(st.table, np.int64).astype(ed) \
+                << out_shift.astype(ed)[:, :, None]
+            in_shift = np.asarray(st.in_shift, np.int64)
+            packed.append(PackedStage(
+                kind="lut", gather=np.asarray(st.gather, np.int64),
+                n_cols=st.n_cols, bias=bias, epilogue=epis,
+                in_shift=None if not in_shift.any() else in_shift,
+                mask=np.asarray(st.mask, np.int64),
+                table=shifted.astype(_lane_dtype(shifted, ed))))
+        elif st.kind == "sum":
+            shifts = np.asarray(st.shifts, np.int64)
+            if (shifts < 0).any():
+                raise PackError("negative alignment shift in a sum stage")
+            coef = np.asarray(st.signs, np.int64).astype(ed) \
+                << shifts.astype(ed)
+            packed.append(PackedStage(
+                kind="sum", gather=np.asarray(st.gather, np.int64),
+                n_cols=st.n_cols, bias=bias, epilogue=epis, coef=coef))
+        else:
+            raise PackError(f"unknown stage kind {st.kind!r}")
+    out = PackedStages(stages=packed,
+                       out_cols=np.asarray(stages.out_cols, np.int64),
+                       n_cols0=packed[0].n_cols if packed else 0)
+    resident = out.resident_bytes()
+    if resident > vmem_budget:
+        raise PackError(
+            f"packed tables + constants need {resident} bytes resident "
+            f"(> vmem_budget={vmem_budget}); the chain cannot stay "
+            f"table-resident in one launch")
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# the kernel
+# --------------------------------------------------------------------------- #
+def _const_arrays(packed: PackedStages, cdtype):
+    """Flatten per-stage constants into one input list + name->index maps.
+
+    Tables keep their packed lane dtype (sign-extended inside the kernel);
+    every other array is coerced to the compute dtype so a bundle packed
+    under a different x64 setting still runs.
+    """
+    ed = np.int32 if jnp.dtype(cdtype) == jnp.dtype(jnp.int32) else np.int64
+    arrays: List[np.ndarray] = []
+    entries: List[dict] = []
+    for st in packed.stages:
+        ent = {}
+
+        def add(name, a, _ent=ent):
+            _ent[name] = len(arrays)
+            arrays.append(a)
+
+        gather = np.asarray(st.gather, np.int64)
+        # static specializations the kernel builder reads back off the
+        # PackedStage: an identity gather (one site reading every incoming
+        # column in order — the LUT-Dense stack shape) is a pure reshape,
+        # and a gather that never hits the implicit zero column skips the
+        # zero-pad concat
+        identity = bool(
+            gather.size == st.n_cols
+            and np.array_equal(gather.ravel(), np.arange(st.n_cols)))
+        if not identity:
+            add("gather", gather.astype(np.int32))
+        add("bias", np.asarray(st.bias, np.int64).astype(ed))
+        if st.kind == "lut":
+            if st.in_shift is not None:
+                add("in_shift", np.asarray(st.in_shift, np.int64).astype(ed))
+            add("mask", np.asarray(st.mask, np.int64).astype(ed))
+            add("table", np.asarray(st.table))        # keep the lane dtype
+        else:
+            add("coef", np.asarray(st.coef, np.int64).astype(ed))
+        for m, e in enumerate(st.epilogue):
+            add(f"epi{m}", np.asarray(e.params, np.int64).astype(ed))
+        entries.append(ent)
+    out_cols_idx = len(arrays)
+    arrays.append(np.asarray(packed.out_cols, np.int32))
+    return arrays, entries, out_cols_idx
+
+
+def _make_kernel(packed: PackedStages, entries, out_cols_idx: int):
+    """Build the mega-kernel body: the stage loop, statically unrolled."""
+
+    def kernel(*refs):
+        x_ref, consts, out_ref = refs[0], refs[1:-1], refs[-1]
+        v = x_ref[...]                                  # (TB, n_cols0)
+        for st, ent in zip(packed.stages, entries):
+            tb = v.shape[0]
+            if "gather" not in ent:                     # identity gather
+                g = v.reshape(tb, *st.gather.shape)     # (TB, S, J)
+            else:
+                if bool((np.asarray(st.gather) >= st.n_cols).any()):
+                    # implicit all-zero column at index n_cols (im2col pad)
+                    v = jnp.concatenate(
+                        [v, jnp.zeros((tb, 1), v.dtype)], axis=1)
+                g = v[:, consts[ent["gather"]][...]]    # (TB, S, J)
+            if st.kind == "lut":
+                if st.in_shift is not None:
+                    code = _shift_round(g[..., None],
+                                        consts[ent["in_shift"]][...])
+                else:
+                    code = g[..., None]                 # grids already match
+                idx = code & consts[ent["mask"]][...]   # (TB, S, J, co)
+                table = consts[ent["table"]][...]       # (J, co, E) lane
+                j_n, co = st.mask.shape
+                jj = jax.lax.broadcasted_iota(jnp.int32, (j_n, co), 0)
+                ii = jax.lax.broadcasted_iota(jnp.int32, (j_n, co), 1)
+                vals = table[jj, ii, idx].astype(v.dtype)   # sign-extend
+                # pin the accumulator: under x64, integer sums otherwise
+                # promote to the default int64 and poison the int32 chain
+                acc = vals.sum(axis=2, dtype=v.dtype)   # (TB, S, co)
+            else:
+                coef = consts[ent["coef"]][...]         # (S, J)
+                acc = (g * coef[None]).sum(axis=-1, dtype=v.dtype)[..., None]
+            acc = acc + consts[ent["bias"]][...][None]
+            for m, epi in enumerate(st.epilogue):
+                p = consts[ent[f"epi{m}"]][...]
+                if epi.op == "REQUANT":
+                    res = _requant_cols(acc, p[..., 0][None], p[..., 1][None],
+                                        (p[..., 2] != 0)[None], epi.mode)
+                    if bool(np.all(np.asarray(epi.params)[..., 3] != 0)):
+                        acc = res                       # statically all-apply
+                    else:
+                        acc = jnp.where((p[..., 3] != 0)[None], res, acc)
+                else:                                   # CMUL
+                    acc = acc * p[None]
+            v = acc.reshape(tb, -1)
+        out_ref[...] = v[:, consts[out_cols_idx][...]]
+    return kernel
+
+
+def _full_spec(shape):
+    nd = len(shape)
+    return pl.BlockSpec(shape, lambda i, _nd=nd: (0,) * _nd)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def pallas_runner(packed: PackedStages, dtype, mesh=None, *,
+                  block_batch: Optional[int] = None,
+                  interpret: Optional[bool] = None):
+    """Close a :class:`PackedStages` over device constants -> runner fn.
+
+    Returns ``run(x: (B, n_cols0) cdtype) -> (B, n_outputs)``, the
+    single-``pallas_call`` chain.  ``interpret=None`` auto-selects
+    interpret mode off-TPU so the same kernel logic runs everywhere.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bb = int(block_batch or DEF_BLOCK_BATCH)
+    if bb < 1:
+        raise ValueError(f"block_batch must be >= 1, got {bb}")
+    consts_np, entries, out_cols_idx = _const_arrays(packed, dtype)
+    consts = [jnp.asarray(a) for a in consts_np]
+    const_specs = [_full_spec(a.shape) for a in consts_np]
+    kernel = _make_kernel(packed, entries, out_cols_idx)
+    n_in, n_out = packed.n_cols0, len(packed.out_cols)
+
+    def run(x):
+        if mesh is not None:
+            from repro.parallel.sharding import constrain
+            x = constrain(x, mesh, "batch", None)
+        b = x.shape[0]
+        # small scheduler buckets shrink the tile instead of padding to it
+        tb = min(bb, _next_pow2(b))
+        pb = -b % tb
+        xp = jnp.pad(x, ((0, pb), (0, 0))) if pb else x
+        out = pl.pallas_call(
+            kernel,
+            grid=((b + pb) // tb,),
+            in_specs=[pl.BlockSpec((tb, n_in), lambda i: (i, 0)),
+                      *const_specs],
+            out_specs=pl.BlockSpec((tb, n_out), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((b + pb, n_out), xp.dtype),
+            interpret=interpret,
+        )(xp, *consts)
+        return out[:b] if pb else out
+    return run

@@ -79,6 +79,11 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--serve-requests", type=int, default=None,
                     help="requests pushed through the scheduler for the "
                          "selected operating point (0 disables serving)")
+    ap.add_argument("--engine", choices=("fused", "pallas"), default="fused",
+                    help="serving engine for the per-snapshot latency "
+                         "columns and the served operating point: fused "
+                         "per-stage JAX ops (default) or the single-launch "
+                         "bit-packed Pallas mega-kernel")
     return ap
 
 
@@ -234,7 +239,7 @@ def run(args) -> dict:
                           for t in tables))
         prog = compile_sequential(layers, params_list, IN_F, IN_I)
         opt_prog, rep = eliminate_dead_cells(prog)
-        engine = compile_program(opt_prog)
+        engine = compile_program(opt_prog, engine=args.engine)
         gate = verify_engine(engine, prog,
                              n_random=256 if args.smoke else 1024,
                              seed=args.seed)
@@ -251,6 +256,7 @@ def run(args) -> dict:
             "n_instrs": rep.n_instrs_before,
             "n_instrs_dce": rep.n_instrs_after,
             "engine_path": engine.path,
+            "packed_table_bytes": engine.packed_table_bytes,
             "bench_batch": bench_batch, **bench,
             "verify": gate,
         })
@@ -337,7 +343,8 @@ def _serve_selected(args, bundle_dir, selected, opt_prog, gate,
         "est_luts": selected["est_luts"], "step": selected["step"],
         "dce_llut": selected["n_llut_live"]})
     art = load_artifact(bundle)
-    engine = build_engine(art)
+    engine = build_engine(art, engine=None if args.engine == "fused"
+                          else args.engine)
     print(f"[pareto] operating point bundled: {bundle} (hash {digest[:12]}, "
           f"attested β={art.attestation['beta']:.2e} "
           f"EBOPs={art.attestation['ebops']:.1f})")

@@ -13,6 +13,12 @@ sharded over the local mesh.  Before serving a single batch, a bit-exactness
 gate asserts the jitted engine matches the numpy DAIS interpreter on random
 and exhaustive-small inputs — we only serve what we verified.
 
+``--engine pallas`` is ``--engine tables`` with the single-launch
+bit-packed mega-kernel (``kernels.lut_serve_pallas``) preferred; a chain
+that cannot pack degrades to the fused path with a compile-time
+``EnginePathWarning``, and ``--require-pallas`` / ``--require-fused``
+turn any such downgrade into a hard exit instead of a quiet perf loss.
+
 ``--artifact <path>`` persists / reuses the compiled bundle
 (``repro.serve.artifact``): when the file exists the launcher cold-starts
 from it — no table extraction, no DAIS lowering, no fused-table composition
@@ -58,9 +64,12 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None,
                     help="LM arch config (required for --engine float)")
-    ap.add_argument("--engine", choices=("float", "tables"), default="float",
+    ap.add_argument("--engine", choices=("float", "tables", "pallas"),
+                    default="float",
                     help="float: LM prefill/decode; tables: compiled "
-                         "integer LUT artifact")
+                         "integer LUT artifact; pallas: tables with the "
+                         "single-launch bit-packed mega-kernel preferred "
+                         "(kernels/lut_serve_pallas.py)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -110,10 +119,22 @@ def main(argv=None) -> None:
                     help="scheduler coalescing deadline per request")
     ap.add_argument("--workers", type=int, default=1,
                     help="scheduler engine-call threads")
+    ap.add_argument("--require-fused", action="store_true",
+                    help="fail loudly (exit) unless the engine compiled on "
+                         "the fused shared-table path or better — an "
+                         "EnginePathWarning downgrade to the generic path "
+                         "cannot pass as a silent perf regression")
+    ap.add_argument("--require-pallas", action="store_true",
+                    help="imply --engine pallas and fail loudly unless the "
+                         "single-launch Pallas mega-kernel actually compiled")
     args = ap.parse_args(argv)
 
-    if args.engine == "tables":
+    if args.require_pallas and args.engine == "float":
+        args.engine = "pallas"
+    if args.engine in ("tables", "pallas"):
         return serve_tables(args)
+    if args.require_fused:
+        ap.error("--require-fused only applies to --engine tables/pallas")
     if args.arch is None:
         ap.error("--arch is required with --engine float")
 
@@ -199,6 +220,26 @@ def _build_model_program(args):
     return prog, f"model=lut-stack dims={dims}"
 
 
+def _enforce_path(args, engine) -> None:
+    """``--require-fused`` / ``--require-pallas``: downgrades fail loudly.
+
+    ``compile_program`` already warns (:class:`EnginePathWarning`) on every
+    path downgrade; these flags are for deployments where a warning is not
+    loud enough — the launcher exits with the downgrade reason instead of
+    serving at a lower tier.
+    """
+    why = engine.fuse_reason or "no downgrade reason recorded"
+    if getattr(args, "require_pallas", False) and engine.path != "pallas":
+        raise SystemExit(
+            f"--require-pallas: engine compiled on the {engine.path!r} "
+            f"path, not the Pallas mega-kernel ({why})")
+    if getattr(args, "require_fused", False) \
+            and engine.path not in ("pallas", "fused"):
+        raise SystemExit(
+            f"--require-fused: engine compiled on the generic "
+            f"{engine.path!r} path ({why})")
+
+
 def _tables_engine(args, mesh):
     """Build (or cold-start) the verified integer engine per the CLI flags.
 
@@ -213,6 +254,8 @@ def _tables_engine(args, mesh):
     from repro.kernels.lut_serve import compile_program, verify_engine
     from repro.serve.artifact import build_engine, load_artifact, save_artifact
 
+    prefer = "pallas" if (args.engine == "pallas"
+                          or args.require_pallas) else None
     if args.artifact and os.path.exists(args.artifact):
         if args.dce:
             raise SystemExit(
@@ -222,8 +265,9 @@ def _tables_engine(args, mesh):
                 "elsewhere) and re-run with --dce to save an optimized one.")
         t0 = time.time()
         art = load_artifact(args.artifact)
-        engine = build_engine(art, mesh=mesh)
+        engine = build_engine(art, mesh=mesh, engine=prefer)
         t_load = time.time() - t0
+        _enforce_path(args, engine)
         print(f"[serve] artifact loaded: {args.artifact} "
               f"(hash {art.content_hash[:12]}, path={engine.path}, "
               f"{t_load:.2f}s — no re-lowering)")
@@ -251,7 +295,8 @@ def _tables_engine(args, mesh):
         prog, report = eliminate_dead_cells(prog)
         print(f"[serve] dce: {report.summary()}")
     t0 = time.time()
-    engine = compile_program(prog, mesh=mesh)
+    engine = compile_program(prog, mesh=mesh, engine=prefer)
+    _enforce_path(args, engine)
     # with --dce the gate runs the engine built from the OPTIMIZED program
     # against the UNoptimized interpreter — it proves the pass, not just
     # the lowering
@@ -259,10 +304,13 @@ def _tables_engine(args, mesh):
                          n_random=256 if args.smoke else 2048,
                          seed=args.seed)
     t_gate = time.time() - t0
+    pk = (f" launches={engine.n_launches} "
+          f"packed_table_bytes={engine.packed_table_bytes}"
+          if engine.path == "pallas" else "")
     print(f"[serve] engine=tables {model_desc} instrs={prog.n_instrs()} "
           f"path={engine.path} groups={engine.n_groups} "
           f"dtype={np.dtype(engine.dtype).name} "
-          f"mesh={tuple(mesh.devices.shape)}")
+          f"mesh={tuple(mesh.devices.shape)}{pk}")
     print(f"[serve] bit-exact gate PASSED: {gate['random']} random + "
           f"{gate['exhaustive']} exhaustive rows vs DaisProgram.run "
           f"(lower {t_compile:.2f}s, gate {t_gate:.2f}s)")

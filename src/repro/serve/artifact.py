@@ -19,9 +19,18 @@ atomic ``.npz``:
 
 Format versions (negotiated by :func:`load_artifact`):
 
-* **v2** (current) — graph-lowered programs with the shared-table layout:
-  segments carry the spatial site axis and ``fused/*`` holds the
-  generalized stage IR.  Hybrid conv programs fuse and round-trip.
+* **v3** (current) — v2 plus the ``packed/*`` payload: the Pallas
+  mega-kernel's bit-packed table layout
+  (:class:`~repro.kernels.lut_serve_pallas.PackedStages` — out-shift
+  folded, lane-dtype tables, sum-stage coefficients), so an
+  ``engine="pallas"`` cold start skips the packing pass.  Only what the
+  packing *derives* is stored (lane tables, coefficients, in-shift
+  elision flags); the shared gathers/biases/epilogues are reconstructed
+  from the ``fused/*`` stage IR they equal.
+* **v2** (read-only) — graph-lowered programs with the shared-table
+  layout: segments carry the spatial site axis and ``fused/*`` holds the
+  generalized stage IR.  Hybrid conv programs fuse and round-trip.  Loads
+  with no packed payload; a Pallas engine re-packs from the fused stages.
 * **v1** (read-only) — flat sequential programs.  v1 bundles still load
   bit-exactly: the program deserializes through the versioned
   ``DaisProgram.from_arrays``, and the *legacy* ``fused/*`` payload (whose
@@ -64,11 +73,13 @@ from repro.core.dais import _MODE_CODES, DaisProgram
 from repro.kernels.lut_serve import (EpiOp, FusedStage, FusedStages,
                                      ServeEngine, compile_program,
                                      compose_fused_stages)
+from repro.kernels.lut_serve_pallas import (PackedStage, PackedStages,
+                                            PackError, pack_stages)
 
 logger = logging.getLogger(__name__)
 
-FORMAT_VERSION = 2
-_SUPPORTED_VERSIONS = (1, 2)
+FORMAT_VERSION = 3
+_SUPPORTED_VERSIONS = (1, 2, 3)
 _STAGE_KINDS = ("lut", "sum")
 _EPI_OPS = ("REQUANT", "CMUL")
 
@@ -132,6 +143,56 @@ def _data_arrays(prog: DaisProgram,
     return arrays
 
 
+def _packed_arrays(packed: PackedStages) -> Dict[str, np.ndarray]:
+    """The v3 ``packed/*`` payload: only what :func:`pack_stages` derives.
+
+    Per "lut" stage the out-shift-folded table in its lane dtype plus the
+    in-shift-elision flag; per "sum" stage the ``sign << shift``
+    coefficients.  Gathers, biases, masks and epilogues are *not* repeated —
+    the loader reconstructs them from the ``fused/*`` stage IR they equal.
+    """
+    arrays = {"packed/n_stages": np.asarray([packed.n_stages()], np.int64)}
+    for k, st in enumerate(packed.stages):
+        p = f"packed/stage{k}_"
+        if st.kind == "lut":
+            arrays[p + "table"] = np.asarray(st.table)      # lane dtype
+            arrays[p + "flags"] = np.asarray(
+                [st.in_shift is not None], np.int64)
+        else:
+            arrays[p + "coef"] = np.asarray(st.coef, np.int64)
+    return arrays
+
+
+def _packed_from_arrays(arrays: Dict[str, np.ndarray],
+                        stages: FusedStages) -> PackedStages:
+    """Rebuild :class:`PackedStages` from ``packed/*`` + the fused stage IR."""
+    n = int(arrays["packed/n_stages"][0])
+    if n != stages.n_stages():
+        raise ArtifactError(
+            f"packed payload has {n} stages but the fused IR has "
+            f"{stages.n_stages()} — bundle is internally inconsistent")
+    out = []
+    for k, st in enumerate(stages.stages):
+        p = f"packed/stage{k}_"
+        common = dict(kind=st.kind, gather=np.asarray(st.gather, np.int64),
+                      n_cols=st.n_cols, bias=np.asarray(st.bias, np.int64),
+                      epilogue=[EpiOp(op=e.op, mode=e.mode,
+                                      params=np.asarray(e.params, np.int64))
+                                for e in st.epilogue])
+        if st.kind == "lut":
+            in_shift = np.asarray(st.in_shift, np.int64)
+            out.append(PackedStage(
+                **common,
+                in_shift=in_shift if bool(arrays[p + "flags"][0]) else None,
+                mask=np.asarray(st.mask, np.int64),
+                table=arrays[p + "table"]))
+        else:
+            out.append(PackedStage(**common, coef=arrays[p + "coef"]))
+    return PackedStages(stages=out,
+                        out_cols=np.asarray(stages.out_cols, np.int64),
+                        n_cols0=out[0].n_cols if out else 0)
+
+
 def _stages_from_arrays(arrays: Dict[str, np.ndarray]) -> FusedStages:
     """Rebuild the v2 stage IR written by :func:`_data_arrays`."""
     n = int(arrays["fused/n_stages"][0])
@@ -162,6 +223,7 @@ def _stages_from_arrays(arrays: Dict[str, np.ndarray]) -> FusedStages:
 
 def save_artifact(path: str, prog: DaisProgram, *,
                   stages: Optional[FusedStages] = None,
+                  packed: Optional[PackedStages] = None,
                   compose: bool = True,
                   attestation: Optional[dict] = None) -> str:
     """Write an atomic bundle; returns its content hash.
@@ -171,16 +233,30 @@ def save_artifact(path: str, prog: DaisProgram, *,
     when omitted — programs that don't fit the fused pattern simply store no
     ``fused/*`` payload and rebuild on the generic path.
 
+    ``packed``: the Pallas mega-kernel lowering; when omitted it is derived
+    here with canonical int64 packing (wrap-identical for any program the
+    int32 engine legally runs).  A chain that cannot pack (negative shifts,
+    residency budget) stores no ``packed/*`` payload — the bundle still
+    loads, and a Pallas engine degrades exactly as a fresh compile would.
+
     ``attestation``: the dict returned by ``verify_engine`` — stored in the
     bundle metadata as the proof-of-verification that
     ``--skip-verify-cached`` trusts.
     """
     if stages is None and compose:
         stages, _reason = compose_fused_stages(prog)
+    if packed is None and stages is not None:
+        try:
+            packed = pack_stages(stages)
+        except PackError as e:
+            logger.info("bundle %s: no packed payload (%s)", path, e)
     arrays = _data_arrays(prog, stages)
+    if packed is not None:
+        arrays.update(_packed_arrays(packed))
     meta_core = {
         "format_version": FORMAT_VERSION,
         "fused": stages is not None,
+        "packed": packed is not None,
         "attestation": attestation,
     }
     digest = _bundle_digest(arrays, meta_core)
@@ -201,6 +277,7 @@ class LoadedArtifact:
     stages: Optional[FusedStages]
     meta: dict
     content_hash: str    # recomputed at load == meta["content_hash"]
+    packed: Optional[PackedStages] = None   # v3 Pallas payload
 
     @property
     def attestation(self) -> Optional[dict]:
@@ -239,8 +316,11 @@ def load_artifact(path: str) -> LoadedArtifact:
         {k[len("prog/"):]: v for k, v in arrays.items()
          if k.startswith("prog/")})
     stages = None
+    packed = None
     if meta.get("fused") and version >= 2:
         stages = _stages_from_arrays(arrays)
+        if meta.get("packed") and version >= 3:
+            packed = _packed_from_arrays(arrays, stages)
     elif meta.get("fused"):
         # backward-compat rule: v1 bundles stay loadable and bit-exact, but
         # their pre-v2 fused layout is superseded — drop it and let
@@ -248,16 +328,20 @@ def load_artifact(path: str) -> LoadedArtifact:
         logger.info("v1 bundle %s: legacy fused payload ignored; stages "
                     "will be recomposed from the program", path)
     return LoadedArtifact(prog=prog, stages=stages, meta=meta,
-                          content_hash=digest)
+                          content_hash=digest, packed=packed)
 
 
-def build_engine(art: LoadedArtifact, *, mesh=None,
-                 jit: bool = True) -> ServeEngine:
+def build_engine(art: LoadedArtifact, *, mesh=None, jit: bool = True,
+                 engine: Optional[str] = None) -> ServeEngine:
     """Engine from a loaded bundle — no re-lowering, no table composition.
 
     The stored ``fused/*`` stages (when present) go straight into
     ``compile_program(stages=...)``; the serialized program still rides
     along for metadata, dtype sizing, and the generic fallback path.
+    ``engine="pallas"`` additionally hands over the stored ``packed/*``
+    payload (v3 bundles), so the mega-kernel cold start skips both the
+    composition *and* the packing pass; pre-v3 bundles simply re-pack.
     """
     return compile_program(art.prog, mesh=mesh, jit=jit,
-                           fuse_layers=True, stages=art.stages)
+                           fuse_layers=True, stages=art.stages,
+                           engine=engine, packed=art.packed)

@@ -167,6 +167,9 @@ class MicroBatcher:
         self._pool: Optional[ThreadPoolExecutor] = None
         self._closed = False
         self._lock = threading.Lock()
+        # serializes submit's closed-check+enqueue against stop's close, so
+        # every accepted request is queued ahead of the _STOP sentinel
+        self._submit_lock = threading.Lock()
         self._latencies_s: List[float] = []
         self._batch_fill: List[int] = []
         self._batch_bucket: List[int] = []
@@ -189,15 +192,18 @@ class MicroBatcher:
     def stop(self) -> None:
         """Drain the queue, run the final flush, join all workers.
 
-        A request that races the shutdown (passed ``submit``'s closed check
-        just as stop ran) can land in the queue after the collector's final
-        drain; rather than stranding its future forever, the post-join sweep
-        here fails it loudly.
+        Closing and the ``_STOP`` enqueue happen under ``_submit_lock``, the
+        same lock ``submit`` holds across its closed-check + enqueue — so
+        every accepted request sits in the queue *ahead of* the sentinel and
+        is served by the collector's final drain.  The post-join sweep below
+        is a backstop: anything it still finds is failed loudly rather than
+        stranded as a forever-pending future.
         """
         if self._collector is None:
             return
-        self._closed = True
-        self._queue.put(_STOP)
+        with self._submit_lock:
+            self._closed = True
+            self._queue.put(_STOP)
         self._collector.join()
         self._pool.shutdown(wait=True)
         self._collector = None
@@ -228,10 +234,11 @@ class MicroBatcher:
             raise ValueError(
                 f"request must be ({self.engine.n_inputs},) codes, "
                 f"got shape {codes.shape}")
-        if self._closed or self._collector is None:
-            raise RuntimeError("scheduler is not running")
-        req = _Request(codes)
-        self._queue.put(req)
+        with self._submit_lock:
+            if self._closed or self._collector is None:
+                raise RuntimeError("scheduler is not running")
+            req = _Request(codes)
+            self._queue.put(req)
         return req.future
 
     def submit_many(self, codes) -> List[Future]:
@@ -323,9 +330,12 @@ class MicroBatcher:
             lat = np.asarray(self._latencies_s, np.float64)
             fill = np.asarray(self._batch_fill, np.float64)
             bucket = np.asarray(self._batch_bucket, np.float64)
+        engine_path = getattr(self.engine, "path", None)
         if lat.size == 0:
-            return {"n_requests": 0, "n_batches": 0}
+            return {"n_requests": 0, "n_batches": 0,
+                    "engine_path": engine_path}
         return {
+            "engine_path": engine_path,
             "n_requests": int(lat.size),
             "n_batches": int(fill.size),
             "p50_ms": float(np.percentile(lat, 50) * 1e3),

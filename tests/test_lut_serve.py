@@ -311,6 +311,43 @@ def test_required_width_guards_transient_requant_overflow():
             compile_program(prog)
 
 
+def test_explicit_dtype_that_overflows_is_rejected():
+    """Regression: an *explicit* engine dtype used to skip the width guard.
+
+    Two silent-wrap holes: dtype=int32 on a program whose transients need
+    more than 30 bits, and dtype=int64 with JAX_ENABLE_X64 off (jax then
+    silently downgrades every array to int32).  Both must raise with an
+    actionable message, not serve wrapped values."""
+    from repro.core.dais import DaisProgram, Reg
+    prog = DaisProgram()
+    prog.input_f = [0]
+    prog.input_signed = [True]
+    r0 = prog.emit("IN", (0,), Reg(f=0, width=29, signed=True))
+    r1 = prog.emit("REQUANT", (r0, 6, 23, True, "SAT", 0),
+                   Reg(f=6, width=30, signed=True))
+    prog.outputs = [r1]
+    prog.output_f = [6]
+    assert prog.required_width() > 30
+
+    with pytest.raises(ValueError, match="overflow-wrap"):
+        compile_program(prog, dtype=jnp.int32)
+    if not getattr(jax.config, "jax_enable_x64", False):
+        # the sneaky case: int64 was *requested* but x64-off jax would
+        # hand back int32 arrays — the guard must see through the alias
+        with pytest.raises(ValueError, match="X64"):
+            compile_program(prog, dtype=jnp.int64)
+    else:
+        verify_engine(compile_program(prog, dtype=jnp.int64), prog,
+                      n_random=64)
+
+    # a program int32 genuinely covers still accepts an explicit int32
+    layer = LUTDense(3, 2, hidden=4)
+    small = compile_sequential([layer], [layer.init(KEY)], 1, 1)
+    assert small.required_width() <= 30
+    verify_engine(compile_program(small, dtype=jnp.int32), small,
+                  n_random=64)
+
+
 # --------------------------------------------------------------------------- #
 # schedule view invariants
 # --------------------------------------------------------------------------- #

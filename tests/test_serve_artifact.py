@@ -171,8 +171,9 @@ def _hybrid_conv_prog():
 
 
 def test_conv_hybrid_bundle_round_trip_v2(tmp_path):
-    """Acceptance: artifact v2 round-trips the hybrid conv program (shared
-    conv tables, hgq stage, window sum) bit-exactly on the fused path."""
+    """Acceptance: the current bundle format round-trips the hybrid conv
+    program (shared conv tables, hgq stage, window sum) bit-exactly on the
+    fused path."""
     prog = _hybrid_conv_prog()
     fresh = compile_program(prog)
     gate = verify_engine(fresh, prog, n_random=256)
@@ -180,7 +181,7 @@ def test_conv_hybrid_bundle_round_trip_v2(tmp_path):
     save_artifact(path, prog, attestation=gate)
 
     art = load_artifact(path)
-    assert art.meta["format_version"] == 2
+    assert art.meta["format_version"] == 3
     assert art.stages is not None and art.stages.n_stages() == 4
     loaded = build_engine(art)
     assert loaded.path == "fused"
