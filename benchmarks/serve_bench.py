@@ -22,6 +22,11 @@ Writes ``BENCH_serve.json`` with, per LUT-Dense model:
   per layer, gathered per spatial site) vs the generic levelized group
   runner vs the interpreter.  Fusing hybrid programs instead of falling
   back to the group runner is the perf win this row measures.
+* **rtl-gate row** — walltime of the hardware-level attestation
+  (``core/rtl.verify_rtl``: emit Verilog, parse, simulate with IEEE
+  semantics, assert RTL == interpreter == fused engine) on the quickstart
+  model — the cost of ``launch/serve.py --verify-rtl``, kept visible next
+  to the engine rows the attestation protects.
 
 Every engine measurement is gated: the benchmark refuses to time an engine
 that is not bit-exact against the interpreter on the same inputs.
@@ -142,6 +147,30 @@ def _bench_dce(shape_dims, hidden, codes, *, rounds: int) -> dict:
         "speedup_dce_vs_fused": us["fused"] / us["dce"],
         "speedup_dce_pallas_vs_dce": us["dce"] / us["dce_pallas"],
     }
+
+
+def _bench_rtl_gate(prog, shape: str, *, n_random: int) -> dict:
+    """Walltime of the three-way RTL attestation on ``prog``.
+
+    This is the same gate ``launch/serve.py --verify-rtl`` runs before a
+    bundle ships: Verilog emission, one parse, and a full simulated sweep
+    checked against both the interpreter and the fused engine.
+    """
+    from repro.core.rtl import verify_rtl
+    from repro.kernels.lut_serve import compile_program
+
+    engine = compile_program(prog, engine="fused")
+    t0 = time.perf_counter()
+    att = verify_rtl(prog, engine=engine, n_random=n_random, seed=0)
+    dt = time.perf_counter() - t0
+    emit(f"serve/rtl_gate/{shape}", dt * 1e6,
+         f"rows={att['random'] + att['exhaustive']};wires={att['n_wires']};"
+         f"{att['verdict']}")
+    return {"model": "rtl-gate", "dims_shape": shape,
+            "n_random": att["random"], "n_exhaustive": att["exhaustive"],
+            "rtl_gate_us": dt * 1e6, "n_wires": att["n_wires"],
+            "verdict": att["verdict"],
+            "verilog_sha256": att["verilog_sha256"]}
 
 
 def _build_hybrid(ctx, seed=0):
@@ -308,6 +337,12 @@ def run(smoke: bool = False) -> None:
                     **_bench_dce(dce_dims, MODELS[0][1], codes,
                                  rounds=rounds)})
 
+    # hardware-loop gate cost: how long the RTL attestation takes on the
+    # quickstart model (what --verify-rtl adds to a serve cold start)
+    results.append(_bench_rtl_gate(
+        _build(*MODELS[0]), "x".join(map(str, MODELS[0][0])),
+        n_random=64 if smoke else 1024))
+
     if smoke:
         # the smoke leg proves the pallas columns exist and came from the
         # mega-kernel path, without publishing cold-container numbers
@@ -319,6 +354,8 @@ def run(smoke: bool = False) -> None:
         assert any("engine_pallas_us" in r for r in results)
         assert any(s.get("engine_path") == "pallas"
                    for r in results for s in r.get("scheduler", []))
+        assert any(r.get("model") == "rtl-gate"
+                   and r["verdict"] == "bit-exact" for r in results)
         emit("serve/pallas_smoke_ok", 0.0, "pallas rows present")
         emit("serve/smoke_ok", 0.0, "json_not_written")
         return

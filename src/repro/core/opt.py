@@ -352,3 +352,22 @@ def verify_optimized(original: DaisProgram, optimized: DaisProgram, *,
             optimized.run(codes), original.run(codes),
             err_msg="DCE-optimized program != original program")
     return {"random": n_random, "exhaustive": n_exhaustive}
+
+
+def verify_optimized_rtl(original: DaisProgram, optimized: DaisProgram,
+                         **kw) -> Dict[str, object]:
+    """Hardware-level DCE gate: the *optimized* program's emitted Verilog,
+    run through the RTL simulator (``core.rtl_sim``), against the
+    *unoptimized* interpreter.
+
+    This is the strongest equivalence this pass can claim: DCE rewrites
+    both the instruction stream and the shared tables, and the RTL emitter
+    then renames registers, narrows index slices, and re-derives clamp
+    widths — so a bug in either layer (or in their interaction, e.g. an
+    aliased register narrowing an LLUT index slice out of range) shows up
+    here even when the optimized *interpreter* still agrees.  Keyword
+    arguments are forwarded to :func:`repro.core.rtl.verify_rtl`.
+    """
+    from repro.core.rtl import verify_rtl
+
+    return verify_rtl(optimized, oracle=original, **kw)

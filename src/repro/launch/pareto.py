@@ -84,6 +84,13 @@ def build_argparser() -> argparse.ArgumentParser:
                          "columns and the served operating point: fused "
                          "per-stage JAX ops (default) or the single-launch "
                          "bit-packed Pallas mega-kernel")
+    ap.add_argument("--verify-rtl", action="store_true",
+                    help="before bundling the selected operating point, "
+                         "emit its (DCE'd) Verilog and assert the three-way "
+                         "attestation RTL sim == unoptimized interpreter == "
+                         "engine (core/rtl.verify_rtl); the bundle's "
+                         "attestation gains an 'rtl' entry with the Verilog "
+                         "SHA-256 and verdict")
     return ap
 
 
@@ -225,7 +232,10 @@ def run(args) -> dict:
 
     # ------------------------------- compile + measure every snapshot
     points = []
-    compiled = {}                 # snap -> (opt_prog, gate) for _serve_selected
+    # snap -> (opt_prog, gate, prog, engine) for _serve_selected; the
+    # UNoptimized prog and the snapshot's engine ride along so the selected
+    # point's --verify-rtl attestation can be three-way without re-lowering
+    compiled = {}
     for snap in snap_steps:
         ps, _opt, manifest = store.restore(ref_params, step=snap)
         ps = jax.tree.map(jnp.asarray, ps)
@@ -245,7 +255,7 @@ def run(args) -> dict:
                              seed=args.seed)
         bench = _bench_engine(engine, opt_prog, bench_batch, bench_rounds,
                               args.seed)
-        compiled[snap] = (opt_prog, gate)
+        compiled[snap] = (opt_prog, gate, prog, engine)
         gw0, gw1 = rep.total_gather_width()
         points.append({
             "step": snap, "beta": manifest["beta"],
@@ -285,7 +295,21 @@ def run(args) -> dict:
     # ------------------------------- serve the selected operating point
     serve_stats = None
     if n_requests > 0:
-        opt_prog, gate = compiled[selected["step"]]
+        opt_prog, gate, orig_prog, engine = compiled[selected["step"]]
+        if args.verify_rtl:
+            # hardware-level gate on the point we actually ship: the DCE'd
+            # program's Verilog, simulated, vs the UNoptimized interpreter
+            # vs the snapshot's engine; rides into the bundle attestation
+            from repro.core.rtl import verify_rtl
+            t0 = time.time()
+            rtl = verify_rtl(opt_prog, oracle=orig_prog, engine=engine,
+                             n_random=256 if args.smoke else 1024,
+                             seed=args.seed)
+            gate = {**gate, "rtl": rtl}
+            print(f"[pareto] rtl gate PASSED for step {selected['step']}: "
+                  f"{rtl['verdict']} over {rtl['random']} random + "
+                  f"{rtl['exhaustive']} exhaustive rows (verilog sha256 "
+                  f"{rtl['verilog_sha256'][:12]}, {time.time() - t0:.2f}s)")
         serve_stats = _serve_selected(args, store.dir, selected, opt_prog,
                                       gate, n_requests)
 

@@ -19,6 +19,12 @@ that cannot pack degrades to the fused path with a compile-time
 ``EnginePathWarning``, and ``--require-pallas`` / ``--require-fused``
 turn any such downgrade into a hard exit instead of a quiet perf loss.
 
+``--verify-rtl`` extends the gate to the hardware level: the program's
+emitted Verilog is evaluated by the RTL simulator (``core.rtl_sim``) and
+asserted bit-exact against both the interpreter and the engine — a
+three-way attestation recorded (Verilog SHA-256 + verdict) in the saved
+bundle's metadata.
+
 ``--artifact <path>`` persists / reuses the compiled bundle
 (``repro.serve.artifact``): when the file exists the launcher cold-starts
 from it — no table extraction, no DAIS lowering, no fused-table composition
@@ -106,6 +112,13 @@ def main(argv=None) -> None:
                     help="trust a loaded bundle's stored attestation "
                          "(content-hash protected) instead of re-running "
                          "the bit-exactness gate")
+    ap.add_argument("--verify-rtl", action="store_true",
+                    help="close the hardware loop: emit the program's "
+                         "Verilog, run it through the RTL simulator "
+                         "(core/rtl_sim.py), and assert the three-way "
+                         "attestation RTL == interpreter == engine; the "
+                         "saved bundle's attestation gains an 'rtl' entry "
+                         "(Verilog SHA-256 + verdict)")
     ap.add_argument("--serve-loop", action="store_true",
                     help="async micro-batching scheduler + open-loop "
                          "synthetic traffic driver (p50/p99 + throughput)")
@@ -240,6 +253,20 @@ def _enforce_path(args, engine) -> None:
             f"{engine.path!r} path ({why})")
 
 
+def _rtl_gate(args, prog, engine, *, oracle=None) -> dict:
+    """Run the RTL attestation (``core.rtl.verify_rtl``) and report it."""
+    from repro.core.rtl import verify_rtl
+
+    t0 = time.time()
+    att = verify_rtl(prog, oracle=oracle, engine=engine,
+                     n_random=256 if args.smoke else 1024, seed=args.seed)
+    print(f"[serve] rtl gate PASSED: {att['verdict']} over "
+          f"{att['random']} random + {att['exhaustive']} exhaustive rows "
+          f"({att['n_wires']} wires, verilog sha256 "
+          f"{att['verilog_sha256'][:12]}, {time.time() - t0:.2f}s)")
+    return att
+
+
 def _tables_engine(args, mesh):
     """Build (or cold-start) the verified integer engine per the CLI flags.
 
@@ -284,6 +311,8 @@ def _tables_engine(args, mesh):
             print(f"[serve] bit-exact gate PASSED: {gate['random']} random + "
                   f"{gate['exhaustive']} exhaustive rows vs DaisProgram.run "
                   f"(gate {time.time() - t0:.2f}s)")
+        if args.verify_rtl:
+            _rtl_gate(args, art.prog, engine)
         return art.prog, engine
 
     t0 = time.time()
@@ -304,6 +333,11 @@ def _tables_engine(args, mesh):
                          n_random=256 if args.smoke else 2048,
                          seed=args.seed)
     t_gate = time.time() - t0
+    if args.verify_rtl:
+        # three-way attestation: the emitted Verilog (simulated) vs the
+        # UNoptimized interpreter vs the engine — with --dce this proves
+        # the optimized program's RTL against the pre-DCE oracle
+        gate["rtl"] = _rtl_gate(args, prog, engine, oracle=oracle)
     pk = (f" launches={engine.n_launches} "
           f"packed_table_bytes={engine.packed_table_bytes}"
           if engine.path == "pallas" else "")

@@ -1,0 +1,513 @@
+"""Differential fuzz + regression tier for the RTL simulator (core/rtl_sim.py).
+
+Two layers of evidence that the emitted Verilog is what we think it is:
+
+1. **Simulator semantics** — hand-written Verilog exercising the IEEE 1364
+   rules the evaluator implements (unsized 32-bit literals, self-determined
+   widths, wrap-on-assign, `>>>` signedness, part-select x-production, case
+   function coercion), each checked against the LRM-derived expected bits.
+2. **Differential fuzz** — hypothesis-driven (via ``_hyp_compat``) random
+   DAIS programs pushed through ``verify_rtl``: random grids/widths/signs,
+   WRAP and SAT requants, mixed-grid ADD/SUB, CMUL codes (negative and
+   >32-bit), shared conv tables instantiated at many sites, and DCE'd
+   programs verified against the *unoptimized* interpreter.
+
+The regression section pins the emitter bugs the simulator surfaced when it
+was first run (truncating down-shifts, unsized clamp literals, out-of-range
+index part-selects, unsized CMUL codes): each test shows the OLD emission
+mismatching the interpreter — proving the simulator catches that bug class —
+next to the fixed emission passing.
+"""
+
+import re
+
+import jax
+import numpy as np
+import pytest
+from _hyp_compat import given, settings, st
+
+from repro.core.dais import DaisProgram, Reg
+from repro.core.rtl import emit_verilog, verify_rtl
+from repro.core.rtl_sim import RtlModule, RtlSimError
+from repro.core.tables import LayerTables
+
+KEY = jax.random.PRNGKey(11)
+
+
+# --------------------------------------------------------------------------- #
+# program builders
+# --------------------------------------------------------------------------- #
+def _requant_prog(src_f, src_i, src_signed, f, i, signed, mode):
+    """IN -> REQUANT -> out, the smallest program with a grid change."""
+    prog = DaisProgram()
+    prog.input_f = [src_f]
+    prog.input_signed = [src_signed]
+    w_in = max(src_f + src_i + (1 if src_signed else 0), 1)
+    r0 = prog.emit("IN", (0,), Reg(src_f, w_in, src_signed))
+    w = max(f + i + (1 if signed else 0), 1)
+    r1 = prog.emit("REQUANT", (r0, f, i, signed, mode, src_f),
+                   Reg(f, w, signed))
+    prog.outputs = [r1]
+    prog.output_f = [f]
+    return prog
+
+
+def _addsub_prog(op, fa, wa, fb, wb):
+    """Two inputs on different fractional grids through one ADD/SUB."""
+    prog = DaisProgram()
+    prog.input_f = [fa, fb]
+    prog.input_signed = [True, True]
+    ra = prog.emit("IN", (0,), Reg(fa, wa, True))
+    rb = prog.emit("IN", (1,), Reg(fb, wb, True))
+    F = max(fa, fb)
+    w = max(wa + (F - fa), wb + (F - fb)) + 1
+    rs = prog.emit(op, (ra, rb), Reg(F, w, True))
+    prog.outputs = [rs]
+    prog.output_f = [F]
+    return prog
+
+
+def _cmul_prog(code, src_f, src_w):
+    prog = DaisProgram()
+    prog.input_f = [src_f]
+    prog.input_signed = [True]
+    r0 = prog.emit("IN", (0,), Reg(src_f, src_w, True))
+    cw = max(abs(int(code)).bit_length() + 1, 1)
+    r1 = prog.emit("CMUL", (r0, int(code), 0), Reg(src_f, src_w + cw, True))
+    prog.outputs = [r1]
+    prog.output_f = [src_f]
+    return prog
+
+
+def _llut_prog(m, n, codes, src_w):
+    """One table cell instantiated on a source register of width src_w."""
+    prog = DaisProgram()
+    prog.input_f = [0]
+    prog.input_signed = [True]
+    r0 = prog.emit("IN", (0,), Reg(0, src_w, True))
+    full = np.zeros((1, 1, 1 << m), np.int64)
+    full[0, 0, :] = np.asarray(codes, np.int64)
+    prog.tables[0] = LayerTables(
+        f_in=np.zeros((1, 1), np.int32), i_in=np.full((1, 1), m - 1, np.int32),
+        f_out=np.zeros((1, 1), np.int32),
+        i_out=np.full((1, 1), n - 1, np.int32),
+        in_width=np.full((1, 1), m, np.int32),
+        out_width=np.full((1, 1), n, np.int32), codes=full)
+    r1 = prog.emit("LLUT", (r0, 0, 0, 0), Reg(0, n, True))
+    prog.outputs = [r1]
+    prog.output_f = [0]
+    return prog
+
+
+def _dense_stack(dims, seed, in_f=3, in_i=1):
+    from repro.core.dais import compile_sequential
+    from repro.core.lut_layers import LUTDense
+
+    layers = [LUTDense(ci, co, hidden=4, use_batchnorm=(k == 0))
+              for k, (ci, co) in enumerate(zip(dims[:-1], dims[1:]))]
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(layers))
+    params = [l.init(k) for l, k in zip(layers, keys)]
+    return compile_sequential(layers, params, in_f, in_i)
+
+
+def _hybrid_conv_prog(t_len=8):
+    from repro.core.hgq_layers import HGQConv1D
+    from repro.core.lower import GraphInput, ModelGraph, WindowSum, lower
+    from repro.core.lut_layers import LUTConv1D
+
+    front = HGQConv1D(c_in=1, c_out=2, kernel=4, stride=4, activation="relu")
+    lc = LUTConv1D(c_in=2, c_out=2, kernel=2, padding="SAME", hidden=4)
+    ks = jax.random.split(KEY, 2)
+    params = [front.init(ks[0]), lc.init(ks[1])]
+    graph = ModelGraph(GraphInput((t_len, 1), 4, 2), [front, lc, WindowSum()])
+    return lower(graph, params + [None])
+
+
+# --------------------------------------------------------------------------- #
+# simulator semantics: the IEEE rules, against hand-computed bits
+# --------------------------------------------------------------------------- #
+def _mod(body, ports="    input  wire signed [7:0] in_0,\n"
+                     "    output wire signed [7:0] out_0"):
+    return RtlModule.parse(f"module t (\n{ports}\n);\n{body}\nendmodule\n")
+
+
+def test_unsized_decimal_literals_are_32_bit():
+    """A bare decimal is 32-bit signed: 2^33 truncates to 0 (the emitter
+    bug class sized literals exist to avoid)."""
+    m = _mod("  wire signed [39:0] r0 = 8589934592;\n"
+             "  assign out_0 = r0[7:0];",
+             ports="    input  wire signed [7:0] in_0,\n"
+                   "    output wire signed [7:0] out_0")
+    assert m.run(np.asarray([[0]]))[0, 0] == 0
+    m2 = _mod("  wire signed [39:0] r0 = 40'sd8589934592;\n"
+              "  assign out_0 = r0[12:5];")
+    m3 = _mod("  wire signed [39:0] r0 = 40'sd8589934592;\n"
+              "  assign out_0 = r0[33:26];")
+    assert m2.run(np.asarray([[0]]))[0, 0] == 0
+    # bit 33 lands at slice position 7 = the sign bit of the 8-bit output
+    assert m3.run(np.asarray([[0]]))[0, 0] == -128
+
+
+def test_self_determined_width_wraps_before_shift():
+    """In ``(a + a) >> 1`` assigned to a 4-bit wire, the sum is evaluated at
+    the 4-bit assignment context and WRAPS before the shift."""
+    m = _mod("  wire [3:0] a = in_0[3:0];\n"
+             "  wire [3:0] y = (a + a) >> 1;\n"
+             "  assign out_0 = y;")
+    # a = 12: (12+12) mod 16 = 8; 8 >> 1 = 4  (not (24 >> 1) = 12)
+    assert m.run(np.asarray([[12]]))[0, 0] == 4
+
+
+def test_wrap_on_assign():
+    m = _mod("  wire signed [3:0] y = in_0;\n  assign out_0 = y;")
+    # 8-bit 0x75 = 117 truncates to low nibble 0x5
+    assert m.run(np.asarray([[117]]))[0, 0] == 5
+    # negative wraps two's-complement: -7 = ...11111001 -> 1001 = -7 (fits)
+    assert m.run(np.asarray([[-7]]))[0, 0] == -7
+
+
+def test_arith_shift_only_when_signed():
+    m = _mod("  wire signed [7:0] a = in_0;\n"
+             "  wire signed [7:0] s = a >>> 2;\n"
+             "  wire [7:0] u = $unsigned(a) >>> 2;\n"
+             "  assign out_0 = s - u;")
+    # signed: -8 >>> 2 = -2; unsigned: 0xF8 >> 2 = 0x3E = 62; -2-62 = -64
+    assert m.run(np.asarray([[-8]]))[0, 0] == -64
+
+
+def test_out_of_range_part_select_raises():
+    m = _mod("  wire signed [3:0] y = in_0[9:2];\n  assign out_0 = y;")
+    with pytest.raises(RtlSimError, match="exceeds declared width"):
+        m.run(np.asarray([[1]]))
+
+
+def test_zero_extension_idiom():
+    """The emitter's ``$signed({1'b0, r})`` makes an unsigned wire behave as
+    its nonnegative value inside signed arithmetic."""
+    m = _mod("  wire [7:0] u = in_0;\n"
+             "  wire signed [9:0] y = $signed({1'b0, u}) - 10'sd1;\n"
+             "  assign out_0 = y[7:0];")
+    # u = 0xFF (255 unsigned, NOT -1): 255 - 1 = 254
+    assert m.run(np.asarray([[255]]))[0, 0] & 0xFF == 254
+
+
+def test_signed_extension_needs_signed_context():
+    """A signed operand sign-extends only when the WHOLE expression is
+    signed; mixed with an unsigned operand it zero-extends (LRM rule)."""
+    m = _mod("  wire signed [3:0] a = in_0[3:0];\n"
+             "  wire [7:0] u = in_0;\n"
+             "  wire [7:0] y = a + u;\n"     # unsigned expr: a zero-extends
+             "  wire signed [7:0] z = a + 8'sd0;\n"  # signed: sign-extends
+             "  assign out_0 = y;")
+    m2 = _mod("  wire signed [3:0] a = in_0[3:0];\n"
+              "  wire signed [7:0] z = a + 8'sd0;\n"
+              "  assign out_0 = z;")
+    # in_0 = 15: a = 4'b1111 = -1.  Unsigned context: a zero-extends to 15,
+    # y = 15 + 15 = 30.  Signed context: a sign-extends, z = -1.
+    assert m.run(np.asarray([[15]]))[0, 0] == 30
+    assert m2.run(np.asarray([[15]]))[0, 0] == -1
+
+
+def test_function_arg_coercion_is_assignment():
+    """A call argument resizes onto the input width like an assignment:
+    wider truncates (mod 2^m), narrower extends by its own signedness."""
+    src = """module t (
+    input  wire signed [5:0] in_0,
+    output wire signed [3:0] out_0
+);
+  function automatic signed [3:0] id3;
+    input [2:0] idx;
+    begin
+      case (idx)
+        3'd0: id3 = 4'd0;
+        3'd1: id3 = 4'd1;
+        3'd2: id3 = 4'd2;
+        3'd3: id3 = 4'd3;
+        3'd4: id3 = 4'd4;
+        3'd5: id3 = 4'd5;
+        3'd6: id3 = 4'd6;
+        3'd7: id3 = 4'd7;
+        default: id3 = 4'd0;
+      endcase
+    end
+  endfunction
+  wire signed [3:0] y = id3(in_0[5:1]);
+  assign out_0 = y;
+endmodule
+"""
+    m = RtlModule.parse(src)
+    # in_0 = 0b101110 -> slice [5:1] = 0b10111 -> mod 8 = 0b111 = 7
+    assert m.run(np.asarray([[0b101110]]))[0, 0] == 7
+
+
+def test_duplicate_and_undeclared_wires_rejected():
+    with pytest.raises(RtlSimError, match="duplicate"):
+        _mod("  wire signed [3:0] y = in_0;\n"
+             "  wire signed [3:0] y = in_0;\n  assign out_0 = y;")
+    m = _mod("  wire signed [3:0] y = nope;\n  assign out_0 = y;")
+    with pytest.raises(RtlSimError, match="undeclared"):
+        m.run(np.asarray([[0]]))
+
+
+def test_out_of_subset_constructs_rejected():
+    with pytest.raises(RtlSimError):
+        RtlModule.parse("module t (\n    input  wire [1:0] in_0,\n"
+                        "    output wire [1:0] out_0\n);\n"
+                        "  always @(posedge clk) q <= in_0;\nendmodule\n")
+
+
+# --------------------------------------------------------------------------- #
+# pinned emitter regressions: old emission FAILS in the sim, fixed PASSES
+# --------------------------------------------------------------------------- #
+def test_downshift_rounds_half_to_even_not_truncates():
+    """REQUANT down-shifts round half-to-even (dais._requant); a plain
+    ``>>>`` truncates toward -inf and the simulator must expose that."""
+    prog = _requant_prog(3, 2, True, 0, 2, True, "SAT")   # shift -3
+    att = verify_rtl(prog, n_random=32, seed=0)
+    assert att["exhaustive"] == 64 and att["verdict"] == "bit-exact"
+
+    buggy = """module t (
+    input  wire signed [5:0] in_0,
+    output wire signed [2:0] out_0
+);
+  wire signed [5:0] r0 = in_0;
+  wire signed [7:0] r1_q = (r0 >>> 3);
+  wire signed [2:0] r1 = (r1_q > 8'sd3 ? 8'sd3 : (r1_q < -8'sd4 ? -8'sd4 : r1_q));
+  assign out_0 = r1;
+endmodule
+"""
+    # 12 / 8 = 1.5 -> round-half-even gives 2; truncation gives 1
+    codes = np.asarray([[12]])
+    assert prog.run(codes)[0, 0] == 2
+    assert RtlModule.parse(buggy).run(codes)[0, 0] == 1
+    with pytest.raises(AssertionError):
+        verify_rtl(prog, buggy, n_random=32, seed=0)
+
+
+def test_wide_sat_clamp_needs_sized_literals():
+    """A SAT clamp beyond 31 bits: unsized decimal bounds truncate to
+    32-bit signed (2^37-1 becomes -1) and clamp everything wrong; the fixed
+    emitter sizes them."""
+    prog = _requant_prog(0, 39, True, 0, 37, True, "SAT")
+    v = emit_verilog(prog, name="t")
+    assert re.search(r"\d+'sd137438953471", v)       # hi bound, sized
+    att = verify_rtl(prog, v, n_random=128, seed=0)
+    assert att["verdict"] == "bit-exact"
+
+    buggy = """module t (
+    input  wire signed [39:0] in_0,
+    output wire signed [37:0] out_0
+);
+  wire signed [39:0] r0 = in_0;
+  wire signed [40:0] r1_q = r0;
+  wire signed [37:0] r1 = (r1_q > 137438953471 ? 137438953471 : (r1_q < -137438953472 ? -137438953472 : r1_q));
+  assign out_0 = r1;
+endmodule
+"""
+    codes = np.asarray([[5]])
+    assert prog.run(codes)[0, 0] == 5
+    # unsized 2^37-1 truncates to -1; the clamp folds 5 onto it
+    assert RtlModule.parse(buggy).run(codes)[0, 0] == -1
+    with pytest.raises(AssertionError):
+        verify_rtl(prog, buggy, n_random=64, seed=0)
+
+
+def test_llut_index_slices_wide_sources():
+    """When the LLUT source register is wider than the table input (DCE
+    alias collapse can do this), the emitter must part-select the low m
+    bits — indexing is mod 2^m by contract."""
+    codes = [3, -4, 1, 0, 2, -1, -2, 3]               # m=3, n=3
+    prog = _llut_prog(3, 3, codes, src_w=5)
+    v = emit_verilog(prog, name="t")
+    assert "llut_0_0_0(r0[2:0])" in v
+    att = verify_rtl(prog, v, n_random=16, seed=0)
+    assert att["exhaustive"] == 32                     # full 5-bit space
+
+    # the OLD emission passed the wide register straight through; the
+    # function input then TRUNCATES by assignment coercion, which happens
+    # to equal mod 2^m — but an out-of-range part-select (e.g. after an
+    # emitter-side width mixup) must raise, not read x bits
+    bad = v.replace("llut_0_0_0(r0[2:0])", "llut_0_0_0(r0[7:5])")
+    with pytest.raises(RtlSimError, match="exceeds declared width"):
+        RtlModule.parse(bad).run(np.asarray([[0]]))
+
+
+def test_cmul_codes_are_sized_literals():
+    """CMUL by a code wider than 31 bits: the old ``$signed(<bare>)`` form
+    truncated the constant to 32 bits."""
+    big = (1 << 33) + 5
+    prog = _cmul_prog(big, 0, 4)
+    v = emit_verilog(prog, name="t")
+    assert f"'sd{big}" in v
+    att = verify_rtl(prog, v, n_random=8, seed=0)
+    assert att["exhaustive"] == 16
+
+    buggy_line = f"$signed({big})"
+    bad = re.sub(r"-?\d+'sd\d+;", buggy_line + ";", v)
+    sim = RtlModule.parse(bad)
+    codes = np.asarray([[3]])
+    assert prog.run(codes)[0, 0] == 3 * big
+    assert sim.run(codes)[0, 0] == 3 * (big & 0xFFFFFFFF)  # truncated
+    with pytest.raises(AssertionError):
+        verify_rtl(prog, bad, n_random=8, seed=0)
+
+
+def test_negative_cmul_codes():
+    prog = _cmul_prog(-9, 2, 5)
+    v = emit_verilog(prog, name="t")
+    assert "* -5'sd9" in v
+    att = verify_rtl(prog, v, n_random=8, seed=0)
+    assert att["exhaustive"] == 32 and att["verdict"] == "bit-exact"
+
+
+def test_unsigned_reg_feeding_sat_clamp():
+    """Relu outputs are unsigned wires; the clamp must zero-extend them
+    (via the extra ext_w bit), never sign-extend."""
+    prog = _requant_prog(2, 3, False, 1, 2, True, "SAT")
+    att = verify_rtl(prog, n_random=16, seed=0)
+    assert att["exhaustive"] == 32                     # 5-bit unsigned input
+
+
+def test_requant_empty_grid_emits_zero():
+    prog = _requant_prog(2, 2, True, 0, 0, False, "SAT")   # sem_w = 0
+    v = emit_verilog(prog, name="t")
+    assert "(empty grid)" in v
+    att = verify_rtl(prog, v, n_random=8, seed=0)
+    assert att["verdict"] == "bit-exact"
+
+
+# --------------------------------------------------------------------------- #
+# differential fuzz: random DAIS programs, RTL sim == interpreter
+# --------------------------------------------------------------------------- #
+@settings(max_examples=25)
+@given(src_f=st.integers(0, 4), src_i=st.integers(0, 3),
+       src_signed=st.booleans(), f=st.integers(0, 4), i=st.integers(0, 3),
+       signed=st.booleans(), mode=st.sampled_from(["WRAP", "SAT"]))
+def test_fuzz_requant(src_f, src_i, src_signed, f, i, signed, mode):
+    """Every (grid, sign, mode) requant combination is bit-exact — up- and
+    down-shifts, saturating and wrapping, signed and unsigned ends."""
+    if src_f + src_i == 0 and not src_signed:
+        src_i = 1                                      # keep the input real
+    prog = _requant_prog(src_f, src_i, src_signed, f, i, signed, mode)
+    verify_rtl(prog, n_random=48, seed=src_f * 7 + i, exhaustive_limit=512)
+
+
+@settings(max_examples=25)
+@given(op=st.sampled_from(["ADD", "SUB"]), fa=st.integers(0, 4),
+       wa=st.integers(1, 7), fb=st.integers(0, 4), wb=st.integers(1, 7))
+def test_fuzz_mixed_grid_addsub(op, fa, wa, fb, wb):
+    """Mixed-grid ADD/SUB align with ``<<<`` exactly as the interpreter."""
+    prog = _addsub_prog(op, fa, wa, fb, wb)
+    verify_rtl(prog, n_random=48, seed=wa * 13 + wb, exhaustive_limit=1024)
+
+
+@settings(max_examples=25)
+@given(code=st.integers(-(1 << 34), 1 << 34), src_w=st.integers(1, 6))
+def test_fuzz_cmul_codes(code, src_w):
+    prog = _cmul_prog(code, 1, src_w)
+    verify_rtl(prog, n_random=16, seed=src_w, exhaustive_limit=128)
+
+
+@settings(max_examples=10)
+@given(m=st.integers(1, 5), n=st.integers(1, 6), src_w=st.integers(1, 8),
+       seed=st.integers(0, 1 << 20))
+def test_fuzz_llut_tables(m, n, src_w, seed):
+    """Random truth tables on random source widths (narrower, equal, and
+    wider than the table input) — the mod-2^m indexing contract."""
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(-(1 << (n - 1)), 1 << (n - 1), 1 << m)
+    prog = _llut_prog(m, n, codes, src_w)
+    verify_rtl(prog, n_random=32, seed=seed & 0xFFFF, exhaustive_limit=512)
+
+
+@settings(max_examples=6)
+@given(d0=st.integers(2, 4), d1=st.integers(2, 5), d2=st.integers(1, 3),
+       seed=st.integers(0, 1 << 10))
+def test_fuzz_dense_stacks(d0, d1, d2, seed):
+    """Random 2-layer LUT-Dense stacks end-to-end: requants, shared
+    tables, tree adds, output grids."""
+    prog = _dense_stack([d0, d1, d2], seed)
+    verify_rtl(prog, n_random=48, seed=seed, exhaustive_limit=256)
+
+
+@settings(max_examples=6)
+@given(seed=st.integers(0, 1 << 10), prune=st.floats(0.0, 0.6))
+def test_fuzz_dce_programs(seed, prune):
+    """DCE'd programs: the OPTIMIZED program's Verilog against the
+    UNoptimized interpreter (verify_optimized_rtl)."""
+    from repro.core.lut_layers import LUTDense
+    from repro.core.dais import compile_sequential
+    from repro.core.opt import eliminate_dead_cells, verify_optimized_rtl
+
+    rng = np.random.default_rng(seed)
+    l1 = LUTDense(3, 4, hidden=4)
+    l2 = LUTDense(4, 2, hidden=4)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    p1, p2 = l1.init(k1), l2.init(k2)
+    for p, shape in ((p1, (3, 4)), (p2, (4, 2))):
+        mask = rng.random(shape) < prune
+        for k in ("w_out", "b_out"):
+            a = np.array(p[k], np.float64)
+            a[mask] = 0.0
+            p[k] = jax.numpy.asarray(a, jax.numpy.float32)
+    prog = compile_sequential([l1, l2], [p1, p2], 2, 1)
+    opt, _rep = eliminate_dead_cells(prog)
+    verify_optimized_rtl(prog, opt, n_random=48, seed=seed,
+                         exhaustive_limit=256)
+
+
+def test_shared_conv_tables_multi_site():
+    """The hybrid conv program: one function per live cell, instantiated
+    at every spatial site, bit-exact through HGQ requants, negative weight
+    CMULs, relu clamps, and the window accumulator."""
+    prog = _hybrid_conv_prog()
+    v = emit_verilog(prog, name="dut")
+    n_cells = sum(t.n_luts() for t in prog.tables.values())
+    assert len(re.findall(r"\bendfunction\b", v)) == n_cells
+    assert len(re.findall(r"= llut_\d+_\d+_\d+\(", v)) > n_cells
+    att = verify_rtl(prog, v, n_random=192, seed=3)
+    assert att["verdict"] == "bit-exact"
+
+
+# --------------------------------------------------------------------------- #
+# the three-way attestation: RTL sim == interpreter == accelerator engine
+# --------------------------------------------------------------------------- #
+def test_three_way_dense():
+    from repro.kernels.lut_serve import compile_program
+
+    prog = _dense_stack([4, 5, 3], seed=0)
+    engine = compile_program(prog)
+    att = verify_rtl(prog, engine=engine, n_random=128, seed=0)
+    assert att["verdict"] == "bit-exact"
+    assert att["engine_path"] == engine.path
+    assert len(att["verilog_sha256"]) == 64
+
+
+def test_three_way_hybrid_conv():
+    from repro.kernels.lut_serve import compile_program
+
+    prog = _hybrid_conv_prog()
+    engine = compile_program(prog)
+    att = verify_rtl(prog, engine=engine, n_random=128, seed=1)
+    assert att["verdict"] == "bit-exact"
+
+
+def test_three_way_dce_optimized():
+    """The full serve-time shape: engine and RTL both built from the DCE'd
+    program, both gated against the UNoptimized interpreter."""
+    from repro.core.opt import eliminate_dead_cells
+    from repro.kernels.lut_serve import compile_program
+
+    prog = _dense_stack([4, 6, 2], seed=5)
+    opt, _rep = eliminate_dead_cells(prog)
+    engine = compile_program(opt)
+    att = verify_rtl(opt, oracle=prog, engine=engine, n_random=128, seed=2)
+    assert att["verdict"] == "bit-exact"
+
+
+def test_verify_rtl_reports_mismatches():
+    """A wrong module must fail loudly, not return a bad attestation."""
+    prog = _requant_prog(2, 2, True, 2, 2, True, "WRAP")
+    v = emit_verilog(prog, name="t").replace("r0;", "(r0 + 6'sd1);", 1)
+    with pytest.raises(AssertionError, match="RTL simulation"):
+        verify_rtl(prog, v, n_random=16, seed=0)

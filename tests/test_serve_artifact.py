@@ -292,6 +292,71 @@ def test_forged_attestation_rejected(tmp_path):
         load_artifact(path)
 
 
+# --------------------------------------------------------------------------- #
+# rtl attestation: bundles carry (and protect) the hardware-level proof
+# --------------------------------------------------------------------------- #
+def test_rtl_attestation_round_trips(tmp_path):
+    """A bundle saved with an 'rtl' attestation entry returns it intact,
+    and the stored Verilog hash matches what the loaded program re-emits —
+    the bundle pins exactly WHICH hardware passed the three-way gate."""
+    import hashlib
+
+    from repro.core.rtl import emit_verilog, verify_rtl
+
+    prog = _lut_stack(dims=(4, 4, 2))
+    engine = compile_program(prog)
+    gate = verify_engine(engine, prog, n_random=128)
+    gate["rtl"] = verify_rtl(prog, engine=engine, n_random=64)
+    path = str(tmp_path / "attested.npz")
+    save_artifact(path, prog, attestation=gate)
+
+    art = load_artifact(path)
+    rtl = art.attestation["rtl"]
+    assert rtl["verdict"] == "bit-exact"
+    assert rtl["random"] == 64 and rtl["engine_path"] == engine.path
+    assert rtl["verilog_sha256"] == hashlib.sha256(
+        emit_verilog(art.prog).encode()).hexdigest()
+
+
+def test_tampered_rtl_attestation_rejected(tmp_path):
+    """Swapping the attested Verilog hash (e.g. to pass off different RTL
+    as verified) breaks the bundle's content hash."""
+    from repro.core.rtl import verify_rtl
+
+    prog = _lut_stack(dims=(4, 4, 2))
+    path = str(tmp_path / "attested.npz")
+    save_artifact(path, prog,
+                  attestation={"random": 16, "exhaustive": 0,
+                               "rtl": verify_rtl(prog, n_random=16)})
+
+    def swap_rtl_hash(arrays):
+        meta = json.loads(bytes(arrays["meta_json"]).decode())
+        meta["attestation"]["rtl"]["verilog_sha256"] = "0" * 64
+        arrays["meta_json"] = np.frombuffer(
+            json.dumps(meta, sort_keys=True).encode(), np.uint8)
+    _rewrite(path, swap_rtl_hash)
+    with pytest.raises(ArtifactError, match="hash mismatch"):
+        load_artifact(path)
+
+
+def test_pre_rtl_bundles_still_load(tmp_path):
+    """Bundles written before the rtl entry existed (attestation without
+    'rtl', or no attestation at all) load and serve unchanged — the entry
+    is free-form metadata, not a format bump."""
+    prog = _lut_stack(dims=(4, 4, 2))
+    path = str(tmp_path / "pre_rtl.npz")
+    save_artifact(path, prog, attestation={"random": 32, "exhaustive": 0})
+    art = load_artifact(path)
+    assert art.meta["format_version"] == 3
+    assert "rtl" not in art.attestation
+    verify_engine(build_engine(art), art.prog, n_random=128)
+
+    save_artifact(path, prog)                # no attestation at all
+    art = load_artifact(path)
+    assert art.attestation is None
+    verify_engine(build_engine(art), art.prog, n_random=128)
+
+
 def test_unreadable_and_versioned_bundles_rejected(tmp_path):
     garbage = tmp_path / "garbage.npz"
     garbage.write_bytes(b"not an npz at all")

@@ -376,8 +376,10 @@ def test_verilog_hybrid_conv_structural():
     # ...instantiated once per (site, cell): every LLUT instruction calls one
     n_calls = len(re.findall(r"= llut_\d+_\d+_\d+\(", v))
     assert n_calls == prog.count_ops()["LLUT"] > n_cells
-    # hybrid op coverage: weight CMULs, bias CONSTs, relu-as-REQUANT
-    assert re.search(r"\* \$signed\(-?\d+\)", v)            # CMUL
+    # hybrid op coverage: weight CMULs, bias CONSTs, relu-as-REQUANT.
+    # CMUL codes are SIZED signed literals (bare decimals are 32-bit and
+    # would truncate wide codes — caught by core/rtl_sim.py)
+    assert re.search(r"\* -?\d+'sd\d+", v)                  # CMUL
     assert re.search(r"requant f=\d+ i=\d+ SAT", v)         # relu clamp
     # relu outputs are unsigned wires, zero-extended into signed arithmetic
     assert re.search(r"^  wire \[\d+:0\] r\d+", v, re.M)
