@@ -90,8 +90,8 @@ def _serve_kernel_rows(smoke: bool) -> list:
 
     from benchmarks.serve_bench import IN_F, IN_I, _build
     from repro.core.quant import quantize_to_int
-    from repro.kernels.lut_serve import (compile_program,
-                                         compose_fused_stages, verify_engine)
+    from repro.kernels.lut_serve import compose_fused_stages
+    from repro.serve.api import EngineSpec, build
 
     models = SERVE_MODELS[:1] if smoke else SERVE_MODELS
     batch = 128 if smoke else SERVE_BATCH
@@ -104,10 +104,10 @@ def _serve_kernel_rows(smoke: bool) -> list:
                                 IN_F, IN_I, True, "SAT")
         engines = {}
         for name in ("fused", "pallas"):
-            eng = compile_program(prog, engine=name)
-            assert eng.path == name, eng.fuse_reason
-            verify_engine(eng, prog, n_random=256)   # never time a liar
-            engines[name] = eng
+            # require=name: a path downgrade fails the bench, and the
+            # spec's default verify policy gates before anything is timed
+            engines[name] = build(prog, EngineSpec(
+                engine=name, require=name, n_random=256)).engine
         stages, _ = compose_fused_stages(prog)
         fused_table_bytes = int(sum(
             np.asarray(st.table, np.int64).nbytes

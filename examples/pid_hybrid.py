@@ -34,8 +34,8 @@ from repro.core.lower import lower
 from repro.core.quant import int_to_float, quantize_to_int
 from repro.core.rtl import emit_verilog, verify_rtl
 from repro.data.synthetic import cepc_waveform
-from repro.kernels.lut_serve import compile_program, verify_engine
 from repro.models.pid import IN_F, IN_I, build_pid_graph, build_pid_layers
+from repro.serve import api as serve_api
 from repro.nn.base import merge_aux
 from repro.optim.adam import AdamConfig, adam_init, adam_update, cosine_restarts
 
@@ -145,10 +145,12 @@ def main(argv=None):
               f"{prog.required_width()}-bit transients)")
 
     # ----------------------------- accelerator engine + bit-exactness gate
+    # one EngineSpec = preferred lowering + require-flag + verify policy;
+    # require="fused" turns a shared-table downgrade into a hard error
     t0 = time.time()
-    engine = compile_program(prog)
-    gate = verify_engine(engine, prog, n_random=256 if args.smoke else 1024)
-    assert engine.path == "fused", engine.fuse_reason
+    built = serve_api.build(prog, serve_api.EngineSpec(
+        require="fused", n_random=256 if args.smoke else 1024))
+    engine, gate = built.engine, built.attestation
     print(f"engine: path={engine.path} ({engine.n_groups} shared-table "
           f"stages), bit-exact gate PASSED on {gate['random']} random + "
           f"{gate['exhaustive']} exhaustive rows ({time.time()-t0:.2f}s)")
@@ -165,19 +167,19 @@ def main(argv=None):
     assert dq < 0.5, "compiled program diverged from the trained model"
 
     # --------------------------- serve individual requests, bit-exactly
-    from repro.serve.scheduler import BatcherConfig, MicroBatcher
+    from repro.serve.scheduler import MicroBatcher, ServeConfig
 
     codes = quantize_to_int(ctx_wf, IN_F, IN_I, False, "SAT")
     ref = prog.run(codes)
-    with MicroBatcher(engine, BatcherConfig(max_batch=16)) as batcher:
+    with MicroBatcher(engine, ServeConfig(max_batch=16)) as batcher:
         futures = batcher.submit_many(codes)
         out = np.stack([f.result(timeout=120) for f in futures])
         stats = batcher.stats()
     np.testing.assert_array_equal(out.astype(np.int64), ref)
-    print(f"scheduler served {stats['n_requests']} waveform requests "
-          f"bit-exactly: p50={stats['p50_ms']:.2f} ms "
-          f"p99={stats['p99_ms']:.2f} ms "
-          f"(batches={stats['n_batches']})")
+    print(f"scheduler served {stats.n_requests} waveform requests "
+          f"bit-exactly: p50={stats.p50_ms:.2f} ms "
+          f"p99={stats.p99_ms:.2f} ms "
+          f"(batches={stats.n_batches})")
 
     # ------------------------------- emit Verilog + three-way attestation
     verilog = emit_verilog(prog, name="pid_hybrid")

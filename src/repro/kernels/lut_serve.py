@@ -223,6 +223,17 @@ class ServeEngine:
                          np.float64)
         return out * np.exp2(-np.asarray(self.output_f, np.float64))
 
+    def clone(self) -> "ServeEngine":
+        """A replica-local handle sharing this engine's compiled runner.
+
+        jitted JAX callables are thread-safe and share one trace cache, so
+        a clone costs nothing to make and nothing extra to warm — but it
+        gives each serving-tier replica its own dataclass instance (own
+        identity, own future mutable counters) instead of N threads
+        aliasing one handle.  Used by ``repro.serve.tier.ServeTier``.
+        """
+        return dataclasses.replace(self)
+
     def warm(self, batch_sizes) -> List[int]:
         """Populate the jit cache for every batch size in ``batch_sizes``.
 

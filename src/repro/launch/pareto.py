@@ -348,15 +348,23 @@ def run(args) -> dict:
 
 def _serve_selected(args, bundle_dir, selected, opt_prog, gate,
                     n_requests: int) -> dict:
-    """Bundle the chosen snapshot and serve it via the scheduler path.
+    """Bundle the chosen snapshot and serve it through the tier.
 
     ``opt_prog``/``gate`` are the DCE'd program and its verify statistics
     the per-snapshot loop already produced — nothing is re-lowered or
-    re-gated here, only bundled and served.
+    re-gated here.  The bundle is registered into a
+    :class:`~repro.serve.tier.ServeTier` (the same multi-replica registry
+    path production serving uses, via ``repro.serve.api``) rather than a
+    private one-off batcher; the interpreter comparison runs the identical
+    open-loop driver against ``InterpreterBackend`` behind a MicroBatcher
+    so the reported ratio stays service-path vs service-path.
     """
     from repro.kernels.lut_serve import input_code_bounds
-    from repro.serve.artifact import build_engine, load_artifact, save_artifact
-    from repro.serve.scheduler import BatcherConfig, compare_under_load
+    from repro.serve.api import EngineSpec, build, tier_from_built
+    from repro.serve.artifact import save_artifact
+    from repro.serve.scheduler import (InterpreterBackend, MicroBatcher,
+                                       ServeConfig, drive_open_loop)
+    from repro.serve.tier import TierConfig
 
     bundle = os.path.join(bundle_dir, f"pareto_step{selected['step']}.npz")
     # the attestation records WHICH operating point this bundle is: the
@@ -366,32 +374,49 @@ def _serve_selected(args, bundle_dir, selected, opt_prog, gate,
         **gate, "beta": selected["beta"], "ebops": selected["ebops"],
         "est_luts": selected["est_luts"], "step": selected["step"],
         "dce_llut": selected["n_llut_live"]})
-    art = load_artifact(bundle)
-    engine = build_engine(art, engine=None if args.engine == "fused"
-                          else args.engine)
+    # verify="cached": the bundle's stored attestation is the per-snapshot
+    # gate that just ran, tied to these bytes by the content hash
+    built = build(bundle, EngineSpec(
+        engine=None if args.engine == "fused" else args.engine,
+        verify="cached"))
     print(f"[pareto] operating point bundled: {bundle} (hash {digest[:12]}, "
-          f"attested β={art.attestation['beta']:.2e} "
-          f"EBOPs={art.attestation['ebops']:.1f})")
+          f"attested β={built.attestation['beta']:.2e} "
+          f"EBOPs={built.attestation['ebops']:.1f})")
 
     lo, hi = input_code_bounds(opt_prog)
     rng = np.random.default_rng(args.seed)
     codes = rng.integers(lo, hi + 1, (n_requests, len(lo)), np.int64)
-    cfg = BatcherConfig(max_batch=16 if args.smoke else 64,
-                        max_delay_ms=2.0)
-    rows = {r["backend"]: r
-            for r in compare_under_load(opt_prog, engine, codes, cfg,
-                                        rates=[0.0])}
-    eng = rows["engine"]
-    print(f"[pareto] served {n_requests} requests through the scheduler: "
-          f"p50={eng['p50_ms']:.2f} ms p99={eng['p99_ms']:.2f} ms "
-          f"{eng['rows_per_s']:,.0f} rows/s "
-          f"({eng['rows_per_s'] / rows['interp']['rows_per_s']:.1f}x the "
-          f"interpreter behind the same scheduler)")
+    ref = np.asarray(opt_prog.run(codes), np.int64)
+    name = f"pareto_step{selected['step']}"
+    scfg = ServeConfig(max_batch=16 if args.smoke else 64, max_delay_ms=2.0)
+    tier = tier_from_built({name: built},
+                           TierConfig(n_replicas=2, serve=scfg),
+                           start=False)
+    with tier:
+        out, drive = drive_open_loop(
+            None, codes, rate=0.0,
+            submit=lambda row: tier.submit(row, name))
+    if not np.array_equal(out.astype(np.int64), ref):
+        raise AssertionError("tier responses diverged from DaisProgram.run "
+                             "— refusing to report serve numbers")
+    s = tier.stats()
+    with MicroBatcher(InterpreterBackend(opt_prog), scfg) as mb:
+        _, idrive = drive_open_loop(mb, codes, rate=0.0)
+    rows_per_s = n_requests / drive["wall_s"]
+    interp_rows_per_s = n_requests / idrive["wall_s"]
+    print(f"[pareto] served {n_requests} requests through the tier "
+          f"({tier.config.n_replicas} replicas, model {name!r}): "
+          f"p50={s.p50_ms:.2f} ms p99={s.p99_ms:.2f} ms "
+          f"{rows_per_s:,.0f} rows/s "
+          f"({rows_per_s / interp_rows_per_s:.1f}x the "
+          f"interpreter behind the single-engine scheduler)")
     return {"bundle": bundle, "content_hash": digest,
             "n_requests": n_requests,
-            "engine": {k: eng[k] for k in
-                       ("p50_ms", "p99_ms", "rows_per_s")},
-            "interp_rows_per_s": rows["interp"]["rows_per_s"]}
+            "engine": {"p50_ms": s.p50_ms, "p99_ms": s.p99_ms,
+                       "rows_per_s": rows_per_s},
+            "tier": {"n_replicas": tier.config.n_replicas,
+                     "n_batches": s.n_batches, "n_stolen": s.n_stolen},
+            "interp_rows_per_s": interp_rows_per_s}
 
 
 def main(argv=None) -> None:

@@ -121,7 +121,9 @@ def main(argv=None) -> None:
                          "(Verilog SHA-256 + verdict)")
     ap.add_argument("--serve-loop", action="store_true",
                     help="async micro-batching scheduler + open-loop "
-                         "synthetic traffic driver (p50/p99 + throughput)")
+                         "synthetic traffic driver (p50/p99 + throughput); "
+                         "with --replicas/--models it drives the "
+                         "multi-replica tier instead of one MicroBatcher")
     ap.add_argument("--rate", type=float, default=2000.0,
                     help="offered load of the traffic driver, requests/s")
     ap.add_argument("--requests", type=int, default=1024,
@@ -132,6 +134,25 @@ def main(argv=None) -> None:
                     help="scheduler coalescing deadline per request")
     ap.add_argument("--workers", type=int, default=1,
                     help="scheduler engine-call threads")
+    # multi-replica tier (repro/serve/tier.py)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="> 1: serve through the replica-pool tier "
+                         "(work-stealing engine replicas over a shared "
+                         "model registry) instead of one MicroBatcher")
+    ap.add_argument("--models", default=None,
+                    help="comma-separated bundle paths to register and "
+                         "serve CONCURRENTLY in one tier (names = file "
+                         "stems); implies the tier path")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="tier admission bound: requests past this many "
+                         "queued are rejected (or shed, per "
+                         "--overload-policy) instead of queueing unboundedly")
+    ap.add_argument("--overload-policy", choices=("reject", "shed-oldest"),
+                    default="reject",
+                    help="what happens at the --max-queue bound")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="default request deadline; the tier coalesces "
+                         "batches from deadline buckets, soonest first")
     ap.add_argument("--require-fused", action="store_true",
                     help="fail loudly (exit) unless the engine compiled on "
                          "the fused shared-table path or better — an "
@@ -233,26 +254,6 @@ def _build_model_program(args):
     return prog, f"model=lut-stack dims={dims}"
 
 
-def _enforce_path(args, engine) -> None:
-    """``--require-fused`` / ``--require-pallas``: downgrades fail loudly.
-
-    ``compile_program`` already warns (:class:`EnginePathWarning`) on every
-    path downgrade; these flags are for deployments where a warning is not
-    loud enough — the launcher exits with the downgrade reason instead of
-    serving at a lower tier.
-    """
-    why = engine.fuse_reason or "no downgrade reason recorded"
-    if getattr(args, "require_pallas", False) and engine.path != "pallas":
-        raise SystemExit(
-            f"--require-pallas: engine compiled on the {engine.path!r} "
-            f"path, not the Pallas mega-kernel ({why})")
-    if getattr(args, "require_fused", False) \
-            and engine.path not in ("pallas", "fused"):
-        raise SystemExit(
-            f"--require-fused: engine compiled on the generic "
-            f"{engine.path!r} path ({why})")
-
-
 def _rtl_gate(args, prog, engine, *, oracle=None) -> dict:
     """Run the RTL attestation (``core.rtl.verify_rtl``) and report it."""
     from repro.core.rtl import verify_rtl
@@ -267,22 +268,37 @@ def _rtl_gate(args, prog, engine, *, oracle=None) -> dict:
     return att
 
 
-def _tables_engine(args, mesh):
-    """Build (or cold-start) the verified integer engine per the CLI flags.
-
-    Three paths, in order of preference:
-    * ``--artifact`` file exists → load the bundle (content-hash checked),
-      rebuild the engine from the stored pre-composed stages, and either
-      re-run the gate or — with ``--skip-verify-cached`` and a stored
-      attestation — trust the bundle's own proof;
-    * otherwise compile from the model spec, run the gate, and (when
-      ``--artifact`` is set) save the bundle for the next cold start.
-    """
-    from repro.kernels.lut_serve import compile_program, verify_engine
-    from repro.serve.artifact import build_engine, load_artifact, save_artifact
+def _spec(args, mesh, *, verify: str, optimize: bool = False):
+    from repro.serve.api import EngineSpec
 
     prefer = "pallas" if (args.engine == "pallas"
                           or args.require_pallas) else None
+    require = ("pallas" if args.require_pallas
+               else "fused" if args.require_fused else None)
+    return EngineSpec(engine=prefer, mesh=mesh, require=require,
+                      verify=verify, optimize=optimize,
+                      n_random=256 if args.smoke else 2048, seed=args.seed)
+
+
+def _tables_engine(args, mesh):
+    """Build (or cold-start) the verified integer engine per the CLI flags.
+
+    Everything goes through the ``repro.serve.api`` façade — one
+    :class:`EngineSpec` captures the preferred lowering, the require-flags,
+    and the verify posture:
+
+    * ``--artifact`` file exists → ``build(path, spec)`` loads the bundle
+      (content-hash checked) and either re-runs the gate (``verify="full"``)
+      or — with ``--skip-verify-cached`` — trusts the bundle's stored
+      attestation (``verify="cached"``);
+    * otherwise ``build(prog, spec)`` compiles from the model spec
+      (``optimize=True`` under ``--dce``, gated against the unoptimized
+      oracle) and, when ``--artifact`` is set, the bundle is saved for the
+      next cold start.
+    """
+    from repro.serve.api import EngineRequirementError, build
+    from repro.serve.artifact import save_artifact
+
     if args.artifact and os.path.exists(args.artifact):
         if args.dce:
             raise SystemExit(
@@ -290,54 +306,46 @@ def _tables_engine(args, mesh):
                 "existing bundle (its stages and attestation cover the "
                 "stored program).  Delete the bundle (or point --artifact "
                 "elsewhere) and re-run with --dce to save an optimized one.")
-        t0 = time.time()
-        art = load_artifact(args.artifact)
-        engine = build_engine(art, mesh=mesh, engine=prefer)
-        t_load = time.time() - t0
-        _enforce_path(args, engine)
+        spec = _spec(args, mesh,
+                     verify="cached" if args.skip_verify_cached else "full")
+        try:
+            built = build(args.artifact, spec)
+        except EngineRequirementError as e:
+            raise SystemExit(str(e))
+        engine, att = built.engine, built.attestation
         print(f"[serve] artifact loaded: {args.artifact} "
-              f"(hash {art.content_hash[:12]}, path={engine.path}, "
-              f"{t_load:.2f}s — no re-lowering)")
-        if args.skip_verify_cached and art.attestation:
-            att = art.attestation
+              f"(hash {built.content_hash[:12]}, path={engine.path}, "
+              f"{built.timings['load_s'] + built.timings['compile_s']:.2f}s "
+              f"— no re-lowering)")
+        if "gate_s" in built.timings:
+            print(f"[serve] bit-exact gate PASSED: {att['random']} random + "
+                  f"{att['exhaustive']} exhaustive rows vs DaisProgram.run "
+                  f"(gate {built.timings['gate_s']:.2f}s)")
+        else:
             print(f"[serve] bit-exact gate SKIPPED: cached attestation "
                   f"({att.get('random')} random + {att.get('exhaustive')} "
                   f"exhaustive rows) verified by content hash")
-        else:
-            t0 = time.time()
-            gate = verify_engine(engine, art.prog,
-                                 n_random=256 if args.smoke else 2048,
-                                 seed=args.seed)
-            print(f"[serve] bit-exact gate PASSED: {gate['random']} random + "
-                  f"{gate['exhaustive']} exhaustive rows vs DaisProgram.run "
-                  f"(gate {time.time() - t0:.2f}s)")
         if args.verify_rtl:
-            _rtl_gate(args, art.prog, engine)
-        return art.prog, engine
+            _rtl_gate(args, built.prog, engine)
+        return built.prog, engine
 
     t0 = time.time()
-    prog, model_desc = _build_model_program(args)
-    t_compile = time.time() - t0
-    oracle = prog
+    src_prog, model_desc = _build_model_program(args)
+    t_lower = time.time() - t0
+    spec = _spec(args, mesh, verify="full", optimize=args.dce)
+    try:
+        built = build(src_prog, spec)
+    except EngineRequirementError as e:
+        raise SystemExit(str(e))
+    prog, engine = built.prog, built.engine
+    gate = dict(built.attestation)
     if args.dce:
-        from repro.core.opt import eliminate_dead_cells
-        prog, report = eliminate_dead_cells(prog)
-        print(f"[serve] dce: {report.summary()}")
-    t0 = time.time()
-    engine = compile_program(prog, mesh=mesh, engine=prefer)
-    _enforce_path(args, engine)
-    # with --dce the gate runs the engine built from the OPTIMIZED program
-    # against the UNoptimized interpreter — it proves the pass, not just
-    # the lowering
-    gate = verify_engine(engine, oracle,
-                         n_random=256 if args.smoke else 2048,
-                         seed=args.seed)
-    t_gate = time.time() - t0
+        print(f"[serve] dce: {built.timings['dce_summary']}")
     if args.verify_rtl:
         # three-way attestation: the emitted Verilog (simulated) vs the
         # UNoptimized interpreter vs the engine — with --dce this proves
         # the optimized program's RTL against the pre-DCE oracle
-        gate["rtl"] = _rtl_gate(args, prog, engine, oracle=oracle)
+        gate["rtl"] = _rtl_gate(args, prog, engine, oracle=built.oracle)
     pk = (f" launches={engine.n_launches} "
           f"packed_table_bytes={engine.packed_table_bytes}"
           if engine.path == "pallas" else "")
@@ -347,7 +355,7 @@ def _tables_engine(args, mesh):
           f"mesh={tuple(mesh.devices.shape)}{pk}")
     print(f"[serve] bit-exact gate PASSED: {gate['random']} random + "
           f"{gate['exhaustive']} exhaustive rows vs DaisProgram.run "
-          f"(lower {t_compile:.2f}s, gate {t_gate:.2f}s)")
+          f"(lower {t_lower:.2f}s, gate {built.timings['gate_s']:.2f}s)")
     if args.artifact:
         digest = save_artifact(args.artifact, prog, attestation=gate)
         print(f"[serve] artifact saved: {args.artifact} "
@@ -360,6 +368,8 @@ def serve_tables(args) -> None:
     from repro.launch.mesh import make_local_mesh
 
     mesh = make_local_mesh()
+    if args.models or args.replicas > 1:
+        return serve_tier(args, mesh)
     prog, engine = _tables_engine(args, mesh)
     if args.serve_loop:
         return serve_loop(args, prog, engine)
@@ -399,16 +409,18 @@ def serve_loop(args, prog, engine) -> None:
     request latency and achieved throughput for both.
     """
     from repro.kernels.lut_serve import input_code_bounds
-    from repro.serve.scheduler import BatcherConfig, compare_under_load
+    from repro.serve.scheduler import ServeConfig, compare_under_load
 
     n = max(args.requests, 1)
     lo, hi = input_code_bounds(prog)
     rng = np.random.default_rng(args.seed)
     codes = rng.integers(lo, hi + 1, (n, engine.n_inputs), np.int64)
 
-    cfg = BatcherConfig(max_batch=args.max_batch,
-                        max_delay_ms=args.max_delay_ms,
-                        n_workers=args.workers)
+    cfg = ServeConfig(max_batch=args.max_batch,
+                      max_delay_ms=args.max_delay_ms,
+                      n_workers=args.workers,
+                      max_queue=args.max_queue,
+                      overload_policy=args.overload_policy)
     print(f"[serve-loop] scheduler up: max_batch={cfg.max_batch} "
           f"deadline={cfg.max_delay_ms}ms workers={cfg.n_workers}")
     offered = (f"{args.rate:,.0f} req/s" if args.rate > 0
@@ -427,6 +439,102 @@ def serve_loop(args, prog, engine) -> None:
     ratio = rows["engine"]["rows_per_s"] / rows["interp"]["rows_per_s"]
     print(f"[serve-loop] engine/interpreter throughput ratio: {ratio:.2f}x  "
           f"all {n} responses bit-exact vs DaisProgram.run")
+
+
+def serve_tier(args, mesh) -> None:
+    """Multi-replica, multi-model serving through the tier.
+
+    ``--models a.npz,b.npz`` registers every bundle (names = file stems)
+    into one :class:`~repro.serve.registry.ModelRegistry`; without it the
+    single engine from the usual CLI flags serves as model ``"default"``.
+    The open-loop driver then submits interleaved per-model traffic at
+    ``--rate`` (0 = burst) and every response is asserted bit-exact against
+    *that model's* ``DaisProgram.run`` — per-model correctness under
+    concurrent multi-model load, not just aggregate counts.
+    """
+    from repro.kernels.lut_serve import input_code_bounds
+    from repro.parallel.sharding import replica_meshes
+    from repro.serve.api import build, tier_from_built
+    from repro.serve.scheduler import RejectedError, ServeConfig
+    from repro.serve.tier import TierConfig
+
+    built = {}
+    if args.models:
+        spec = _spec(args, mesh,
+                     verify="cached" if args.skip_verify_cached else "full")
+        for path in args.models.split(","):
+            name = os.path.splitext(os.path.basename(path))[0]
+            built[name] = build(path, spec)
+            print(f"[tier] registered {name!r}: hash "
+                  f"{built[name].content_hash[:12]} "
+                  f"path={built[name].engine.path}")
+    else:
+        prog, engine = _tables_engine(args, mesh)
+        from repro.serve.api import BuiltEngine
+        built["default"] = BuiltEngine(engine=engine, prog=prog, oracle=prog,
+                                       attestation=None)
+
+    placements = replica_meshes(mesh, args.replicas)
+    distinct = len({id(m) for m in placements})
+    cfg = TierConfig(
+        n_replicas=args.replicas,
+        serve=ServeConfig(max_batch=args.max_batch,
+                          max_delay_ms=args.max_delay_ms,
+                          max_queue=args.max_queue,
+                          slo_ms=args.slo_ms,
+                          overload_policy=args.overload_policy))
+    tier = tier_from_built(built, cfg)
+    print(f"[tier] up: {args.replicas} replicas over "
+          f"{mesh.devices.size} device(s) "
+          f"({'disjoint sub-meshes' if distinct > 1 else 'time-multiplexed'})"
+          f", models={sorted(built)}, max_queue={args.max_queue}, "
+          f"policy={args.overload_policy}")
+
+    # interleaved per-model open-loop traffic, absolute-deadline paced
+    n = max(args.requests, 1)
+    rng = np.random.default_rng(args.seed)
+    work = []                                  # (model, row, expected_row)
+    per = max(n // len(built), 1)
+    for name, b in built.items():
+        lo, hi = input_code_bounds(b.prog)
+        codes = rng.integers(lo, hi + 1, (per, b.engine.n_inputs), np.int64)
+        ref = np.asarray(b.prog.run(codes), np.int64)
+        work += [(name, codes[i], ref[i]) for i in range(per)]
+    order = rng.permutation(len(work))
+    t0 = time.monotonic()
+    flights, n_rejected = [], 0
+    for k, idx in enumerate(order):
+        name, row, ref = work[idx]
+        if args.rate > 0:
+            delay = (t0 + k / args.rate) - time.monotonic()
+            if delay > 0:
+                time.sleep(delay)
+        try:
+            flights.append((tier.submit(row, name), name, ref))
+        except RejectedError:
+            n_rejected += 1
+    mismatches = 0
+    for fut, name, ref in flights:
+        if not np.array_equal(np.asarray(fut.result(timeout=120), np.int64),
+                              ref):
+            mismatches += 1
+    wall = time.monotonic() - t0
+    s = tier.stats()
+    tier.stop()
+    if mismatches:
+        raise SystemExit(f"[tier] {mismatches} responses diverged from "
+                         f"their model's DaisProgram.run")
+    offered = (f"{args.rate:,.0f} req/s" if args.rate > 0
+               else "max-rate burst")
+    print(f"[tier] {len(flights)} served @ {offered}: "
+          f"p50={s.p50_ms:.2f} ms  p99={s.p99_ms:.2f} ms  "
+          f"throughput={len(flights) / wall:,.0f} req/s  "
+          f"(batches={s.n_batches}, stolen={s.n_stolen}, "
+          f"rejected={n_rejected}, shed={s.n_shed}, "
+          f"deadline_misses={s.deadline_misses})")
+    print(f"[tier] per-model: "
+          f"{ {k: v for k, v in sorted(s.per_model.items())} } — every "
+          f"response bit-exact vs its model's interpreter")
 
 
 if __name__ == "__main__":

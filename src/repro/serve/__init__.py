@@ -4,26 +4,44 @@
 into a jitted accelerator engine; this package turns that engine into a
 service:
 
+* :mod:`repro.serve.api` — **the public façade**: ``EngineSpec`` +
+  ``build(source, spec)`` for engine construction (program, loaded bundle,
+  or bundle path → qualified engine + attestation) and
+  ``serve(models, spec, tier)`` for the one-call path to a live service,
 * :mod:`repro.serve.scheduler` — async micro-batching: individual requests
   are coalesced into padded power-of-two batches under a latency deadline
   and scattered back to per-request futures,
+* :mod:`repro.serve.tier` — the fleet layer: a pool of work-stealing engine
+  replicas with admission control, SLO deadline buckets, and a
+  multi-model registry (:mod:`repro.serve.registry`) supporting runtime
+  hot-swap,
 * :mod:`repro.serve.artifact` — persistent compiled-artifact bundles:
   program + pre-composed fused tables + bit-exactness attestation in one
   atomic, content-hashed ``.npz``, so a restart cold-starts without
   re-lowering or re-verifying.
 
-``launch/serve.py --serve-loop`` / ``--artifact`` are the entry points;
-``docs/serving.md`` documents the request lifecycle and bundle format.
+``launch/serve.py --serve-loop`` / ``--replicas`` / ``--models`` are the
+entry points; ``docs/serving.md`` documents the request lifecycle, the tier
+architecture, and the bundle format.  ``BatcherConfig`` and
+``artifact.build_engine`` are deprecated shims over ``ServeConfig`` and
+``api.build``.
 """
 
+from repro.serve.api import (BuiltEngine, EngineRequirementError, EngineSpec,
+                             build, serve, tier_from_built)
 from repro.serve.artifact import (ArtifactError, LoadedArtifact,
                                   build_engine, load_artifact, save_artifact)
+from repro.serve.registry import ModelInfo, ModelRegistry, RegistryError
 from repro.serve.scheduler import (BatcherConfig, InterpreterBackend,
-                                   MicroBatcher, bucket_ladder,
-                                   drive_open_loop)
+                                   MicroBatcher, RejectedError, SchedulerStats,
+                                   ServeConfig, bucket_ladder, drive_open_loop)
+from repro.serve.tier import ServeTier, TierConfig, TierStats
 
 __all__ = [
-    "ArtifactError", "LoadedArtifact", "build_engine", "load_artifact",
-    "save_artifact", "BatcherConfig", "InterpreterBackend", "MicroBatcher",
-    "bucket_ladder", "drive_open_loop",
+    "ArtifactError", "BatcherConfig", "BuiltEngine", "EngineRequirementError",
+    "EngineSpec", "InterpreterBackend", "LoadedArtifact", "MicroBatcher",
+    "ModelInfo", "ModelRegistry", "RegistryError", "RejectedError",
+    "SchedulerStats", "ServeConfig", "ServeTier", "TierConfig", "TierStats",
+    "build", "build_engine", "drive_open_loop", "load_artifact",
+    "save_artifact", "serve", "tier_from_built", "bucket_ladder",
 ]

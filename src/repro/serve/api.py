@@ -1,0 +1,265 @@
+"""The public serve API: one façade for engine construction and serving.
+
+Engine construction sprawled across PRs 2–7 — ``compile_program(prog,
+mesh=, stages=, engine=, dtype=...)``, ``build_engine(art, ...)``,
+``verify_engine(...)``, ``verify_rtl(...)``, per-wire-format recomposition
+rules — and every launcher, example, and benchmark re-derived the same
+glue.  This module is the single entry point they all go through now:
+
+``build(source, spec)``
+    *source* is anything engine-shaped — a :class:`DaisProgram`, a loaded
+    :class:`LoadedArtifact`, or a bundle **path** — and
+    :class:`EngineSpec` is the whole construction policy in one frozen
+    value: preferred lowering, dtype/mesh, the optimizer pass, the verify
+    posture (full / cached / skip), the optional RTL gate, and the
+    require-flags that turn path downgrades into hard errors.  Returns a
+    :class:`BuiltEngine`: the engine plus the program oracle, the
+    attestation that justified serving it, and bundle provenance.
+
+``serve(models, spec, tier)``
+    builds every named model through the same spec, registers the results
+    in a fresh :class:`~repro.serve.registry.ModelRegistry`, and returns a
+    started :class:`~repro.serve.tier.ServeTier` — the one-call path from
+    artifacts on disk to a live multi-replica, multi-model service.
+
+The legacy spellings keep working as thin shims
+(``repro.serve.artifact.build_engine``, ``BatcherConfig``) that emit
+:class:`DeprecationWarning`; ``tests/test_serve_api.py`` holds the parity
+test pinning shim output bit-identical to the façade.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Union
+
+from repro.core.dais import DaisProgram
+from repro.serve.artifact import LoadedArtifact, load_artifact
+from repro.serve.registry import ModelRegistry
+from repro.serve.scheduler import ServeConfig
+from repro.serve.tier import ServeTier, TierConfig
+
+_VERIFY_POLICIES = ("full", "cached", "skip")
+_REQUIRE = (None, "fused", "pallas")
+
+
+class EngineRequirementError(RuntimeError):
+    """A ``require=`` spec was not met (engine compiled on a lower path)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """Everything about how to construct + qualify one serving engine.
+
+    * ``engine`` — preferred lowering: ``None`` (best available:
+      pallas/fused/generic as the program allows) or an explicit
+      ``"pallas" | "fused" | "groups"`` preference passed to
+      ``compile_program``.
+    * ``optimize`` — run dead-cell elimination (``core.opt``) on a fresh
+      program before compiling; the verify gate then checks the optimized
+      engine against the **unoptimized** interpreter, proving the pass.
+      Rejected for bundle sources (a bundle's stages and attestation cover
+      the stored program — re-save an optimized bundle instead).
+    * ``verify`` — ``"full"`` always runs the bit-exactness gate
+      (``verify_engine``); ``"cached"`` (default) trusts a bundle's
+      content-hash-protected stored attestation and falls back to the full
+      gate otherwise; ``"skip"`` runs no gate (tests, pre-verified flows).
+    * ``verify_rtl`` — additionally emit Verilog and assert the three-way
+      RTL == interpreter == engine attestation (``core.rtl.verify_rtl``).
+    * ``require`` — ``"fused"`` / ``"pallas"``: a path downgrade raises
+      :class:`EngineRequirementError` instead of serving at a lower tier
+      (the hard-exit form of ``EnginePathWarning``).
+    """
+
+    engine: Optional[str] = None
+    dtype: Optional[object] = None
+    mesh: object = None
+    jit: bool = True
+    optimize: bool = False
+    verify: str = "cached"
+    verify_rtl: bool = False
+    n_random: int = 1024
+    seed: int = 0
+    require: Optional[str] = None
+
+    def __post_init__(self):
+        if self.verify not in _VERIFY_POLICIES:
+            raise ValueError(f"verify must be one of {_VERIFY_POLICIES}, "
+                             f"got {self.verify!r}")
+        if self.require not in _REQUIRE:
+            raise ValueError(f"require must be one of {_REQUIRE}, "
+                             f"got {self.require!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class BuiltEngine:
+    """A qualified engine: runtime + oracle + the proof it was served on.
+
+    ``prog`` is the program the engine executes; ``oracle`` the program the
+    gate compared against (differs from ``prog`` exactly when
+    ``optimize=True`` rewrote it).  ``attestation`` is the gate statistics
+    that justified serving — ``None`` only under ``verify="skip"`` on a
+    bundle-less source.  ``content_hash`` / ``source`` carry bundle
+    provenance when the engine came from one.
+    """
+
+    engine: object
+    prog: DaisProgram
+    oracle: DaisProgram
+    attestation: Optional[dict]
+    content_hash: Optional[str] = None
+    source: Optional[str] = None
+    timings: Optional[dict] = None
+
+
+def _enforce(spec: EngineSpec, engine) -> None:
+    why = engine.fuse_reason or "no downgrade reason recorded"
+    if spec.require == "pallas" and engine.path != "pallas":
+        raise EngineRequirementError(
+            f"require='pallas': engine compiled on the {engine.path!r} "
+            f"path, not the Pallas mega-kernel ({why})")
+    if spec.require == "fused" and engine.path not in ("pallas", "fused"):
+        raise EngineRequirementError(
+            f"require='fused': engine compiled on the generic "
+            f"{engine.path!r} path ({why})")
+
+
+def build(source: Union[DaisProgram, LoadedArtifact, str],
+          spec: Optional[EngineSpec] = None, *,
+          oracle: Optional[DaisProgram] = None) -> BuiltEngine:
+    """Construct + qualify one engine from any engine-shaped source.
+
+    ``oracle`` overrides the gate's reference program (e.g. a pre-DCE
+    program when the caller optimized by hand); by default the source's
+    own program serves, except under ``optimize=True`` where the
+    unoptimized original is kept as the oracle automatically.
+    """
+    from repro.kernels.lut_serve import compile_program, verify_engine
+
+    spec = spec or EngineSpec()
+    timings: Dict[str, float] = {}
+
+    path_str = None
+    if isinstance(source, str):
+        path_str = source
+        t0 = time.monotonic()
+        source = load_artifact(source)
+        timings["load_s"] = time.monotonic() - t0
+
+    if isinstance(source, LoadedArtifact):
+        if spec.optimize:
+            raise ValueError(
+                "optimize=True applies at compile time and cannot rewrite "
+                "an existing bundle (its stages and attestation cover the "
+                "stored program); rebuild from the DaisProgram and save an "
+                "optimized bundle instead")
+        prog = source.prog
+        oracle = oracle if oracle is not None else prog
+        t0 = time.monotonic()
+        engine = compile_program(prog, mesh=spec.mesh, dtype=spec.dtype,
+                                 jit=spec.jit, fuse_layers=True,
+                                 stages=source.stages, engine=spec.engine,
+                                 packed=source.packed)
+        timings["compile_s"] = time.monotonic() - t0
+        _enforce(spec, engine)
+        stored = source.attestation
+        if spec.verify == "skip":
+            att = stored
+        elif spec.verify == "cached" and stored:
+            att = stored        # content hash ties it to these exact bytes
+        else:
+            t0 = time.monotonic()
+            att = verify_engine(engine, oracle, n_random=spec.n_random,
+                                seed=spec.seed)
+            timings["gate_s"] = time.monotonic() - t0
+        if spec.verify_rtl:
+            att = dict(att or {})
+            att["rtl"] = _rtl_attest(prog, engine, oracle, spec)
+        return BuiltEngine(engine=engine, prog=prog, oracle=oracle,
+                           attestation=att,
+                           content_hash=source.content_hash,
+                           source=path_str, timings=timings)
+
+    if not isinstance(source, DaisProgram):
+        raise TypeError(
+            f"build() takes a DaisProgram, LoadedArtifact, or bundle path; "
+            f"got {type(source).__name__}")
+
+    prog = source
+    oracle = oracle if oracle is not None else prog
+    if spec.optimize:
+        from repro.core.opt import eliminate_dead_cells
+        t0 = time.monotonic()
+        prog, report = eliminate_dead_cells(prog)
+        timings["dce_s"] = time.monotonic() - t0
+        timings["dce_summary"] = report.summary()
+    t0 = time.monotonic()
+    engine = compile_program(prog, mesh=spec.mesh, dtype=spec.dtype,
+                             jit=spec.jit, engine=spec.engine)
+    timings["compile_s"] = time.monotonic() - t0
+    _enforce(spec, engine)
+    att = None
+    if spec.verify in ("full", "cached"):
+        t0 = time.monotonic()
+        att = verify_engine(engine, oracle, n_random=spec.n_random,
+                            seed=spec.seed)
+        timings["gate_s"] = time.monotonic() - t0
+    if spec.verify_rtl:
+        att = dict(att or {})
+        att["rtl"] = _rtl_attest(prog, engine, oracle, spec)
+    return BuiltEngine(engine=engine, prog=prog, oracle=oracle,
+                       attestation=att, timings=timings)
+
+
+def _rtl_attest(prog, engine, oracle, spec: EngineSpec) -> dict:
+    from repro.core.rtl import verify_rtl
+    return verify_rtl(prog, oracle=oracle if oracle is not prog else None,
+                      engine=engine, n_random=spec.n_random, seed=spec.seed)
+
+
+def serve(models: Dict[str, Union[DaisProgram, LoadedArtifact, str]],
+          spec: Optional[EngineSpec] = None,
+          tier: Optional[TierConfig] = None,
+          *, start: bool = True) -> ServeTier:
+    """Artifacts in, live service out: build + register + start the tier.
+
+    ``models`` maps serving names to engine sources (programs, loaded
+    bundles, or bundle paths); every one is built through the same
+    ``spec``, registered (with its content hash and attestation) into a
+    fresh :class:`ModelRegistry`, and served by a started
+    :class:`ServeTier` under ``tier`` (default: 2 replicas, work stealing,
+    default :class:`ServeConfig`).  The caller owns the tier: ``submit``
+    into it, hot-``swap`` models through ``tier.registry``, ``stop()`` it
+    when done (it is also a context manager).
+    """
+    if not models:
+        raise ValueError("serve() needs at least one model")
+    registry = ModelRegistry()
+    for name, src in models.items():
+        built = build(src, spec)
+        registry.register(name, built.engine, built.prog,
+                          content_hash=built.content_hash,
+                          attestation=built.attestation)
+    t = ServeTier(registry, tier or TierConfig())
+    return t.start() if start else t
+
+
+def tier_from_built(built_models: Dict[str, BuiltEngine],
+                    tier: Optional[TierConfig] = None,
+                    *, start: bool = True) -> ServeTier:
+    """A started tier over engines the caller already built/gated."""
+    registry = ModelRegistry()
+    for name, b in built_models.items():
+        registry.register(name, b.engine, b.prog,
+                          content_hash=b.content_hash,
+                          attestation=b.attestation)
+    t = ServeTier(registry, tier or TierConfig())
+    return t.start() if start else t
+
+
+__all__ = [
+    "BuiltEngine", "EngineRequirementError", "EngineSpec", "ModelRegistry",
+    "ServeConfig", "ServeTier", "TierConfig", "build", "serve",
+    "tier_from_built",
+]

@@ -333,15 +333,21 @@ def load_artifact(path: str) -> LoadedArtifact:
 
 def build_engine(art: LoadedArtifact, *, mesh=None, jit: bool = True,
                  engine: Optional[str] = None) -> ServeEngine:
-    """Engine from a loaded bundle — no re-lowering, no table composition.
+    """Deprecated: use ``repro.serve.api.build(art, EngineSpec(...))``.
 
-    The stored ``fused/*`` stages (when present) go straight into
-    ``compile_program(stages=...)``; the serialized program still rides
-    along for metadata, dtype sizing, and the generic fallback path.
-    ``engine="pallas"`` additionally hands over the stored ``packed/*``
-    payload (v3 bundles), so the mega-kernel cold start skips both the
-    composition *and* the packing pass; pre-v3 bundles simply re-pack.
+    The pre-façade spelling of bundle cold-start (stored ``fused/*`` stages
+    and ``packed/*`` payload straight into ``compile_program`` — no
+    re-lowering, no composition).  It still works, bit-identically
+    (``tests/test_serve_api.py`` pins the parity), but emits a
+    :class:`DeprecationWarning`: the façade adds the verify policy, the
+    require-flags, and provenance in one call.
     """
+    import warnings
+
+    warnings.warn(
+        "build_engine(art, ...) is deprecated; use repro.serve.api.build("
+        "art, EngineSpec(mesh=..., engine=..., verify=...)).engine",
+        DeprecationWarning, stacklevel=2)
     return compile_program(art.prog, mesh=mesh, jit=jit,
                            fuse_layers=True, stages=art.stages,
                            engine=engine, packed=art.packed)

@@ -27,10 +27,24 @@ module bridges the two with the standard micro-batching loop:
   position in a shared output stream, correctness is independent of
   *completion* order — with ``n_workers > 1`` a later small chunk may finish
   before an earlier large one and nothing is misrouted (tier-1 tested).
+* **Admission control** — with ``ServeConfig.max_queue`` set, a submit that
+  would push the number of not-yet-served requests past the bound raises
+  :class:`RejectedError` instead of queueing unboundedly (the
+  ``overload_policy="reject"`` posture; the multi-replica tier in
+  ``repro/serve/tier.py`` additionally supports ``"shed-oldest"``).
 
 The scheduler is engine-agnostic: anything with ``run((B, n) int codes) ->
 (B, m)`` and an ``n_inputs`` attribute serves, which the tests use to
 inject blocking/slow engines for the edge cases.
+
+This module is the single-engine micro-batcher; the fleet-scale tier —
+replica pool, work stealing, deadline buckets, multi-model registry — lives
+in :mod:`repro.serve.tier` and reuses the bucket ladder, the padding, and
+:class:`ServeConfig` defined here.  :class:`BatcherConfig` is the deprecated
+pre-tier name of :class:`ServeConfig` and now warns on construction;
+``stats()`` returns a typed frozen :class:`SchedulerStats` whose
+``stats["key"]`` string access is the deprecated compat view (use the
+attributes, or ``.as_dict()`` when a real dict is needed).
 """
 
 from __future__ import annotations
@@ -39,12 +53,25 @@ import dataclasses
 import queue
 import threading
 import time
+import warnings
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import List, Optional
 
 import numpy as np
 
 from repro.parallel.sharding import pad_batch
+
+
+class RejectedError(RuntimeError):
+    """Request refused by admission control (bounded queue overflow).
+
+    Raised by ``submit`` under ``overload_policy="reject"`` when the queue
+    already holds ``max_queue`` not-yet-served requests, and set as the
+    exception of a *shed* request's future under ``"shed-oldest"`` (tier
+    only).  Catching it is the backpressure signal: the service is saturated
+    and the caller should slow down or retry elsewhere — p99 of everything
+    actually served stays bounded instead of growing with the backlog.
+    """
 
 
 def bucket_ladder(max_batch: int) -> List[int]:
@@ -62,12 +89,97 @@ def bucket_for(n: int, max_batch: int) -> int:
     return min(b, max_batch)
 
 
+_OVERLOAD_POLICIES = ("reject", "shed-oldest")
+
+
 @dataclasses.dataclass
-class BatcherConfig:
+class ServeConfig:
+    """Typed scheduler configuration (single engine and per-tier-replica).
+
+    The first four fields are the classic micro-batcher knobs; the last
+    three are the overload/SLO posture added with the serving tier:
+
+    * ``max_queue`` — admission bound on not-yet-served requests.  ``None``
+      (default) queues unboundedly; a bound makes overload explicit —
+      :class:`RejectedError` under ``"reject"``, oldest-request shedding
+      under ``"shed-oldest"`` (tier only).
+    * ``slo_ms`` — default per-request deadline.  The tier's coalescer
+      forms batches from deadline buckets soonest-first; a request with no
+      explicit deadline gets ``now + slo_ms`` (or no deadline when None).
+    * ``overload_policy`` — what happens at the ``max_queue`` bound.
+    """
+
     max_batch: int = 256        # largest bucket (power of two)
     max_delay_ms: float = 2.0   # deadline: oldest request never waits longer
     n_workers: int = 1          # engine-call threads (>1 => overlapped flushes)
     warmup: bool = True         # trace every bucket size at start()
+    max_queue: Optional[int] = None       # admission bound; None = unbounded
+    slo_ms: Optional[float] = None        # default request deadline
+    overload_policy: str = "reject"       # "reject" | "shed-oldest"
+
+    def __post_init__(self):
+        if self.overload_policy not in _OVERLOAD_POLICIES:
+            raise ValueError(
+                f"overload_policy must be one of {_OVERLOAD_POLICIES}, "
+                f"got {self.overload_policy!r}")
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {self.max_queue}")
+
+
+class BatcherConfig(ServeConfig):
+    """Deprecated pre-tier name of :class:`ServeConfig` (shim).
+
+    Construction works exactly as before and returns a full
+    :class:`ServeConfig`, but emits a :class:`DeprecationWarning` — new code
+    spells it ``ServeConfig`` (``repro.serve.api`` passes it to both the
+    single-engine :class:`MicroBatcher` and the tier's replicas).
+    """
+
+    def __post_init__(self):
+        warnings.warn(
+            "BatcherConfig is deprecated; use repro.serve.ServeConfig "
+            "(same fields plus max_queue/slo_ms/overload_policy)",
+            DeprecationWarning, stacklevel=3)
+        super().__post_init__()
+
+
+class _StatsView:
+    """Mixin: frozen-dataclass stats with a deprecated dict-style view."""
+
+    def as_dict(self) -> dict:
+        """The stats as a plain dict (the supported conversion)."""
+        return dataclasses.asdict(self)
+
+    def __getitem__(self, key: str):
+        warnings.warn(
+            f"string-typed stats access ({type(self).__name__}[{key!r}]) is "
+            f"deprecated; use the .{key} attribute or .as_dict()",
+            DeprecationWarning, stacklevel=2)
+        try:
+            return getattr(self, key)
+        except AttributeError:
+            raise KeyError(key) from None
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerStats(_StatsView):
+    """Latency/occupancy summary of one :class:`MicroBatcher`.
+
+    Latency percentiles are over everything *served*; ``n_rejected`` counts
+    submits refused by admission control (those never enter the latency
+    distribution — that is the point of bounding the queue).
+    """
+
+    n_requests: int = 0
+    n_batches: int = 0
+    n_rejected: int = 0
+    engine_path: Optional[str] = None
+    p50_ms: float = 0.0
+    p99_ms: float = 0.0
+    max_ms: float = 0.0
+    mean_batch_fill: float = 0.0
+    mean_bucket: float = 0.0
+    pad_overhead: float = 0.0
 
 
 class _Request:
@@ -98,7 +210,7 @@ class InterpreterBackend:
         return self._prog.run(x)
 
 
-def compare_under_load(prog, engine, codes, config: "BatcherConfig",
+def compare_under_load(prog, engine, codes, config: "ServeConfig",
                        rates) -> List[dict]:
     """Engine vs interpreter behind the *identical* scheduler, under load.
 
@@ -108,9 +220,9 @@ def compare_under_load(prog, engine, codes, config: "BatcherConfig",
     once with ``engine``, once with :class:`InterpreterBackend` over
     ``prog`` — asserts both response sets bit-exact against
     ``prog.run(codes)``, and returns one stats row per (rate × backend):
-    the :meth:`MicroBatcher.stats` fields plus ``backend``,
-    ``offered_rate``, ``n_requests``, ``rows_per_s``, ``wall_s``, and
-    ``warmup_s``.
+    the :class:`SchedulerStats` fields plus ``backend``, ``offered_rate``,
+    ``achieved_rate`` (the rate the driver actually submitted at),
+    ``n_requests``, ``rows_per_s``, ``wall_s``, and ``warmup_s``.
     """
     ref = np.asarray(prog.run(codes), np.int64)
     rows = []
@@ -121,47 +233,97 @@ def compare_under_load(prog, engine, codes, config: "BatcherConfig",
             t0 = time.monotonic()
             batcher.start()
             warmup_s = time.monotonic() - t0
-            out, wall = drive_open_loop(batcher, codes, rate)
+            out, drive = drive_open_loop(batcher, codes, rate)
             batcher.stop()
             if not np.array_equal(out.astype(np.int64), ref):
                 raise AssertionError(
                     f"scheduler/{name} responses diverged from "
                     f"DaisProgram.run — refusing to report its numbers")
-            s = batcher.stats()
+            s = batcher.stats().as_dict()
             s.update(backend=name, offered_rate=float(rate),
-                     rows_per_s=len(codes) / wall, wall_s=wall,
-                     warmup_s=warmup_s)
+                     achieved_rate=drive["achieved_rate"],
+                     rows_per_s=len(codes) / drive["wall_s"],
+                     wall_s=drive["wall_s"], warmup_s=warmup_s)
             rows.append(s)
     return rows
 
 
-def drive_open_loop(batcher: "MicroBatcher", codes, rate: float):
-    """Submit each row of ``codes`` on a fixed arrival schedule.
+def drive_open_loop(batcher, codes, rate: float, *, submit=None,
+                    poisson: bool = False, seed: int = 0,
+                    timeout: float = 120.0):
+    """Submit each row of ``codes`` on an open-loop arrival schedule.
 
     ``rate`` requests/s, independent of completions (open loop, so queueing
     delay lands in the latency tail instead of throttling the driver);
     ``rate <= 0`` submits everything at once (max-rate burst — measures
-    service capacity).  Returns ``(results, wall_seconds)``.
+    service capacity).  ``poisson=True`` draws exponential inter-arrival
+    gaps (mean ``1/rate``) instead of a fixed grid — the bursty arrival
+    process the tier benchmarks use.
+
+    Pacing is **absolute-deadline**: each request's arrival time is fixed
+    on the schedule up front (``t0 + schedule[k]``) and the driver sleeps
+    to that absolute instant, so OS sleep overshoot on one request can
+    never accumulate into a silently lower offered rate — a late submit is
+    followed by an immediate catch-up burst, and the *achieved* submission
+    rate is measured and reported next to the requested one instead of
+    being assumed.
+
+    ``submit`` overrides the submit callable (default
+    ``batcher.submit``) — the tier driver passes a model-routing closure.
+
+    Returns ``(results, info)`` where ``info`` is a dict with ``wall_s``
+    (submit + drain), ``requested_rate``, ``achieved_rate`` (submission
+    side; equals the burst rate when ``rate <= 0``), ``n_requests``, and
+    ``max_late_ms`` (worst single-submit lag behind its scheduled instant).
     """
+    submit = submit if submit is not None else batcher.submit
+    n = len(codes)
+    if rate > 0:
+        if poisson:
+            gaps = np.random.default_rng(seed).exponential(1.0 / rate, n)
+            schedule = np.concatenate([[0.0], np.cumsum(gaps[:-1])])
+        else:
+            schedule = np.arange(n) / rate
+    else:
+        schedule = np.zeros(n)
     t0 = time.monotonic()
     futures = []
+    max_late = 0.0
     for k, row in enumerate(codes):
-        if rate > 0:
-            delay = (t0 + k / rate) - time.monotonic()
-            if delay > 0:
-                time.sleep(delay)
-        futures.append(batcher.submit(row))
-    out = np.stack([f.result(timeout=120) for f in futures])
-    return out, time.monotonic() - t0
+        target = t0 + schedule[k]
+        delay = target - time.monotonic()
+        if delay > 0:
+            time.sleep(delay)
+        else:
+            max_late = max(max_late, -delay)
+        futures.append(submit(row))
+    t_last = time.monotonic()
+    out = np.stack([f.result(timeout=timeout) for f in futures])
+    wall = time.monotonic() - t0
+    span = max(t_last - t0, 1e-9)
+    info = {
+        "wall_s": wall,
+        "n_requests": n,
+        "requested_rate": float(rate),
+        "achieved_rate": (n - 1) / span if n > 1 else float("inf"),
+        "max_late_ms": max_late * 1e3,
+    }
+    return out, info
 
 
 class MicroBatcher:
     """Queue-in, future-out micro-batching front end for a ServeEngine."""
 
-    def __init__(self, engine, config: Optional[BatcherConfig] = None):
+    def __init__(self, engine, config: Optional[ServeConfig] = None):
         self.engine = engine
-        self.config = config or BatcherConfig()
+        self.config = config or ServeConfig()
         bucket_ladder(self.config.max_batch)  # validate power of two
+        if (self.config.max_queue is not None
+                and self.config.overload_policy == "shed-oldest"):
+            raise ValueError(
+                "overload_policy='shed-oldest' is a tier policy "
+                "(repro.serve.tier.ServeTier); MicroBatcher supports "
+                "'reject'")
         self._queue: "queue.Queue" = queue.Queue()
         self._collector: Optional[threading.Thread] = None
         self._pool: Optional[ThreadPoolExecutor] = None
@@ -170,6 +332,8 @@ class MicroBatcher:
         # serializes submit's closed-check+enqueue against stop's close, so
         # every accepted request is queued ahead of the _STOP sentinel
         self._submit_lock = threading.Lock()
+        self._n_pending = 0          # admitted, not yet served (admission)
+        self._n_rejected = 0
         self._latencies_s: List[float] = []
         self._batch_fill: List[int] = []
         self._batch_bucket: List[int] = []
@@ -227,7 +391,9 @@ class MicroBatcher:
         """Enqueue one request: (n_inputs,) integer codes -> Future of (m,).
 
         Returns immediately; the future resolves to the request's own output
-        row once some micro-batch containing it has run.
+        row once some micro-batch containing it has run.  With
+        ``max_queue`` configured, a submit past the bound raises
+        :class:`RejectedError` (admission control) instead of queueing.
         """
         codes = np.asarray(codes, np.int64)
         if codes.ndim != 1 or codes.shape[0] != self.engine.n_inputs:
@@ -237,6 +403,13 @@ class MicroBatcher:
         with self._submit_lock:
             if self._closed or self._collector is None:
                 raise RuntimeError("scheduler is not running")
+            mq = self.config.max_queue
+            if mq is not None and self._n_pending >= mq:
+                self._n_rejected += 1
+                raise RejectedError(
+                    f"queue full ({self._n_pending}/{mq} requests pending) "
+                    f"— overload_policy='reject'")
+            self._n_pending += 1
             req = _Request(codes)
             self._queue.put(req)
         return req.future
@@ -322,26 +495,37 @@ class MicroBatcher:
             for req in chunk:
                 if not req.future.done():
                     req.future.set_exception(e)
+        finally:
+            with self._submit_lock:
+                self._n_pending -= len(chunk)
 
     # ------------------------------------------------------------------ stats
-    def stats(self) -> dict:
-        """Latency/occupancy summary over everything served so far."""
+    def stats(self) -> SchedulerStats:
+        """Typed latency/occupancy summary over everything served so far.
+
+        Returns a frozen :class:`SchedulerStats`; ``stats.p50_ms`` etc. —
+        the dict-style ``stats["p50_ms"]`` spelling still works but emits a
+        :class:`DeprecationWarning` (use ``.as_dict()`` for a real dict).
+        """
         with self._lock:
             lat = np.asarray(self._latencies_s, np.float64)
             fill = np.asarray(self._batch_fill, np.float64)
             bucket = np.asarray(self._batch_bucket, np.float64)
         engine_path = getattr(self.engine, "path", None)
+        with self._submit_lock:
+            n_rejected = self._n_rejected
         if lat.size == 0:
-            return {"n_requests": 0, "n_batches": 0,
-                    "engine_path": engine_path}
-        return {
-            "engine_path": engine_path,
-            "n_requests": int(lat.size),
-            "n_batches": int(fill.size),
-            "p50_ms": float(np.percentile(lat, 50) * 1e3),
-            "p99_ms": float(np.percentile(lat, 99) * 1e3),
-            "max_ms": float(lat.max() * 1e3),
-            "mean_batch_fill": float(fill.mean()),
-            "mean_bucket": float(bucket.mean()),
-            "pad_overhead": float((bucket - fill).sum() / bucket.sum()),
-        }
+            return SchedulerStats(engine_path=engine_path,
+                                  n_rejected=n_rejected)
+        return SchedulerStats(
+            engine_path=engine_path,
+            n_requests=int(lat.size),
+            n_batches=int(fill.size),
+            n_rejected=n_rejected,
+            p50_ms=float(np.percentile(lat, 50) * 1e3),
+            p99_ms=float(np.percentile(lat, 99) * 1e3),
+            max_ms=float(lat.max() * 1e3),
+            mean_batch_fill=float(fill.mean()),
+            mean_bucket=float(bucket.mean()),
+            pad_overhead=float((bucket - fill).sum() / bucket.sum()),
+        )

@@ -12,6 +12,7 @@ On CPU the kernel runs with ``interpret=True`` (auto-selected off-TPU), so
 these tests execute the identical kernel logic CI ships.
 """
 
+import dataclasses
 import json
 
 import jax
@@ -249,7 +250,7 @@ def test_runner_direct_from_packed_stages():
 # scheduler + artifact integration
 # --------------------------------------------------------------------------- #
 def test_scheduler_serves_pallas_engine_and_reports_path():
-    from repro.serve.scheduler import BatcherConfig, MicroBatcher
+    from repro.serve.scheduler import MicroBatcher, ServeConfig
 
     layer = LUTDense(5, 4, hidden=4)
     prog = compile_sequential([layer], [layer.init(KEY)], IN_F, IN_I)
@@ -257,17 +258,18 @@ def test_scheduler_serves_pallas_engine_and_reports_path():
     assert engine.path == "pallas"
     lo, hi = input_code_bounds(prog)
     codes = np.random.default_rng(3).integers(lo, hi + 1, (40, len(lo)))
-    with MicroBatcher(engine, BatcherConfig(max_batch=16,
-                                            max_delay_ms=1.0)) as mb:
+    with MicroBatcher(engine, ServeConfig(max_batch=16,
+                                          max_delay_ms=1.0)) as mb:
         futs = [mb.submit(c) for c in codes]
         out = np.stack([f.result(timeout=30.0) for f in futs])
         stats = mb.stats()
     np.testing.assert_array_equal(out.astype(np.int64), prog.run(codes))
-    assert stats["engine_path"] == "pallas"
+    assert stats.engine_path == "pallas"
 
 
 def test_artifact_v3_round_trips_packed_payload(tmp_path):
-    from repro.serve.artifact import build_engine, load_artifact, save_artifact
+    from repro.serve.api import EngineSpec, build
+    from repro.serve.artifact import load_artifact, save_artifact
 
     l1 = LUTDense(6, 9, hidden=4, use_batchnorm=True)
     l2 = LUTDense(9, 3, hidden=4)
@@ -282,18 +284,20 @@ def test_artifact_v3_round_trips_packed_payload(tmp_path):
     # the stored payload is the lane-packed layout, not a re-derivation
     assert {str(st.table.dtype) for st in art.packed.stages
             if st.table is not None} == {"int8"}
-    engine = build_engine(art, engine="pallas")
+    engine = build(art, EngineSpec(engine="pallas",
+                                   verify="skip")).engine
     assert engine.path == "pallas" and engine.fuse_reason == ""
     assert engine.packed_table_bytes == art.packed.table_bytes()
     verify_engine(engine, prog, n_random=256)
     # default build keeps the fused path exactly as before
-    assert build_engine(art).path == "fused"
+    assert build(art, EngineSpec(verify="skip")).engine.path == "fused"
 
 
 def test_v2_bundle_negotiates_without_packed_payload(tmp_path):
     """A pre-v3 bundle (no packed/*) loads, and a pallas engine re-packs."""
-    from repro.serve.artifact import (_bundle_digest, build_engine,
-                                      load_artifact, save_artifact)
+    from repro.serve.api import EngineSpec, build
+    from repro.serve.artifact import (_bundle_digest, load_artifact,
+                                      save_artifact)
 
     layer = LUTDense(4, 3, hidden=4)
     prog = compile_sequential([layer], [layer.init(KEY)], IN_F, IN_I)
@@ -312,7 +316,8 @@ def test_v2_bundle_negotiates_without_packed_payload(tmp_path):
 
     art = load_artifact(v2)
     assert art.meta["format_version"] == 2 and art.packed is None
-    engine = build_engine(art, engine="pallas")
+    engine = build(art, EngineSpec(engine="pallas",
+                                   verify="skip")).engine
     assert engine.path == "pallas"          # re-packed from fused stages
     verify_engine(engine, prog, n_random=128)
 
@@ -321,19 +326,29 @@ def test_v2_bundle_negotiates_without_packed_payload(tmp_path):
 # launcher enforcement: --require-pallas / --require-fused fail loudly
 # --------------------------------------------------------------------------- #
 def test_require_flags_fail_loudly():
+    """--require-pallas/--require-fused map to EngineSpec.require, and a
+    path downgrade is a hard EngineRequirementError, not a warning."""
     import argparse
 
-    from repro.launch.serve import _enforce_path
+    from repro.launch.serve import _spec
+    from repro.serve.api import EngineRequirementError, EngineSpec, build
 
     layer = LUTDense(4, 3, hidden=4)
     prog = compile_sequential([layer], [layer.init(KEY)], IN_F, IN_I)
-    fused = compile_program(prog, engine="fused")
-    generic = compile_program(prog, fuse_layers=False)
     ns = lambda **kw: argparse.Namespace(
-        **{"require_fused": False, "require_pallas": False, **kw})
-    _enforce_path(ns(), generic)                      # no flags: anything goes
-    _enforce_path(ns(require_fused=True), fused)
-    with pytest.raises(SystemExit, match="require-pallas"):
-        _enforce_path(ns(require_pallas=True), fused)
-    with pytest.raises(SystemExit, match="require-fused"):
-        _enforce_path(ns(require_fused=True), generic)
+        **{"engine": "tables", "require_fused": False,
+           "require_pallas": False, "smoke": True, "seed": 0, **kw})
+    assert _spec(ns(), None, verify="full").require is None
+    assert _spec(ns(require_fused=True), None, verify="full").require == "fused"
+    spec = _spec(ns(require_pallas=True), None, verify="full")
+    assert spec.require == "pallas" and spec.engine == "pallas"
+    # the generic lowering cannot satisfy either require flag
+    with pytest.raises(EngineRequirementError, match="pallas"):
+        build(prog, EngineSpec(engine="groups", require="pallas",
+                               verify="skip"))
+    with pytest.raises(EngineRequirementError, match="fused"):
+        build(prog, EngineSpec(engine="groups", require="fused",
+                               verify="skip"))
+    # satisfied requirements build normally
+    assert build(prog, dataclasses.replace(
+        spec, n_random=64)).engine.path == "pallas"

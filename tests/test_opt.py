@@ -226,7 +226,8 @@ def test_dce_fully_pruned_layer_degrades_gracefully():
 
 def test_dce_artifact_round_trip():
     """Optimized programs persist through the bundle format bit-exactly."""
-    from repro.serve.artifact import build_engine, load_artifact, save_artifact
+    from repro.serve.api import EngineSpec, build
+    from repro.serve.artifact import load_artifact, save_artifact
 
     l1 = LUTDense(4, 4, hidden=4)
     p1 = _zero_cells(l1.init(KEY), np.eye(4, dtype=bool))
@@ -237,7 +238,7 @@ def test_dce_artifact_round_trip():
         path = f"{d}/opt.npz"
         save_artifact(path, opt, attestation={"random": 1})
         art = load_artifact(path)
-        eng = build_engine(art)
+        eng = build(art, EngineSpec(verify="skip")).engine
         verify_engine(eng, prog, n_random=256)
 
 

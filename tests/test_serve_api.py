@@ -1,0 +1,192 @@
+"""The repro.serve.api façade: build()/serve() + legacy shim parity.
+
+ISSUE 8's API redesign: one ``build(source, EngineSpec)`` entry point for
+every engine-shaped source (program / loaded bundle / bundle path), with
+the verify posture, the optimizer pass, and the require-flags in one
+frozen spec — and the legacy spellings (``artifact.build_engine``,
+``BatcherConfig``) kept working as DeprecationWarning shims whose output
+is pinned bit-identical here.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.dais import compile_sequential
+from repro.core.lut_layers import LUTDense
+from repro.kernels.lut_serve import input_code_bounds
+from repro.serve.api import (BuiltEngine, EngineRequirementError, EngineSpec,
+                             build, serve)
+from repro.serve.artifact import build_engine, load_artifact, save_artifact
+from repro.serve.scheduler import BatcherConfig, ServeConfig
+
+
+def _prog(dims=(6, 5, 3), seed=0, pruned=False):
+    layers = [LUTDense(ci, co, hidden=4,
+                       use_batchnorm=(not pruned and k == 0))
+              for k, (ci, co) in enumerate(zip(dims[:-1], dims[1:]))]
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(layers))
+    params = [l.init(k) for l, k in zip(layers, keys)]
+    if pruned:          # kill half the first layer's cells -> DCE has work
+        import jax.numpy as jnp
+        mask = np.random.default_rng(seed).random(
+            (dims[0], dims[1])) < 0.5
+        for key in ("w_out", "b_out"):
+            a = np.array(params[0][key], np.float64)
+            a[mask] = 0.0
+            params[0][key] = jnp.asarray(a, jnp.float32)
+    return compile_sequential(layers, params, 4, 2)
+
+
+def _codes(prog, n=16, seed=1):
+    lo, hi = input_code_bounds(prog)
+    return np.random.default_rng(seed).integers(
+        lo, hi + 1, (n, len(lo)), np.int64)
+
+
+# --------------------------------------------------------------------------- #
+# spec validation
+# --------------------------------------------------------------------------- #
+def test_engine_spec_is_frozen_and_validated():
+    spec = EngineSpec()
+    assert spec.verify == "cached" and spec.require is None
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        spec.verify = "skip"
+    with pytest.raises(ValueError, match="verify"):
+        EngineSpec(verify="maybe")
+    with pytest.raises(ValueError, match="require"):
+        EngineSpec(require="groups")
+    with pytest.raises(TypeError):
+        build(42)
+
+
+# --------------------------------------------------------------------------- #
+# build from a fresh program
+# --------------------------------------------------------------------------- #
+def test_build_program_gates_and_reports():
+    prog = _prog()
+    built = build(prog, EngineSpec(n_random=64))
+    assert isinstance(built, BuiltEngine)
+    assert built.prog is prog and built.oracle is prog
+    assert built.attestation["random"] == 64
+    assert built.content_hash is None and built.source is None
+    assert "compile_s" in built.timings and "gate_s" in built.timings
+    codes = _codes(prog)
+    np.testing.assert_array_equal(
+        np.asarray(built.engine.run(codes), np.int64), prog.run(codes))
+
+
+def test_build_verify_skip_runs_no_gate():
+    built = build(_prog(), EngineSpec(verify="skip"))
+    assert built.attestation is None
+    assert "gate_s" not in built.timings
+
+
+def test_require_turns_downgrade_into_hard_error():
+    prog = _prog()
+    # engine="groups" forces the generic path; require= makes that fatal
+    with pytest.raises(EngineRequirementError, match="pallas"):
+        build(prog, EngineSpec(engine="groups", require="pallas",
+                               verify="skip"))
+    with pytest.raises(EngineRequirementError, match="generic"):
+        build(prog, EngineSpec(engine="groups", require="fused",
+                               verify="skip"))
+    built = build(prog, EngineSpec(engine="pallas", require="pallas",
+                                   n_random=64))
+    assert built.engine.path == "pallas"
+
+
+def test_build_optimize_keeps_unoptimized_oracle():
+    prog = _prog(pruned=True)
+    built = build(prog, EngineSpec(optimize=True, n_random=64))
+    # DCE rewrote the served program; the gate ran vs the ORIGINAL oracle
+    assert built.oracle is prog and built.prog is not prog
+    assert built.prog.n_instrs() < prog.n_instrs()
+    assert "dce_s" in built.timings and built.timings["dce_summary"]
+    codes = _codes(prog)
+    np.testing.assert_array_equal(
+        np.asarray(built.engine.run(codes), np.int64), prog.run(codes))
+
+
+# --------------------------------------------------------------------------- #
+# build from a bundle (LoadedArtifact / path)
+# --------------------------------------------------------------------------- #
+def test_build_bundle_path_trusts_cached_attestation(tmp_path):
+    prog = _prog()
+    path = str(tmp_path / "m.npz")
+    att = {"verdict": "bit-exact", "random": 99, "exhaustive": 0}
+    save_artifact(path, prog, attestation=att)
+
+    built = build(path, EngineSpec())            # verify="cached"
+    assert built.source == path
+    assert built.content_hash
+    assert built.attestation["random"] == 99     # stored, not re-run
+    assert "gate_s" not in built.timings and "load_s" in built.timings
+
+    full = build(path, EngineSpec(verify="full", n_random=64))
+    assert full.attestation["random"] == 64      # re-gated
+    assert "gate_s" in full.timings
+
+    codes = _codes(prog)
+    np.testing.assert_array_equal(
+        np.asarray(built.engine.run(codes), np.int64), prog.run(codes))
+
+    with pytest.raises(ValueError, match="optimize"):
+        build(path, EngineSpec(optimize=True))
+
+
+# --------------------------------------------------------------------------- #
+# serve(): artifacts in, live tier out
+# --------------------------------------------------------------------------- #
+def test_serve_builds_registers_and_starts(tmp_path):
+    progs = {"a": _prog(seed=0), "b": _prog((4, 4), seed=1)}
+    paths = {}
+    for name, p in progs.items():
+        paths[name] = str(tmp_path / f"{name}.npz")
+        save_artifact(paths[name], p,
+                      attestation={"verdict": "bit-exact", "random": 8,
+                                   "exhaustive": 0})
+    with pytest.raises(ValueError, match="at least one"):
+        serve({})
+    tier = serve(paths, EngineSpec())
+    try:
+        assert tier.registry.names() == ["a", "b"]
+        assert tier.registry.info("a").content_hash
+        for name, p in progs.items():
+            codes = _codes(p, n=4)
+            futs = [tier.submit(codes[k], name) for k in range(4)]
+            out = np.stack([np.asarray(f.result(timeout=60), np.int64)
+                            for f in futs])
+            np.testing.assert_array_equal(out, p.run(codes))
+    finally:
+        tier.stop()
+
+
+# --------------------------------------------------------------------------- #
+# legacy shims: deprecated, but bit-identical
+# --------------------------------------------------------------------------- #
+def test_build_engine_shim_warns_and_matches_facade(tmp_path):
+    prog = _prog()
+    path = str(tmp_path / "m.npz")
+    save_artifact(path, prog)
+    art = load_artifact(path)
+
+    with pytest.warns(DeprecationWarning, match="repro.serve.api.build"):
+        legacy = build_engine(art)
+    facade = build(art, EngineSpec(verify="skip")).engine
+    assert legacy.path == facade.path
+    codes = _codes(prog, n=32)
+    np.testing.assert_array_equal(np.asarray(legacy.run(codes)),
+                                  np.asarray(facade.run(codes)))
+    np.testing.assert_array_equal(
+        np.asarray(legacy.run(codes), np.int64), prog.run(codes))
+
+
+def test_batcher_config_shim_warns_and_is_a_serve_config():
+    with pytest.warns(DeprecationWarning, match="ServeConfig"):
+        cfg = BatcherConfig(max_batch=32, max_delay_ms=3.0)
+    assert isinstance(cfg, ServeConfig)
+    assert (cfg.max_batch, cfg.max_delay_ms) == (32, 3.0)
+    assert cfg.max_queue is None and cfg.overload_policy == "reject"

@@ -1,6 +1,6 @@
 """Compiled-artifact bundles: round-trip exactness + tamper rejection.
 
-The bundle contract (ISSUE 3): ``save → load → build_engine`` must be
+The bundle contract (ISSUE 3): ``save → load → api.build`` must be
 bit-exact against both the freshly compiled engine and the DAIS
 interpreter — on random inputs and exhaustively for small widths — and a
 bundle whose bytes changed after save (tables, program, or the stored
@@ -20,11 +20,18 @@ from repro.core.lut_layers import LUTDense
 from repro.core.quant import QuantConfig
 from repro.kernels.lut_serve import (compile_program, input_code_bounds,
                                      verify_engine)
-from repro.serve.artifact import (ArtifactError, build_engine, load_artifact,
+from repro.serve.api import EngineSpec, build
+from repro.serve.artifact import (ArtifactError, load_artifact,
                                   save_artifact)
 
 KEY = jax.random.PRNGKey(23)
 IN_F, IN_I = 4, 2
+
+
+def _engine(art, **spec_kw):
+    """Bundle cold-start through the facade (gating is each test's own
+    business here, so the spec skips the verify gate)."""
+    return build(art, EngineSpec(verify="skip", **spec_kw)).engine
 
 
 def _lut_stack(dims=(6, 5, 3), hidden=4, key=KEY):
@@ -100,7 +107,7 @@ def test_bundle_round_trip_bit_exact_random(tmp_path):
     assert art.content_hash == digest == art.meta["content_hash"]
     assert art.attestation["random"] == 256
     assert art.stages is not None            # pure LUT chain fuses
-    loaded = build_engine(art)
+    loaded = _engine(art)
     assert loaded.fused
 
     lo, hi = input_code_bounds(prog)
@@ -120,7 +127,7 @@ def test_bundle_round_trip_bit_exact_exhaustive(tmp_path):
                               1, 1)
     path = str(tmp_path / "small.npz")
     save_artifact(path, prog)
-    loaded = build_engine(load_artifact(path))
+    loaded = _engine(load_artifact(path))
     stats = verify_engine(loaded, prog, n_random=64, exhaustive_limit=1024)
     assert stats["exhaustive"] == 512        # 8**3 input cross-product
 
@@ -138,7 +145,7 @@ def test_hybrid_bundle_round_trips_with_fused_stages(tmp_path):
     save_artifact(path, prog)
     art = load_artifact(path)
     assert art.stages is not None and art.stages.n_stages() == 2
-    loaded = build_engine(art)
+    loaded = _engine(art)
     assert loaded.path == "fused"
     verify_engine(loaded, art.prog, n_random=256)
 
@@ -151,7 +158,7 @@ def test_bundle_without_fused_payload_falls_back(tmp_path):
     save_artifact(path, prog, compose=False)
     art = load_artifact(path)
     assert art.stages is None
-    loaded = build_engine(art)       # recomposed from the program on load
+    loaded = _engine(art)       # recomposed from the program on load
     verify_engine(loaded, art.prog, n_random=256)
 
 
@@ -183,7 +190,7 @@ def test_conv_hybrid_bundle_round_trip_v2(tmp_path):
     art = load_artifact(path)
     assert art.meta["format_version"] == 3
     assert art.stages is not None and art.stages.n_stages() == 4
-    loaded = build_engine(art)
+    loaded = _engine(art)
     assert loaded.path == "fused"
 
     lo, hi = input_code_bounds(prog)
@@ -218,7 +225,7 @@ def test_v1_bundle_negotiated(tmp_path):
     art = load_artifact(path)
     assert art.meta["format_version"] == 1
     assert art.stages is None               # legacy fused layout dropped
-    loaded = build_engine(art)              # recomposes from the program
+    loaded = _engine(art)              # recomposes from the program
     verify_engine(loaded, art.prog, n_random=256)
 
 
@@ -349,12 +356,12 @@ def test_pre_rtl_bundles_still_load(tmp_path):
     art = load_artifact(path)
     assert art.meta["format_version"] == 3
     assert "rtl" not in art.attestation
-    verify_engine(build_engine(art), art.prog, n_random=128)
+    verify_engine(_engine(art), art.prog, n_random=128)
 
     save_artifact(path, prog)                # no attestation at all
     art = load_artifact(path)
     assert art.attestation is None
-    verify_engine(build_engine(art), art.prog, n_random=128)
+    verify_engine(_engine(art), art.prog, n_random=128)
 
 
 def test_unreadable_and_versioned_bundles_rejected(tmp_path):

@@ -15,8 +15,9 @@ import time
 import numpy as np
 import pytest
 
-from repro.serve.scheduler import (BatcherConfig, MicroBatcher, bucket_for,
-                                   bucket_ladder)
+from repro.serve.scheduler import (MicroBatcher, RejectedError, ServeConfig,
+                                   bucket_for, bucket_ladder,
+                                   drive_open_loop)
 
 
 class EchoEngine:
@@ -57,14 +58,14 @@ def test_bucket_ladder_and_rounding():
     with pytest.raises(ValueError, match="power of two"):
         bucket_ladder(12)
     with pytest.raises(ValueError, match="power of two"):
-        MicroBatcher(EchoEngine(), BatcherConfig(max_batch=10))
+        MicroBatcher(EchoEngine(), ServeConfig(max_batch=10))
 
 
 # --------------------------------------------------------------------------- #
 # deadline expiry with a partially-filled bucket
 # --------------------------------------------------------------------------- #
 def test_partial_bucket_flushes_at_deadline():
-    cfg = BatcherConfig(max_batch=64, max_delay_ms=150.0, warmup=False)
+    cfg = ServeConfig(max_batch=64, max_delay_ms=150.0, warmup=False)
     with MicroBatcher(EchoEngine(), cfg) as mb:
         codes = np.arange(12, dtype=np.int64).reshape(3, 4)
         futs = mb.submit_many(codes)
@@ -76,9 +77,9 @@ def test_partial_bucket_flushes_at_deadline():
     # 3 requests nowhere near max_batch=64: exactly one flush, padded to the
     # power-of-two bucket above it, released by the deadline (not a full
     # batch), after the oldest request waited ~max_delay_ms
-    assert s["n_batches"] == 1
-    assert s["mean_batch_fill"] == 3.0
-    assert s["mean_bucket"] == 4.0
+    assert s.n_batches == 1
+    assert s.mean_batch_fill == 3.0
+    assert s.mean_bucket == 4.0
     assert waited >= 0.10
 
 
@@ -87,7 +88,7 @@ def test_partial_bucket_flushes_at_deadline():
 # --------------------------------------------------------------------------- #
 def test_request_during_flush_joins_next_batch():
     eng = GateEngine()
-    cfg = BatcherConfig(max_batch=8, max_delay_ms=5.0, warmup=False)
+    cfg = ServeConfig(max_batch=8, max_delay_ms=5.0, warmup=False)
     with MicroBatcher(eng, cfg) as mb:
         first = mb.submit(np.asarray([1, 2, 3, 4], np.int64))
         time.sleep(0.05)            # flush 1 dispatched, blocked in run()
@@ -99,7 +100,7 @@ def test_request_during_flush_joins_next_batch():
         r2 = second.result(timeout=10)
     np.testing.assert_array_equal(r1, _expected([1, 2, 3, 4])[0])
     np.testing.assert_array_equal(r2, _expected([5, 6, 7, 8])[0])
-    assert mb.stats()["n_batches"] == 2      # second was not lost nor merged
+    assert mb.stats().n_batches == 2      # second was not lost nor merged
 
 
 # --------------------------------------------------------------------------- #
@@ -107,7 +108,7 @@ def test_request_during_flush_joins_next_batch():
 # --------------------------------------------------------------------------- #
 def test_oversized_backlog_splits_into_max_batch_chunks():
     eng = GateEngine()
-    cfg = BatcherConfig(max_batch=8, max_delay_ms=2.0, warmup=False)
+    cfg = ServeConfig(max_batch=8, max_delay_ms=2.0, warmup=False)
     rng = np.random.default_rng(0)
     codes = rng.integers(-50, 50, (21, 4))
     with MicroBatcher(eng, cfg) as mb:
@@ -122,7 +123,7 @@ def test_oversized_backlog_splits_into_max_batch_chunks():
     # the 20-request backlog flushed as 8 + 8 + 4, preserving arrival order
     assert eng.calls[0] == 1
     assert sorted(eng.calls[1:]) == [4, 8, 8]
-    assert mb.stats()["n_requests"] == 21
+    assert mb.stats().n_requests == 21
 
 
 # --------------------------------------------------------------------------- #
@@ -145,7 +146,7 @@ def test_scatter_correct_when_batches_complete_out_of_order():
             return out
 
     eng = FirstCallSlowEngine()
-    cfg = BatcherConfig(max_batch=4, max_delay_ms=1.0, n_workers=2,
+    cfg = ServeConfig(max_batch=4, max_delay_ms=1.0, n_workers=2,
                         warmup=False)
     with MicroBatcher(eng, cfg) as mb:
         a = mb.submit_many(np.arange(16, dtype=np.int64).reshape(4, 4))
@@ -168,7 +169,7 @@ def test_scatter_correct_when_batches_complete_out_of_order():
 # lifecycle + input validation
 # --------------------------------------------------------------------------- #
 def test_submit_validates_shape_and_lifecycle():
-    mb = MicroBatcher(EchoEngine(), BatcherConfig(warmup=False))
+    mb = MicroBatcher(EchoEngine(), ServeConfig(warmup=False))
     with pytest.raises(RuntimeError, match="not running"):
         mb.submit(np.zeros(4, np.int64))
     mb.start()
@@ -181,11 +182,11 @@ def test_submit_validates_shape_and_lifecycle():
     np.testing.assert_array_equal(f.result(timeout=10), _expected(np.ones((1, 4)))[0])
     with pytest.raises(RuntimeError, match="not running"):
         mb.submit(np.zeros(4, np.int64))
-    assert mb.stats()["n_requests"] == 1
+    assert mb.stats().n_requests == 1
 
 
 def test_restart_after_stop_serves_again():
-    mb = MicroBatcher(EchoEngine(), BatcherConfig(warmup=False))
+    mb = MicroBatcher(EchoEngine(), ServeConfig(warmup=False))
     mb.start()
     f1 = mb.submit(np.ones(4, np.int64))
     mb.stop()
@@ -195,13 +196,13 @@ def test_restart_after_stop_serves_again():
     mb.stop()
     np.testing.assert_array_equal(
         f2.result(timeout=10), _expected(np.full((1, 4), 2))[0])
-    assert mb.stats()["n_requests"] == 2
+    assert mb.stats().n_requests == 2
 
 
 def test_stop_never_strands_concurrent_submits():
     """A submit racing stop() must end in a result or an exception —
     never a forever-pending future (the check-then-put TOCTOU window)."""
-    mb = MicroBatcher(EchoEngine(), BatcherConfig(max_delay_ms=1.0,
+    mb = MicroBatcher(EchoEngine(), ServeConfig(max_delay_ms=1.0,
                                                   warmup=False))
     mb.start()
     futures = []
@@ -229,12 +230,84 @@ def test_stop_never_strands_concurrent_submits():
             pass                      # "stopped before request ran" is fine
 
 
+def test_bounded_queue_rejects_at_admission():
+    """max_queue + overload_policy='reject': the bound is enforced at
+    submit time with RejectedError, served requests stay bit-exact, and
+    the rejection count lands in stats — backpressure, not silent loss."""
+    eng = GateEngine()
+    cfg = ServeConfig(max_batch=4, max_delay_ms=1.0, max_queue=3,
+                      warmup=False)
+    with MicroBatcher(eng, cfg) as mb:
+        admitted, rejected = [], 0
+        for k in range(10):
+            try:
+                admitted.append((k, mb.submit(np.full(4, k, np.int64))))
+            except RejectedError:
+                rejected += 1
+        assert rejected > 0 and len(admitted) >= 3
+        eng.release.set()
+        for k, f in admitted:
+            np.testing.assert_array_equal(
+                f.result(timeout=10), _expected(np.full((1, 4), k))[0])
+    s = mb.stats()
+    assert s.n_rejected == rejected
+    assert s.n_requests == len(admitted)
+
+
+def test_shed_oldest_is_tier_only_on_microbatcher():
+    with pytest.raises(ValueError, match="tier policy"):
+        MicroBatcher(EchoEngine(),
+                     ServeConfig(max_queue=4, overload_policy="shed-oldest"))
+    with pytest.raises(ValueError, match="overload_policy"):
+        ServeConfig(overload_policy="drop-newest")
+
+
+def test_drive_open_loop_reports_achieved_rate():
+    """Absolute-deadline pacing: the driver reports the rate it actually
+    submitted at next to the requested one, instead of silently
+    undershooting when per-request sleep overshoot accumulates."""
+    cfg = ServeConfig(max_batch=8, max_delay_ms=1.0, warmup=False)
+    codes = np.arange(80, dtype=np.int64).reshape(20, 4)
+    with MicroBatcher(EchoEngine(), cfg) as mb:
+        out, info = drive_open_loop(mb, codes, rate=2000.0)
+    np.testing.assert_array_equal(out, _expected(codes))
+    assert info["requested_rate"] == 2000.0
+    assert info["n_requests"] == 20
+    # the schedule spans (n-1)/rate = 9.5 ms; achieved is measured over the
+    # actual submit span, so it must be in the right ballpark, not a
+    # silently-lower figure derived from assumed pacing
+    assert 0 < info["achieved_rate"] <= 4000.0
+    assert info["wall_s"] > 0 and info["max_late_ms"] >= 0.0
+    with MicroBatcher(EchoEngine(), cfg) as mb:
+        out, info = drive_open_loop(mb, codes, rate=0.0)       # burst
+    np.testing.assert_array_equal(out, _expected(codes))
+    with MicroBatcher(EchoEngine(), cfg) as mb:
+        out, info = drive_open_loop(mb, codes, rate=5000.0, poisson=True,
+                                    seed=7)
+    np.testing.assert_array_equal(out, _expected(codes))
+
+
+def test_stats_dataclass_and_deprecated_getitem():
+    cfg = ServeConfig(max_batch=8, max_delay_ms=1.0, warmup=False)
+    with MicroBatcher(EchoEngine(), cfg) as mb:
+        for f in mb.submit_many(np.arange(8, dtype=np.int64).reshape(2, 4)):
+            f.result(timeout=10)
+    s = mb.stats()
+    assert s.n_requests == 2
+    assert s.as_dict()["n_requests"] == 2
+    with pytest.warns(DeprecationWarning, match="as_dict"):
+        assert s["n_requests"] == 2
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(KeyError):
+            s["no_such_key"]
+
+
 def test_engine_failure_propagates_to_futures():
     class BoomEngine(EchoEngine):
         def run(self, x):
             raise RuntimeError("boom")
 
-    with MicroBatcher(BoomEngine(), BatcherConfig(warmup=False)) as mb:
+    with MicroBatcher(BoomEngine(), ServeConfig(warmup=False)) as mb:
         f = mb.submit(np.zeros(4, np.int64))
         with pytest.raises(RuntimeError, match="boom"):
             f.result(timeout=10)
@@ -259,11 +332,11 @@ def test_real_engine_bit_exact_through_scheduler():
     lo, hi = input_code_bounds(prog)
     codes = np.random.default_rng(5).integers(lo, hi + 1, (40, 6), np.int64)
 
-    cfg = BatcherConfig(max_batch=16, max_delay_ms=2.0, n_workers=2)
+    cfg = ServeConfig(max_batch=16, max_delay_ms=2.0, n_workers=2)
     with MicroBatcher(engine, cfg) as mb:
         futs = mb.submit_many(codes)
         res = np.stack([f.result(timeout=60) for f in futs])
     np.testing.assert_array_equal(res.astype(np.int64), prog.run(codes))
     s = mb.stats()
-    assert s["n_requests"] == 40
-    assert s["mean_bucket"] <= cfg.max_batch
+    assert s.n_requests == 40
+    assert s.mean_bucket <= cfg.max_batch
