@@ -16,16 +16,17 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="run a single benchmark "
                          "(table1|table2|table3|fig5|kernels|serve|pareto|"
-                         "roofline)")
+                         "train|roofline)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes, no BENCH_*.json overwrite — the CI "
                          "leg that keeps benchmark scripts from rotting "
-                         "(kernels, serve and pareto support it; others "
-                         "ignore it)")
+                         "(kernels, serve, pareto and train support it; "
+                         "others ignore it)")
     args = ap.parse_args()
 
     from benchmarks import (fig5_pid, kernel_bench, pareto_bench, serve_bench,
-                            table1_train_time, table2_jsc_hlf, table3_plf_tgc)
+                            table1_train_time, table2_jsc_hlf, table3_plf_tgc,
+                            train_bench)
 
     benches = {
         "table1": table1_train_time.run,
@@ -36,6 +37,7 @@ def main() -> None:
         "kernels": lambda: kernel_bench.run(smoke=args.smoke),
         "serve": lambda: serve_bench.run(smoke=args.smoke),
         "pareto": lambda: pareto_bench.run(smoke=args.smoke),
+        "train": lambda: train_bench.run(smoke=args.smoke),
     }
     print("name,us_per_call,derived")
     todo = [args.only] if args.only else list(benches) + ["roofline"]

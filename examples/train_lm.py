@@ -20,6 +20,7 @@ from repro.ckpt.store import CheckpointStore
 from repro.data.synthetic import lm_batch
 from repro.models.registry import build_model
 from repro.optim.adam import AdamConfig, cosine_restarts
+from repro.train.loop import chunked_train
 from repro.train.steps import TrainHParams, init_state, make_train_step
 
 # ~106M parameters: glu(3*640*2560)*10 + attn(4*640^2)*10 + embed 2*32k*640
@@ -50,7 +51,7 @@ def main():
         beta=BetaSchedule(1e-12, 1e-10, args.steps),  # gentle EBOPs pressure
         lr_schedule=cosine_restarts(6e-4, first_period=args.steps, warmup=20),
     )
-    step_fn, _ = make_train_step(model, mesh=None, hp=hp)
+    raw_step, _ = make_train_step(model, mesh=None, hp=hp, jit=False)
     params, opt = init_state(model, jax.random.PRNGKey(0))
     store = CheckpointStore(args.ckpt_dir, keep=2)
     start = 0
@@ -61,20 +62,28 @@ def main():
         start = man["step"]
         print(f"[train_lm] resumed from step {start}")
 
+    def get_batch(step: int) -> dict:
+        return dict(lm_batch(0, step, args.batch, args.seq, LM100M.vocab))
+
     losses = []
     t0 = time.time()
-    for step in range(start, args.steps):
-        batch = {k: jnp.asarray(v) for k, v in
-                 lm_batch(0, step, args.batch, args.seq, LM100M.vocab).items()}
-        params, opt, metrics = step_fn(params, opt, batch)
-        losses.append(float(metrics["ce"]))
-        if step % 20 == 0:
-            dt = (time.time() - t0) / (step - start + 1)
-            print(f"step {step:4d}  ce={losses[-1]:.4f}  "
-                  f"ebops={float(metrics['ebops']):.3g}  {dt:.2f}s/step",
-                  flush=True)
-        if (step + 1) % 100 == 0:
-            store.save(step + 1, params, opt)
+    # scan-chunked driver (train/loop.py): K steps per jitted call, batches
+    # prefetched on a background thread; chunks end on the checkpoint cadence
+    for res in chunked_train(raw_step, params, opt, get_batch,
+                             start, args.steps, chunk_steps=10,
+                             boundaries=range(100, args.steps, 100)):
+        params, opt = res.params, res.opt_state
+        losses.extend(float(v) for v in res.metrics["ce"])
+        for i in range(res.k):
+            step = res.step + i
+            if step % 20 == 0:
+                dt = (time.time() - t0) / (step - start + 1)
+                print(f"step {step:4d}  ce={float(res.metrics['ce'][i]):.4f}  "
+                      f"ebops={float(res.metrics['ebops'][i]):.3g}  "
+                      f"{dt:.2f}s/step", flush=True)
+        end = res.step + res.k
+        if end % 100 == 0:
+            store.save(end, params, opt)
     store.wait()
     first = sum(losses[:10]) / 10
     last = sum(losses[-10:]) / 10

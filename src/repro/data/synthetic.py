@@ -27,6 +27,14 @@ def _rng(seed: int, step: int, host: int = 0) -> np.random.Generator:
 def lm_batch(seed: int, step: int, batch: int, seq: int, vocab: int,
              host: int = 0, n_hosts: int = 1) -> Dict[str, np.ndarray]:
     """Host-local slice of the global batch: (batch/n_hosts, seq) tokens+labels."""
+    if n_hosts < 1:
+        raise ValueError(f"n_hosts must be >= 1, got {n_hosts}")
+    if batch % n_hosts:
+        # a silent `batch // n_hosts` would drop remainder rows — every host
+        # must agree on the global batch it is slicing
+        raise ValueError(f"global batch {batch} is not divisible by "
+                         f"n_hosts {n_hosts}; remainder rows would be "
+                         f"silently dropped")
     local = batch // n_hosts
     rng = _rng(seed, step, host)
     # Zipf unigram + deterministic "grammar": x_{t+1} depends on x_t mod K

@@ -68,6 +68,13 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None,
                     help="snapshot directory (default: a fresh temp dir)")
+    ap.add_argument("--chunk-steps", type=int, default=8,
+                    help="optimizer steps per jitted lax.scan chunk in the "
+                         "β-ramped training run (train/loop.py); chunks "
+                         "never cross snapshot boundaries")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="synthesize training batches synchronously instead "
+                         "of on the background prefetch thread")
     ap.add_argument("--out", default="BENCH_pareto.json",
                     help="frontier JSON output path (note: the default "
                          "overwrites the committed BENCH_pareto.json, whose "
@@ -133,6 +140,7 @@ def run(args) -> dict:
     from repro.data.synthetic import jsc_hlf
     from repro.kernels.lut_serve import compile_program, verify_engine
     from repro.optim.adam import AdamConfig, cosine_restarts
+    from repro.train.loop import chunked_train
     from repro.train.steps import TrainHParams, make_lut_train_step
 
     # None defaults + explicit validation — no falsy-`or` fallbacks (the
@@ -147,6 +155,8 @@ def run(args) -> dict:
     if steps <= 0 or batch <= 0:
         raise SystemExit(f"--steps {steps} / --batch {batch}: both must "
                          f"be positive")
+    if args.chunk_steps < 1:
+        raise SystemExit(f"--chunk-steps {args.chunk_steps}: must be >= 1")
     # same CLI contract as launch/train.py: a non-positive ramp endpoint or
     # start is a clean error here, not a traceback (or a swallowed warning)
     from repro.core.ebops import beta_ramp_error
@@ -186,7 +196,8 @@ def run(args) -> dict:
         beta=beta,
         lr_schedule=cosine_restarts(args.lr, first_period=max(steps // 3, 10),
                                     warmup=min(30, steps // 10 + 1)))
-    step_fn, init_fn = make_lut_train_step(layers, hp, donate=False)
+    # raw (un-jitted) step: the chunked driver scans K of them per launch
+    raw_step, init_fn = make_lut_train_step(layers, hp, jit=False)
     params, opt = init_fn(jax.random.PRNGKey(args.seed))
     ref_params = jax.tree.map(np.asarray, params)
 
@@ -211,23 +222,37 @@ def run(args) -> dict:
     snap_steps = _snapshot_steps(steps, n_snap)
     print(f"[pareto] one β-ramped run: {steps} steps, "
           f"β {args.beta_init:.1e} -> {args.beta_final:.1e}, "
-          f"snapshots at {snap_steps} -> {ckpt_dir}")
+          f"snapshots at {snap_steps} (chunks of {args.chunk_steps}, "
+          f"prefetch {'off' if args.no_prefetch else 'on'}) -> {ckpt_dir}")
+    # stateful host RNG drawn once per step: the prefetch thread calls
+    # get_batch strictly in step order, so the index stream is identical
+    # to the old synchronous per-step loop (data/pipeline.py contract)
     rng = np.random.default_rng(args.seed)
+    xtr_np, ytr_np = np.asarray(xtr), np.asarray(ytr)
+
+    def get_batch(_step: int) -> dict:
+        idx = rng.integers(0, len(xtr_np), batch)
+        return {"x": xtr_np[idx], "y": ytr_np[idx]}
+
+    snap_set = set(snap_steps)
     t0 = time.time()
-    for s in range(steps):
-        idx = rng.integers(0, len(xtr), batch)
-        params, opt, metrics = step_fn(
-            params, opt, {"x": jnp.asarray(xtr[idx]),
-                          "y": jnp.asarray(ytr[idx])})
-        if not np.isfinite(float(metrics["loss"])):
-            raise RuntimeError(f"non-finite loss at step {s}: "
-                               f"{float(metrics['loss'])} — β ramp broken?")
-        if (s + 1) in snap_steps:
-            store.save(s + 1, params, extra={"beta": float(beta(s)),
-                                             "step": s + 1}, blocking=True)
-            print(f"[pareto] step {s + 1:5d}  β={float(beta(s)):.2e}  "
-                  f"loss={float(metrics['loss']):.4f}  "
-                  f"ebops={float(metrics['ebops']):.3g}", flush=True)
+    for res in chunked_train(raw_step, params, opt, get_batch, 0, steps,
+                             chunk_steps=args.chunk_steps,
+                             boundaries=snap_steps,
+                             prefetch=not args.no_prefetch):
+        params, opt = res.params, res.opt_state
+        losses = res.metrics["loss"]
+        if not np.all(np.isfinite(losses)):
+            bad = res.step + int(np.argmin(np.isfinite(losses)))
+            raise RuntimeError(f"non-finite loss at step {bad}: "
+                               f"{losses[bad - res.step]} — β ramp broken?")
+        end = res.step + res.k
+        if end in snap_set:
+            store.save(end, params, extra={"beta": float(beta(end - 1)),
+                                           "step": end}, blocking=True)
+            print(f"[pareto] step {end:5d}  β={float(beta(end - 1)):.2e}  "
+                  f"loss={losses[-1]:.4f}  "
+                  f"ebops={res.metrics['ebops'][-1]:.3g}", flush=True)
     t_train = time.time() - t0
 
     # ------------------------------- compile + measure every snapshot

@@ -4,16 +4,32 @@ Single-host CPU runs exercise the *same* code path the production mesh
 would: the step function, shardings, checkpoint cadence, β schedule and
 data-pipeline cursor all behave identically; only the mesh differs.
 
+The hot loop is **scan-chunked** (``train/loop.py``): ``--chunk-steps`` K
+optimizer steps run inside ONE jitted ``lax.scan`` call with a donated
+``(params, opt_state)`` carry, metrics accumulate on device and cross to
+the host once per chunk, and batch synthesis + host→device transfer for
+the next chunk run on a background prefetch thread (``data/pipeline.py``;
+``--no-prefetch`` for the synchronous fallback).  Chunk boundaries are
+planned to land exactly on the checkpoint cadence and the simulated-crash
+step, so fault-tolerance semantics are identical to the per-step loop —
+and so is every bit of the result (BENCH_train.json asserts it).
+
 Fault-tolerance model (designed for 1000+ nodes, demonstrated here):
 
 * every K steps an **async atomic** checkpoint is written (params + Adam
   state + data cursor + RNG);  restart resumes bit-exactly from the last
   one — ``--simulate-crash N`` kills the process at step N to let tests
-  prove it (tests/test_fault_tolerance.py);
+  prove it (tests/test_ckpt.py, tests/test_train_loop.py — including
+  restarts from steps that are NOT chunk-aligned);
 * the data pipeline is a pure function of (seed, step, host) — a replaced
-  host needs no coordination to rejoin;
+  host needs no coordination to rejoin, and the prefetch thread changes
+  *when* batches are built, never *which* (the determinism contract in
+  ``data/pipeline.py``);
 * a step-time watchdog (EMA) flags stragglers; on a real fleet this signal
-  feeds the controller that evicts/replaces slow hosts — here it logs;
+  feeds the controller that evicts/replaces slow hosts — here it logs.
+  Chunk walltime is measured at real boundaries (the once-per-chunk
+  metrics transfer blocks on the device), and compile-inclusive chunks
+  (the first occurrence of each chunk length) never seed or trip the EMA;
 * elastic restarts: checkpoints are mesh-shape-agnostic (ckpt/store.py),
   so a job restarted on a different device count re-shards on restore.
 
@@ -26,7 +42,6 @@ from __future__ import annotations
 
 import argparse
 import os
-import time
 
 import jax
 import jax.numpy as jnp
@@ -54,6 +69,13 @@ def main(argv=None) -> None:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--chunk-steps", type=int, default=8,
+                    help="optimizer steps per jitted lax.scan chunk; chunks "
+                         "never cross --ckpt-every/--simulate-crash "
+                         "boundaries (1 = per-step dispatch)")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="build batch chunks synchronously on the critical "
+                         "path instead of on the background prefetch thread")
     ap.add_argument("--simulate-crash", type=int, default=0,
                     help="exit(17) after this step (fault-tolerance tests)")
     ap.add_argument("--straggler-factor", type=float, default=2.0)
@@ -61,13 +83,12 @@ def main(argv=None) -> None:
 
     from repro.ckpt.store import CheckpointStore
     from repro.configs.base import get_config, get_smoke
-    from repro.core.ebops import BetaSchedule
+    from repro.core.ebops import BetaSchedule, beta_ramp_error
     from repro.data.synthetic import lm_batch
     from repro.models.registry import build_model
     from repro.optim.adam import AdamConfig, cosine_restarts
+    from repro.train.loop import chunked_train
     from repro.train.steps import TrainHParams, init_state, make_train_step
-
-    from repro.core.ebops import beta_ramp_error
 
     if args.beta_final is None:
         beta_init = args.beta_init if args.beta_init is not None else 0.0
@@ -77,6 +98,8 @@ def main(argv=None) -> None:
     err = beta_ramp_error(beta_init, args.beta_final)
     if err:
         raise SystemExit(f"--beta-init/--beta-final: {err}")
+    if args.chunk_steps < 1:
+        raise SystemExit(f"--chunk-steps {args.chunk_steps}: must be >= 1")
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
@@ -86,7 +109,7 @@ def main(argv=None) -> None:
         lr_schedule=cosine_restarts(args.lr, first_period=max(args.steps // 2, 10),
                                     warmup=min(20, args.steps // 10 + 1)),
     )
-    step_fn, _ = make_train_step(model, mesh=None, hp=hp)
+    raw_step, _ = make_train_step(model, mesh=None, hp=hp, jit=False)
 
     key = jax.random.PRNGKey(args.seed)
     params, opt = init_state(model, key)
@@ -99,44 +122,70 @@ def main(argv=None) -> None:
         start_step = manifest["step"]
         print(f"[train] resumed from step {start_step}")
 
-    def get_batch(step: int):
-        b = lm_batch(args.seed, step, args.batch, args.seq, cfg.vocab)
-        out = {k: jnp.asarray(v) for k, v in b.items()}
-        for k, v in model.input_specs(args.seq, args.batch, "train").items():
-            if k not in out:  # modality stubs: deterministic pseudo-embeddings
-                rng = np.random.default_rng([args.seed, step, 7])
-                out[k] = jnp.asarray(rng.normal(0, 1, v.shape), v.dtype)
+    # pure function of (seed, step) — runs on the prefetch thread, so the
+    # modality-stub RNG and lm_batch synthesis leave the critical path
+    stub_specs = {k: (tuple(v.shape), np.dtype(v.dtype))
+                  for k, v in model.input_specs(args.seq, args.batch,
+                                                "train").items()
+                  if k not in ("tokens", "labels")}
+
+    def get_batch(step: int) -> dict:
+        out = dict(lm_batch(args.seed, step, args.batch, args.seq, cfg.vocab))
+        for k, (shape, dtype) in stub_specs.items():
+            # modality stubs: deterministic pseudo-embeddings
+            rng = np.random.default_rng([args.seed, step, 7])
+            out[k] = rng.normal(0, 1, shape).astype(dtype)
         return out
 
+    # chunks must END on every step with host-visible side effects
+    boundaries = set(range(args.ckpt_every, args.steps, args.ckpt_every))
+    if args.simulate_crash:
+        boundaries.add(max(args.simulate_crash, start_step + 1))
+
+    def save(step: int, blocking: bool = False) -> None:
+        store.save(step, params, opt,
+                   extra={"seed": args.seed, "arch": args.arch},
+                   blocking=blocking)
+
     ema = None
-    for step in range(start_step, args.steps):
-        t0 = time.time()
-        params, opt, metrics = step_fn(params, opt, get_batch(step))
-        if step % args.log_every == 0 or step == args.steps - 1:
-            m = {k: float(v) for k, v in metrics.items()}
-            print(f"[train] step {step:5d} loss={m['loss']:.4f} ce={m['ce']:.4f} "
-                  f"ebops={m['ebops']:.3g} gnorm={m['grad_norm']:.3f} "
-                  f"lr={m['lr']:.2e}", flush=True)
-        dt = time.time() - t0
-        ema = dt if ema is None else 0.9 * ema + 0.1 * dt
-        if dt > args.straggler_factor * ema and step > start_step + 5:
-            print(f"[watchdog] step {step} took {dt:.2f}s "
-                  f"(EMA {ema:.2f}s) — straggler signal", flush=True)
-        if store and (step + 1) % args.ckpt_every == 0:
-            store.save(step + 1, params, opt,
-                       extra={"seed": args.seed, "arch": args.arch})
-        if args.simulate_crash and step + 1 >= args.simulate_crash:
+    metrics = None
+    for res in chunked_train(raw_step, params, opt, get_batch,
+                             start_step, args.steps,
+                             chunk_steps=args.chunk_steps,
+                             boundaries=boundaries,
+                             prefetch=not args.no_prefetch):
+        params, opt, metrics = res.params, res.opt_state, res.metrics
+        for i in range(res.k):
+            step = res.step + i
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"[train] step {step:5d} "
+                      f"loss={metrics['loss'][i]:.4f} "
+                      f"ce={metrics['ce'][i]:.4f} "
+                      f"ebops={metrics['ebops'][i]:.3g} "
+                      f"gnorm={metrics['grad_norm'][i]:.3f} "
+                      f"lr={metrics['lr'][i]:.2e}", flush=True)
+        # watchdog: dt_s is measured dispatch→host-visible (the metrics
+        # transfer blocks on the whole chunk), and compile-inclusive chunks
+        # are excluded so the first step never seeds the straggler EMA
+        if not res.compiled:
+            dt_step = res.dt_s / res.k
+            if ema is not None and dt_step > args.straggler_factor * ema:
+                print(f"[watchdog] steps {res.step}..{res.step + res.k - 1} "
+                      f"took {dt_step:.3f}s/step (EMA {ema:.3f}s) — "
+                      f"straggler signal", flush=True)
+            ema = dt_step if ema is None else 0.9 * ema + 0.1 * dt_step
+        end = res.step + res.k
+        if store and end % args.ckpt_every == 0:
+            save(end)
+        if args.simulate_crash and end >= args.simulate_crash:
             if store:
-                store.save(step + 1, params, opt,
-                           extra={"seed": args.seed, "arch": args.arch},
-                           blocking=True)
-            print(f"[train] simulating crash at step {step + 1}", flush=True)
+                save(end, blocking=True)
+            print(f"[train] simulating crash at step {end}", flush=True)
             os._exit(17)
 
     if store:
-        store.save(args.steps, params, opt,
-                   extra={"seed": args.seed, "arch": args.arch}, blocking=True)
-    final = float(metrics["loss"])
+        save(args.steps, blocking=True)
+    final = float(metrics["loss"][-1])
     print(f"[train] done: {args.steps} steps, final loss {final:.4f}")
 
 

@@ -66,8 +66,14 @@ def cache_shardings(model, batch: int, t: int, mesh: Mesh):
 # -------------------------------------------------------------- train step
 def make_train_step(model, mesh: Optional[Mesh] = None,
                     hp: TrainHParams = TrainHParams(),
-                    donate: bool = True, batch_shards=None):
-    """Returns (step_fn, shardings dict).  step_fn(params, opt, batch)."""
+                    donate: bool = True, batch_shards=None, jit: bool = True):
+    """Returns (step_fn, shardings dict).  step_fn(params, opt, batch).
+
+    With ``jit=False`` the *raw* (un-jitted) step function is returned —
+    the building block the scan-chunked driver (``train/loop.py``) wraps
+    into one jitted K-step ``lax.scan``; raw steps are single-device only
+    (a mesh implies pjit, which implies jit).
+    """
 
     def step_fn(params, opt_state, batch):
         step = opt_state["step"]
@@ -85,6 +91,11 @@ def make_train_step(model, mesh: Optional[Mesh] = None,
         metrics = {**metrics, **opt_metrics, "loss": loss}
         return params, opt_state, metrics
 
+    if not jit:
+        if mesh is not None:
+            raise ValueError("jit=False returns the raw step for the chunked "
+                             "driver; a mesh requires the jitted/pjit path")
+        return step_fn, None
     if mesh is None:
         return jax.jit(step_fn, donate_argnums=(0, 1) if donate else ()), None
 
@@ -110,7 +121,7 @@ def hparams_from_cfg(cfg, **overrides) -> TrainHParams:
 
 # ------------------------------------------------------ LUT-stack train step
 def make_lut_train_step(layers, hp: TrainHParams = TrainHParams(),
-                        donate: bool = True):
+                        donate: bool = True, jit: bool = True):
     """CE + β·EBOPs train step over a stack of LUT layers (the paper-task
     counterpart of :func:`make_train_step`).
 
@@ -118,6 +129,9 @@ def make_lut_train_step(layers, hp: TrainHParams = TrainHParams(),
     Pallas forward + recompute backward (kernels/lut_dense*.py), so one
     training step runs entirely kernel-side.  Returns ``(step_fn, init_fn)``;
     ``step_fn(params, opt_state, batch)`` with ``batch = {"x", "y"}``.
+    ``jit=False`` returns the raw step for the scan-chunked driver
+    (``train/loop.py``) — β/lr schedules thread through ``opt_state["step"]``,
+    so the same function is scanned without extra plumbing.
     """
     from repro.nn.base import merge_aux, scoped_updates
 
@@ -154,6 +168,8 @@ def make_lut_train_step(layers, hp: TrainHParams = TrainHParams(),
                   for idx, (l, k) in enumerate(zip(layers, ks))}
         return params, adam_init(params)
 
+    if not jit:
+        return step_fn, init_fn
     return jax.jit(step_fn, donate_argnums=(0, 1) if donate else ()), init_fn
 
 

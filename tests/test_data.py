@@ -1,6 +1,7 @@
 """Data-pipeline determinism + statistics tests."""
 
 import numpy as np
+import pytest
 
 from repro.data.synthetic import (cepc_waveform, jsc_hlf, jsc_plf, lm_batch,
                                   tgc_muon)
@@ -20,6 +21,14 @@ def test_lm_batch_deterministic_and_host_sharded():
     assert not np.array_equal(h0["tokens"], h1["tokens"])
     # labels are next-token
     np.testing.assert_array_equal(a["labels"][:, :-1], a["tokens"][:, 1:])
+
+
+def test_lm_batch_rejects_indivisible_host_count():
+    """Regression: batch // n_hosts used to silently drop remainder rows."""
+    with pytest.raises(ValueError, match="n_hosts"):
+        lm_batch(seed=1, step=0, batch=7, seq=8, vocab=100, n_hosts=2)
+    with pytest.raises(ValueError, match="n_hosts"):
+        lm_batch(seed=1, step=0, batch=8, seq=8, vocab=100, n_hosts=0)
 
 
 def test_jsc_hlf_splits_disjoint_and_learnable():

@@ -106,6 +106,25 @@ def test_train_launcher_smoke():
     assert "done: 4 steps" in r.stdout
 
 
+@pytest.mark.slow
+def test_train_launcher_chunked_flags_smoke():
+    """--chunk-steps/--no-prefetch: explicit chunking flags drive the same
+    loop; a chunk size that doesn't divide --steps still runs every step."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "rwkv6_16b",
+         "--smoke", "--steps", "5", "--batch", "2", "--seq", "32",
+         "--log-every", "2", "--chunk-steps", "3", "--no-prefetch"],
+        env=ENV, cwd=REPO, capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "done: 5 steps" in r.stdout
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "rwkv6_16b",
+         "--smoke", "--steps", "1", "--chunk-steps", "0"],
+        env=ENV, cwd=REPO, capture_output=True, text=True, timeout=600)
+    assert r.returncode != 0
+    assert "chunk-steps" in r.stderr
+
+
 def test_train_launcher_rejects_zero_beta_final():
     """Regression: `--beta-final 0.0` used to silently mean "constant β"
     (falsy-zero flag handling); it must now be an explicit error."""
