@@ -22,6 +22,12 @@ Writes ``BENCH_serve.json`` with, per LUT-Dense model:
   per layer, gathered per spatial site) vs the generic levelized group
   runner vs the interpreter.  Fusing hybrid programs instead of falling
   back to the group runner is the perf win this row measures.
+* **lane-narrowing rows** — the static range analysis
+  (``core/analysis.py``, see ``docs/ir.md``) feeding the Pallas packer:
+  ``packed_table_bytes`` with the proven-range live masks on (default) vs
+  off (the old ``required_width`` packing), the live-entry fraction, the
+  required/proven/engine width bounds, and the narrow-relative speedup —
+  on the big dense stack and the pid-hybrid program, both bit-exact-gated.
 * **rtl-gate row** — walltime of the hardware-level attestation
   (``core/rtl.verify_rtl``: emit Verilog, parse, simulate with IEEE
   semantics, assert RTL == interpreter == fused engine) on the quickstart
@@ -267,6 +273,50 @@ def _bench_engines(prog, codes, shape: str, *, rounds: int):
     return fields, engines
 
 
+def _bench_narrowing(prog, codes, shape: str, *, rounds: int) -> dict:
+    """Analysis-driven lane narrowing: packed payload with the interval
+    analysis on (default) vs off (the old required_width packing).
+
+    Both engines pass the bit-exactness gate before timing — narrowing
+    only changes entries the proof says no in-contract input can reach.
+    Records ``packed_table_bytes`` before/after, the live-entry fraction,
+    the three width bounds, and the narrow-relative speedup (the win is
+    memory footprint; time moves only if a lane dtype actually dropped).
+    """
+    from repro.core.analysis import analyze_ranges
+    from repro.kernels.lut_serve import compile_program, verify_engine
+    from repro.launch.lint import live_table_stats
+
+    wide = compile_program(prog, engine="pallas", narrow=False)
+    nar = compile_program(prog, engine="pallas", narrow=True)
+    assert wide.path == nar.path == "pallas", (wide.path, nar.path)
+    for eng in (wide, nar):
+        verify_engine(eng, prog, n_random=256)
+    us = _bench_pair(prog, [("wide", wide), ("narrow", nar)], codes,
+                     rounds=rounds)
+    ranges = analyze_ranges(prog)
+    live = live_table_stats(prog, ranges) or {}
+    row = {
+        "model": "lane-narrowing", "shape": shape,
+        "packed_table_bytes_wide": wide.packed_table_bytes,
+        "packed_table_bytes_narrow": nar.packed_table_bytes,
+        "bytes_saved_pct": 100.0 * (1.0 - nar.packed_table_bytes
+                                    / wide.packed_table_bytes),
+        "required_width": prog.required_width(),
+        "proven_width": ranges.proven_width(),
+        "engine_width": ranges.engine_width(),
+        "engine_wide_us": us["wide"],
+        "engine_narrow_us": us["narrow"],
+        "speedup_narrow_vs_wide": us["wide"] / us["narrow"],
+        **live,
+    }
+    emit(f"serve/lane_narrowing/{shape}", us["narrow"],
+         f"packed_bytes={wide.packed_table_bytes}->"
+         f"{nar.packed_table_bytes} ({row['bytes_saved_pct']:.1f}% saved);"
+         f"width req={row['required_width']} proven={row['proven_width']}")
+    return row
+
+
 def _bench_scheduler(prog, engine, shape: str, *, n_requests: int,
                      rates) -> list:
     """Latency under load: open-loop driver through the micro-batcher.
@@ -482,6 +532,19 @@ def run(smoke: bool = False) -> None:
                     "n_instrs": prog.n_instrs(),
                     "n_shared_tables": len(prog.tables), **fields})
 
+    # analysis-driven lane narrowing: the proven ranges shrink the Pallas
+    # packed payload on the big dense stack and the hybrid program
+    nr_dims, nr_hidden = models[-1]
+    nr_codes = quantize_to_int(rng.normal(0.0, 2.0, (batch, nr_dims[0])),
+                               IN_F, IN_I, True, "SAT")
+    results.append({"batch": batch,
+                    **_bench_narrowing(_build(nr_dims, nr_hidden), nr_codes,
+                                       "x".join(map(str, nr_dims)),
+                                       rounds=rounds)})
+    results.append({"batch": batch,
+                    **_bench_narrowing(prog, codes, f"hybrid_ctx{ctx}",
+                                       rounds=rounds)})
+
     # dead-cell elimination row: a pruned high-β-shaped model, fused engine
     # before vs after core/opt.py, both bit-exact vs the original program
     dce_dims = MODELS[0][0]
@@ -520,6 +583,14 @@ def run(smoke: bool = False) -> None:
                    for r in results for s in r.get("scheduler", []))
         assert any(r.get("model") == "rtl-gate"
                    and r["verdict"] == "bit-exact" for r in results)
+        nar_rows = [r for r in results if r.get("model") == "lane-narrowing"]
+        assert nar_rows and all(
+            r["packed_table_bytes_narrow"] <= r["packed_table_bytes_wide"]
+            for r in nar_rows)
+        # the hybrid's saturation rows are provably dead, so at least one
+        # row must show a real shrink even at smoke scale
+        assert any(r["packed_table_bytes_narrow"] <
+                   r["packed_table_bytes_wide"] for r in nar_rows)
         tier_row = next(r for r in results if r.get("model") == "tier-scaling")
         assert {r["n_replicas"] for r in tier_row["rows"]} == {1, 2, 4}
         adm = next(r for r in results if r.get("model") == "tier-admission")

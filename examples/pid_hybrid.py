@@ -137,12 +137,19 @@ def main(argv=None):
           f"{prog.n_instrs()} instrs, {len(prog.tables)} shared table sets "
           f"({n_cells} live cells driving {n_llut} LLUT sites)")
 
+    # static analysis: verifier + per-register proven value ranges; the
+    # proven widths drive engine dtype selection and Pallas lane narrowing
+    from repro.launch.lint import lint_program
+    lint_program(prog, name=f"pid-hybrid ctx={ctx}")
+
     # trained bit-widths can push transients past int32; the engine then
-    # needs the x64 path
-    if prog.required_width() > 30 and not jax.config.jax_enable_x64:
+    # needs the x64 path — sized from the proven engine_width bound, which
+    # is often narrower than the conservative required_width
+    from repro.kernels.lut_serve import engine_width
+    ew = engine_width(prog)
+    if ew > 30 and not jax.config.jax_enable_x64:
         jax.config.update("jax_enable_x64", True)
-        print("(enabled x64: program needs "
-              f"{prog.required_width()}-bit transients)")
+        print(f"(enabled x64: program needs {ew}-bit transients)")
 
     # ----------------------------- accelerator engine + bit-exactness gate
     # one EngineSpec = preferred lowering + require-flag + verify policy;

@@ -102,6 +102,11 @@ def main(argv=None):
     prog = compile_sequential([l1, l2], [params["l1"], params["l2"]], IN_F, IN_I)
     print(f"DAIS lowering: {time.time()-t0:.2f}s, {prog.n_instrs()} instrs "
           f"{prog.count_ops()}")
+
+    # static analysis: verifier + per-register proven value ranges; the
+    # proven widths drive engine dtype selection and Pallas lane narrowing
+    from repro.launch.lint import lint_program
+    lint_program(prog, name="quickstart model")
     dais_out = prog.run_float(xte[:2048])
     jax_out = np.asarray(logits[:2048], np.float64)
     exact = np.abs(dais_out - jax_out).max()

@@ -161,6 +161,11 @@ def lower(graph: ModelGraph, params_list: Sequence, *,
     outputs = [int(r) for r in np.asarray(regs).reshape(-1)]
     prog.outputs = outputs
     prog.output_f = [prog.instrs[r].reg.f for r in outputs]
+    # the IR boundary gate: a lowering that emitted a structurally broken
+    # program fails here with located diagnostics, not deep inside an
+    # engine (core/analysis.py; DCE below re-verifies its own output)
+    from repro.core.analysis import verify_program
+    verify_program(prog)
     if optimize:
         from repro.core.opt import eliminate_dead_cells
         prog, _report = eliminate_dead_cells(prog)

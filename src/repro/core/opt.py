@@ -41,10 +41,11 @@ against the *unoptimized* interpreter.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.analysis import RewriteObligations, validate_rewrite
 from repro.core.dais import (OP_DEPS, DaisProgram, Instr, Reg, Segment,
                              _requant)
 from repro.core.tables import LayerTables
@@ -65,6 +66,9 @@ class DceReport:
     gather_width_before: Dict[int, int]  # per lut layer: table c_in
     gather_width_after: Dict[int, int]
     dropped_rows: Dict[int, int]        # per lut layer: input rows removed
+    # every claim the rewrite made, in checkable form; discharged by
+    # core.analysis.validate_rewrite (self-certification is on by default)
+    obligations: Optional[RewriteObligations] = None
 
     def total_gather_width(self) -> Tuple[int, int]:
         return (sum(self.gather_width_before.values()),
@@ -135,7 +139,8 @@ def _const_values(prog: DaisProgram) -> List[Optional[int]]:
 # the pass
 # --------------------------------------------------------------------------- #
 def eliminate_dead_cells(
-        prog: DaisProgram) -> Tuple[DaisProgram, DceReport]:
+        prog: DaisProgram, *,
+        validate: bool = True) -> Tuple[DaisProgram, DceReport]:
     """Return ``(optimized, report)`` — a bit-exact smaller program.
 
     The optimized program computes identical output codes for every input
@@ -143,6 +148,12 @@ def eliminate_dead_cells(
     instructions are never removed so batched callers keep their column
     indexing), with constant cells folded, dead chains dropped, registers
     renumbered, and shared tables sliced down to their contributing rows.
+
+    With ``validate`` (the default) the rewrite is *self-certifying*:
+    every fold/alias/slice decision is recorded as a checkable obligation
+    on ``report.obligations`` and statically discharged by
+    ``core.analysis.validate_rewrite`` before the optimized program is
+    returned — an unjustified rewrite raises instead of shipping.
     """
     n = len(prog.instrs)
     const = _const_values(prog)
@@ -193,7 +204,7 @@ def eliminate_dead_cells(
     # --- liveness from the outputs (+ every IN: input layout is ABI) ----- #
     live = [False] * n
 
-    def mark(roots) -> None:
+    def mark(roots: Sequence[int]) -> None:
         stack = [resolve(r) for r in roots]
         while stack:
             r = stack.pop()
@@ -313,6 +324,13 @@ def eliminate_dead_cells(
             out_regs=tuple(seg_reg(r) for r in seg.out_regs),
             site=seg.site, n_sites=seg.n_sites))
 
+    obligations = RewriteObligations(
+        const={i: int(c) for i, c in enumerate(const) if c is not None},
+        alias={i: int(t) for i, t in enumerate(alias) if t is not None},
+        shift_rw=dict(shift_rw),
+        new_of=dict(new_of),
+        keep_rows=dict(keep_rows),
+        row_map={lid: dict(m) for lid, m in row_map.items()})
     report = DceReport(
         n_instrs_before=n, n_instrs_after=out.n_instrs(),
         n_llut_before=sum(1 for i in prog.instrs if i.op == "LLUT"),
@@ -321,7 +339,10 @@ def eliminate_dead_cells(
         gather_width_before={lid: t.c_in for lid, t in prog.tables.items()},
         gather_width_after={lid: t.c_in for lid, t in out.tables.items()},
         dropped_rows={lid: int(np.sum(~keep_rows[lid]))
-                      for lid in prog.tables})
+                      for lid in prog.tables},
+        obligations=obligations)
+    if validate:
+        validate_rewrite(prog, out, obligations)
     return out, report
 
 

@@ -54,9 +54,13 @@ integer ops, same rounding), and :func:`verify_engine` is the gate that
 proves it on random plus exhaustive-small inputs — ``launch/serve.py
 --engine tables`` refuses to serve unless the gate passes.
 
-Values are int32 when every register *and transient* fits
-(``DaisProgram.required_width() <= 30``), else int64 — which requires
-``JAX_ENABLE_X64=1`` since the engine must keep more than 32 bits of state.
+Values are int32 when the static range analysis (``core/analysis.py``)
+proves every value the engine materializes fits 30 bits — the proven
+:func:`engine_width` bound, falling back to the conservative
+``DaisProgram.required_width()`` when analysis is unavailable — else int64,
+which requires ``JAX_ENABLE_X64=1`` since the engine must keep more than
+32 bits of state.  The same analysis supplies per-stage ``live`` entry
+masks that the Pallas packer uses to narrow table lanes (``docs/ir.md``).
 """
 
 from __future__ import annotations
@@ -118,6 +122,27 @@ def _check_dtype(dtype, max_width: int) -> None:
             f"requested engine dtype resolves to {np.dtype(actual).name} "
             f"(covers <= {_INT32_MAX_WIDTH} bits) — values would "
             f"overflow-wrap; {hint}")
+
+
+def engine_width(prog: DaisProgram) -> int:
+    """Width bound the engine dtype is sized from.
+
+    The proven :meth:`~repro.core.analysis.ValueRanges.engine_width` of the
+    interval analysis when it succeeds — per-register ranges plus the
+    structural constants (clamp grids, shift factors, full table rows) a
+    backend materializes — else the conservative
+    ``DaisProgram.required_width()``.  Never larger than required_width, so
+    replacing the old ``required_width() <= 30`` cliff with this bound only
+    ever *admits* programs to int32 (``_check_dtype`` still rejects on
+    proof when the bound genuinely exceeds the dtype).
+    """
+    try:
+        from repro.core.analysis import analyze_ranges
+        return analyze_ranges(prog).engine_width()
+    except Exception as e:            # malformed / unanalyzable: stay sound
+        logger.debug("range analysis unavailable (%s); "
+                     "falling back to required_width", e)
+        return prog.required_width()
 
 
 class EnginePathWarning(UserWarning):
@@ -260,7 +285,8 @@ def compile_program(prog: DaisProgram, *, mesh=None,
                     packed: Optional[object] = None,
                     jit: bool = True,
                     block_batch: Optional[int] = None,
-                    interpret: Optional[bool] = None) -> ServeEngine:
+                    interpret: Optional[bool] = None,
+                    narrow: bool = True) -> ServeEngine:
     """Lower a DAIS program to a jitted accelerator engine.
 
     When the program is a closed chain of "lut" segments (the
@@ -296,18 +322,35 @@ def compile_program(prog: DaisProgram, *, mesh=None,
     silent — every downgrade raises :class:`EnginePathWarning` at compile
     time, is logged, and is kept on ``ServeEngine.fuse_reason`` so tests
     and benchmarks can assert which path ran and why.
+
+    ``narrow``: run the static interval analysis (``core/analysis.py``) to
+    (a) size the engine dtype from the proven :func:`engine_width` bound
+    instead of the conservative ``required_width()``, and (b) hand the
+    Pallas packer per-stage ``live`` entry masks so it can shrink table
+    lanes to the proven value ranges.  ``narrow=False`` restores the
+    legacy required-width behavior (benchmarks use it as the baseline).
     """
     want = engine if engine is not None else \
         ("fused" if fuse_layers else "groups")
     if want not in ("pallas", "fused", "groups"):
         raise ValueError(
             f"unknown engine {want!r} (choices: pallas, fused, groups)")
+    ranges = None
+    if narrow and stages is None:
+        try:
+            from repro.core.analysis import analyze_ranges
+            ranges = analyze_ranges(prog)
+        except Exception as e:        # unanalyzable: required_width is sound
+            logger.debug("range analysis unavailable (%s); "
+                         "falling back to required_width", e)
+    # engine_width/required_width cover transient pre-clamp REQUANT /
+    # pre-add align values, which can exceed every declared register width
+    width_bound = (ranges.engine_width() if ranges is not None
+                   else prog.required_width())
     if dtype is None:
-        # required_width covers transient pre-clamp REQUANT / pre-add align
-        # values, which can exceed every declared register width
-        dtype = _pick_dtype(prog.required_width())
+        dtype = _pick_dtype(width_bound)
     else:
-        _check_dtype(dtype, prog.required_width())
+        _check_dtype(dtype, width_bound)
 
     in_instrs = [ins for ins in prog.instrs if ins.op == "IN"]
     input_widths = np.asarray([ins.reg.width for ins in in_instrs], np.int64)
@@ -317,7 +360,7 @@ def compile_program(prog: DaisProgram, *, mesh=None,
     downgrades: List[str] = []
     reason = ""
     if want in ("pallas", "fused") and stages is None:
-        stages, reason = compose_fused_stages(prog, dtype)
+        stages, reason = compose_fused_stages(prog, dtype, ranges=ranges)
     if want == "pallas":
         if stages is None:
             downgrades.append(f"pallas (and fused) unavailable: {reason}")
@@ -541,6 +584,11 @@ class FusedStage:
     # kind "sum"
     shifts: Optional[np.ndarray] = None     # (S, J) alignment shifts
     signs: Optional[np.ndarray] = None      # (S, J) in {-1, 0, +1}
+    # kind "lut", optional: (J, co, E) bool — entries the range analysis
+    # proves reachable.  Compile-time metadata only (the Pallas packer
+    # zeroes dead entries before lane selection); NOT part of the wire
+    # format, so bundles reload without it and simply skip narrowing.
+    live: Optional[np.ndarray] = None
 
     @property
     def n_sites(self) -> int:
@@ -919,7 +967,44 @@ def _compose_enum_stage(prog: DaisProgram, segs, gather, fmts) -> FusedStage:
                       out_shift=np.zeros((j_n, co), np.int64))
 
 
-def compose_fused_stages(prog: DaisProgram, dtype: Optional[object] = None
+def _shift_round_scalar(v: int, shift: int) -> int:
+    """Python-int twin of :func:`_shift_round` (monotone in ``v``)."""
+    if shift >= 0:
+        return v << shift
+    from repro.core.analysis import _round_half_even
+    return _round_half_even(v, -shift)
+
+
+def _stage_live(ranges, segs, stage: FusedStage) -> np.ndarray:
+    """(J, co, E) bool mask of table entries any site can actually index.
+
+    Per cell ``(j, i)`` the runtime index is
+    ``shift_round(v) & mask[j, i]`` for ``v`` the site's incoming register
+    value; with the proven ``[lo, hi]`` of that register and the shift
+    being monotone, the reachable indices form a wrap-aware window
+    (:func:`~repro.core.analysis.index_window`).  Entries outside the
+    union of all sites' windows — and entries past each cell's
+    ``mask + 1`` grid size — are dead: typically the saturation rows that
+    hold the largest-magnitude codes, which is exactly what keeps the
+    packed lane dtype wide.
+    """
+    from repro.core.analysis import index_window
+    j_n, co, e_max = stage.table.shape
+    live = np.zeros((j_n, co, e_max), bool)
+    for seg in segs:
+        for j, r in enumerate(seg.in_regs):
+            lo, hi = ranges.range(r)
+            for i in range(co):
+                sh = int(stage.in_shift[j, i])
+                size = int(stage.mask[j, i]) + 1
+                win = index_window(_shift_round_scalar(lo, sh),
+                                   _shift_round_scalar(hi, sh), size)
+                live[j, i, :size] |= win
+    return live
+
+
+def compose_fused_stages(prog: DaisProgram, dtype: Optional[object] = None,
+                         *, ranges: Optional[object] = None,
                          ) -> Tuple[Optional[FusedStages], str]:
     """Compose a chain of per-site segments into per-layer fused stages.
 
@@ -927,10 +1012,15 @@ def compose_fused_stages(prog: DaisProgram, dtype: Optional[object] = None
     program does not fit the fused pattern — callers then fall back to the
     generic :class:`OpGroup` lowering (same semantics, more ops) and should
     surface ``reason``.
+
+    ``ranges``: optional :class:`~repro.core.analysis.ValueRanges` for
+    ``prog`` — each "lut" stage then carries a ``live`` entry mask
+    (:func:`_stage_live`) that the Pallas packer uses to narrow lanes.
     """
     if dtype is None:
         try:
-            dtype = _pick_dtype(prog.required_width())
+            dtype = _pick_dtype(ranges.engine_width() if ranges is not None
+                                else engine_width(prog))
         except ValueError as e:
             return None, str(e)
     if not prog.segments:
@@ -959,6 +1049,8 @@ def compose_fused_stages(prog: DaisProgram, dtype: Optional[object] = None
             else:
                 stage = _compose_enum_stage(prog, segs, gather, fmts)
             stage.n_cols = n_cols
+            if ranges is not None and stage.table is not None:
+                stage.live = _stage_live(ranges, segs, stage)
             stages.append(stage)
             colmap = {r: s * stage.c_out + i
                       for s, seg in enumerate(segs)

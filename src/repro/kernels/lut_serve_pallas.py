@@ -25,6 +25,14 @@ The compile-time lowering from ``FusedStages``, done once per engine:
   the lane and **sign-extends** (``astype`` to the compute dtype).  Tables
   the fused engine keeps at 4–8 B/entry typically pack to 1 B/entry, which
   is what makes whole-chain table residency realistic.
+* **range-driven lane narrowing** — when the stage carries a ``live``
+  entry mask (from the interval analysis of ``core/analysis.py``, threaded
+  through ``compose_fused_stages``), entries proven unreachable under the
+  input contract are zeroed *before* lane selection and a fully-dead
+  trailing index span is sliced off.  The dead entries are typically the
+  saturation rows holding the largest-magnitude codes — exactly the values
+  that force a wider lane — so proving them dead is what turns an int16
+  table into an int8 one (``docs/ir.md``).
 * **in-shift elision** — stages whose per-cell input grids already match
   (every ``in_shift == 0`` — all enumerated HGQ stages, and LUT stages
   whose incoming grid equals the table grid) statically skip the
@@ -177,8 +185,10 @@ def pack_stages(stages: FusedStages, dtype: Optional[object] = None, *,
 
     ``dtype`` is the engine compute dtype (int32/int64); ``None`` packs
     with int64 arithmetic, which is wrap-identical for any program the
-    int32 engine legally runs (``required_width() <= 30`` bounds every
-    transient).  Raises :exc:`PackError` when the chain cannot be packed
+    int32 engine legally runs (the proven ``engine_width`` — or its
+    ``required_width()`` fallback — bounds every transient).  Stages
+    carrying a ``live`` mask get range-driven lane narrowing (see module
+    docstring).  Raises :exc:`PackError` when the chain cannot be packed
     faithfully or busts the residency budget.
     """
     ed = np.int32 if (dtype is not None
@@ -198,6 +208,20 @@ def pack_stages(stages: FusedStages, dtype: Optional[object] = None, *,
             # arithmetic so any wrap matches the fused runtime bit-for-bit
             shifted = np.asarray(st.table, np.int64).astype(ed) \
                 << out_shift.astype(ed)[:, :, None]
+            live = getattr(st, "live", None)
+            if live is not None:
+                live = np.asarray(live, bool)
+                if live.shape != shifted.shape:
+                    raise PackError(
+                        f"live mask shape {live.shape} != table "
+                        f"shape {shifted.shape}")
+                # proven-dead entries can hold anything without changing
+                # any in-contract result; zero is the narrowest choice
+                shifted = np.where(live, shifted, 0)
+                reach = np.flatnonzero(live.any(axis=(0, 1)))
+                e_live = int(reach[-1]) + 1 if reach.size else 1
+                if e_live < shifted.shape[2]:
+                    shifted = shifted[:, :, :e_live]
             in_shift = np.asarray(st.in_shift, np.int64)
             packed.append(PackedStage(
                 kind="lut", gather=np.asarray(st.gather, np.int64),

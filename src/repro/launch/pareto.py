@@ -282,6 +282,14 @@ def run(args) -> dict:
                               args.seed)
         compiled[snap] = (opt_prog, gate, prog, engine)
         gw0, gw1 = rep.total_gather_width()
+        # static-analysis stats (core/analysis.py): proven vs required
+        # widths and the live fraction of composed table entries, so
+        # operating-point selection can prefer points that fit narrower
+        # engines / smaller packed tables at equal accuracy
+        from repro.core.analysis import analyze_ranges
+        from repro.launch.lint import live_table_stats
+        ranges = analyze_ranges(opt_prog)
+        live = live_table_stats(opt_prog, ranges) or {}
         points.append({
             "step": snap, "beta": manifest["beta"],
             "val_acc": val_acc, "test_acc": test_acc,
@@ -292,14 +300,23 @@ def run(args) -> dict:
             "n_instrs_dce": rep.n_instrs_after,
             "engine_path": engine.path,
             "packed_table_bytes": engine.packed_table_bytes,
+            "required_width": opt_prog.required_width(),
+            "proven_width": ranges.proven_width(),
+            "engine_width": ranges.engine_width(),
+            **live,
             "bench_batch": bench_batch, **bench,
             "verify": gate,
         })
+        live_pct = (100.0 * live["live_entries"] / live["table_entries"]
+                    if live else float("nan"))
         print(f"[pareto] snap {snap:5d}  β={manifest['beta']:.2e}  "
               f"val={val_acc:.4f} test={test_acc:.4f}  "
               f"EBOPs={ebops:9.1f} est.LUTs={points[-1]['est_luts']:8.0f}  "
               f"LLUTs {rep.n_llut_before}->{rep.n_llut_after}  "
               f"gather {gw0}->{gw1}  "
+              f"width req={points[-1]['required_width']} "
+              f"proven={points[-1]['proven_width']}  "
+              f"live={live_pct:.0f}%  "
               f"{bench['engine_us']:.0f} us/batch", flush=True)
 
     # ----------------------------------------------- frontier + selection

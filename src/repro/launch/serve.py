@@ -105,6 +105,11 @@ def main(argv=None) -> None:
                          "on the lowered program before compiling; the "
                          "bit-exact gate then checks the optimized engine "
                          "against the UNoptimized interpreter")
+    ap.add_argument("--lint", action="store_true",
+                    help="print the static-analysis report (structural "
+                         "verifier, per-register value ranges, proven vs "
+                         "required widths — repro.launch.lint) for the "
+                         "program before serving it")
     ap.add_argument("--artifact", default=None,
                     help="bundle path: load it when present, else compile "
                          "and save it there")
@@ -325,6 +330,9 @@ def _tables_engine(args, mesh):
             print(f"[serve] bit-exact gate SKIPPED: cached attestation "
                   f"({att.get('random')} random + {att.get('exhaustive')} "
                   f"exhaustive rows) verified by content hash")
+        if args.lint:
+            from repro.launch.lint import lint_program
+            lint_program(built.prog, name=args.artifact)
         if args.verify_rtl:
             _rtl_gate(args, built.prog, engine)
         return built.prog, engine
@@ -332,6 +340,9 @@ def _tables_engine(args, mesh):
     t0 = time.time()
     src_prog, model_desc = _build_model_program(args)
     t_lower = time.time() - t0
+    if args.lint:
+        from repro.launch.lint import lint_program
+        lint_program(src_prog, name=model_desc)
     spec = _spec(args, mesh, verify="full", optimize=args.dce)
     try:
         built = build(src_prog, spec)

@@ -70,6 +70,11 @@ class EngineSpec:
     * ``require`` — ``"fused"`` / ``"pallas"``: a path downgrade raises
       :class:`EngineRequirementError` instead of serving at a lower tier
       (the hard-exit form of ``EnginePathWarning``).
+    * ``narrow`` — run the static interval analysis (``core/analysis.py``)
+      at compile time: engine dtype sized from the proven ``engine_width``
+      bound instead of the conservative ``required_width()``, and Pallas
+      table lanes narrowed to the proven value ranges.  ``False`` restores
+      the legacy required-width behavior (benchmark baselines).
     """
 
     engine: Optional[str] = None
@@ -82,6 +87,7 @@ class EngineSpec:
     n_random: int = 1024
     seed: int = 0
     require: Optional[str] = None
+    narrow: bool = True
 
     def __post_init__(self):
         if self.verify not in _VERIFY_POLICIES:
@@ -160,7 +166,7 @@ def build(source: Union[DaisProgram, LoadedArtifact, str],
         engine = compile_program(prog, mesh=spec.mesh, dtype=spec.dtype,
                                  jit=spec.jit, fuse_layers=True,
                                  stages=source.stages, engine=spec.engine,
-                                 packed=source.packed)
+                                 packed=source.packed, narrow=spec.narrow)
         timings["compile_s"] = time.monotonic() - t0
         _enforce(spec, engine)
         stored = source.attestation
@@ -196,7 +202,8 @@ def build(source: Union[DaisProgram, LoadedArtifact, str],
         timings["dce_summary"] = report.summary()
     t0 = time.monotonic()
     engine = compile_program(prog, mesh=spec.mesh, dtype=spec.dtype,
-                             jit=spec.jit, engine=spec.engine)
+                             jit=spec.jit, engine=spec.engine,
+                             narrow=spec.narrow)
     timings["compile_s"] = time.monotonic() - t0
     _enforce(spec, engine)
     att = None

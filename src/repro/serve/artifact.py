@@ -65,7 +65,7 @@ import json
 import logging
 import os
 import zipfile
-from typing import Dict, Optional
+from typing import Any, Dict, Optional
 
 import numpy as np
 
@@ -244,7 +244,16 @@ def save_artifact(path: str, prog: DaisProgram, *,
     ``--skip-verify-cached`` trusts.
     """
     if stages is None and compose:
-        stages, _reason = compose_fused_stages(prog)
+        # range analysis feeds the composer's lane-narrowing masks so the
+        # stored packed/* payload is as narrow as a fresh compile's
+        try:
+            from repro.core.analysis import analyze_ranges
+            ranges = analyze_ranges(prog)
+        except Exception as e:
+            logger.debug("bundle %s: range analysis unavailable (%s)",
+                         path, e)
+            ranges = None
+        stages, _reason = compose_fused_stages(prog, ranges=ranges)
     if packed is None and stages is not None:
         try:
             packed = pack_stages(stages)
@@ -290,6 +299,13 @@ def load_artifact(path: str) -> LoadedArtifact:
     Raises :class:`ArtifactError` when the file is missing a payload, has an
     unknown format version, or — the tamper case — the recomputed content
     hash of the data arrays differs from the one recorded at save time.
+
+    The deserialized program is additionally run through the structural
+    verifier (``core/analysis.py``): the content hash only proves the bytes
+    are the ones saved, not that they encode a well-formed program — a
+    bundle written by a buggy producer (or hand-edited with the digest
+    recomputed) is rejected here with located lint diagnostics instead of
+    failing deep inside an engine lowering.
     """
     try:
         with np.load(path) as z:
@@ -315,6 +331,13 @@ def load_artifact(path: str) -> LoadedArtifact:
     prog = DaisProgram.from_arrays(
         {k[len("prog/"):]: v for k, v in arrays.items()
          if k.startswith("prog/")})
+    from repro.core.analysis import VerifyError, verify_program
+    try:
+        verify_program(prog)
+    except VerifyError as e:
+        raise ArtifactError(
+            f"{path!r}: bundle program fails the structural verifier — "
+            f"refusing to serve it\n{e}") from e
     stages = None
     packed = None
     if meta.get("fused") and version >= 2:
@@ -331,7 +354,8 @@ def load_artifact(path: str) -> LoadedArtifact:
                           content_hash=digest, packed=packed)
 
 
-def build_engine(art: LoadedArtifact, *, mesh=None, jit: bool = True,
+def build_engine(art: LoadedArtifact, *, mesh: Optional[Any] = None,
+                 jit: bool = True,
                  engine: Optional[str] = None) -> ServeEngine:
     """Deprecated: use ``repro.serve.api.build(art, EngineSpec(...))``.
 

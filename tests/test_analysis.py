@@ -1,0 +1,371 @@
+"""Property + unit tests for the static DAIS analyzer (``core/analysis.py``).
+
+Soundness is tested *differentially*: on the same fuzz program families
+``tests/test_rtl_sim.py`` drives through the RTL simulator, every value the
+interpreter produces on random + exhaustive-small + endpoint inputs must
+lie inside the analyzed interval, and ``proven_width() <=
+required_width()`` must hold — with fixtures where it is strictly smaller
+(the whole point of the analysis).  The translation-validation pass is
+tested both ways: the DCE rewrite self-certifies, and lying obligations or
+tampered outputs are rejected.
+"""
+
+import copy
+import dataclasses
+
+import numpy as np
+import pytest
+from _hyp_compat import given, settings, st
+
+from repro.core.analysis import (AnalysisError, _requant_range,
+                                 _round_half_even, analyze_ranges,
+                                 index_window, requant_scalar,
+                                 validate_rewrite, verify_program,
+                                 VerifyError)
+from repro.core.dais import DaisProgram, Instr, Reg
+from repro.core.tables import LayerTables
+from test_rtl_sim import (_addsub_prog, _cmul_prog, _dense_stack,
+                          _hybrid_conv_prog, _llut_prog, _requant_prog)
+
+
+# --------------------------------------------------------------------------- #
+# helpers
+# --------------------------------------------------------------------------- #
+def _input_bounds(prog):
+    lo, hi = [], []
+    for ins in prog.instrs:
+        if ins.op == "IN":
+            n = 1 << max(ins.reg.width, 1)
+            lo.append(-(n >> 1) if ins.reg.signed else 0)
+            hi.append(lo[-1] + n - 1)
+    return np.asarray(lo, np.int64), np.asarray(hi, np.int64)
+
+
+def _observe_all(prog, codes):
+    """Every register's interpreter value: run with outputs = all regs."""
+    p = copy.deepcopy(prog)
+    p.outputs = list(range(p.n_instrs()))
+    return p.run(codes)
+
+
+def _assert_sound(prog, *, n_random=256, exhaustive_limit=2048, seed=0):
+    """The soundness property: observed values ⊆ analyzed intervals."""
+    verify_program(prog)
+    ranges = analyze_ranges(prog)
+    assert ranges.proven_width() <= prog.required_width()
+    lo, hi = _input_bounds(prog)
+    rng = np.random.default_rng(seed)
+    batches = [rng.integers(lo, hi + 1, (n_random, len(lo)), dtype=np.int64),
+               np.stack([lo, hi], axis=0)]          # the endpoint rows
+    sizes = hi - lo + 1
+    if np.sum(np.log2(sizes.astype(np.float64))) <= np.log2(exhaustive_limit):
+        grid = np.indices(tuple(int(s) for s in sizes))
+        batches.append(grid.reshape(len(lo), -1).T + lo[None, :])
+    for codes in batches:
+        vals = _observe_all(prog, codes)
+        for r in range(prog.n_instrs()):
+            vlo, vhi = int(vals[:, r].min()), int(vals[:, r].max())
+            alo, ahi = ranges.range(r)
+            assert alo <= vlo and vhi <= ahi, (
+                f"r{r} {prog.instrs[r].op}: observed [{vlo}, {vhi}] outside "
+                f"analyzed [{alo}, {ahi}]")
+    return ranges
+
+
+# --------------------------------------------------------------------------- #
+# interval soundness on the fuzz program families
+# --------------------------------------------------------------------------- #
+@settings(max_examples=25)
+@given(src_f=st.integers(0, 4), src_i=st.integers(0, 3),
+       src_signed=st.booleans(), f=st.integers(0, 4), i=st.integers(0, 3),
+       signed=st.booleans(), mode=st.sampled_from(["WRAP", "SAT"]))
+def test_sound_requant(src_f, src_i, src_signed, f, i, signed, mode):
+    if src_f + src_i == 0 and not src_signed:
+        src_i = 1
+    _assert_sound(_requant_prog(src_f, src_i, src_signed, f, i, signed, mode),
+                  seed=src_f * 7 + i)
+
+
+@settings(max_examples=25)
+@given(op=st.sampled_from(["ADD", "SUB"]), fa=st.integers(0, 4),
+       wa=st.integers(1, 7), fb=st.integers(0, 4), wb=st.integers(1, 7))
+def test_sound_mixed_grid_addsub(op, fa, wa, fb, wb):
+    _assert_sound(_addsub_prog(op, fa, wa, fb, wb), seed=wa * 13 + wb)
+
+
+@settings(max_examples=25)
+@given(code=st.integers(-(1 << 34), 1 << 34), src_w=st.integers(1, 6))
+def test_sound_cmul(code, src_w):
+    _assert_sound(_cmul_prog(code, 1, src_w), seed=src_w)
+
+
+@settings(max_examples=10)
+@given(m=st.integers(1, 5), n=st.integers(1, 6), src_w=st.integers(1, 8),
+       seed=st.integers(0, 1 << 20))
+def test_sound_llut(m, n, src_w, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(-(1 << (n - 1)), 1 << (n - 1), 1 << m)
+    _assert_sound(_llut_prog(m, n, codes, src_w), seed=seed & 0xFFFF)
+
+
+@settings(max_examples=5)
+@given(d0=st.integers(2, 4), d1=st.integers(2, 5), d2=st.integers(1, 3),
+       seed=st.integers(0, 1 << 10))
+def test_sound_dense_stacks(d0, d1, d2, seed):
+    _assert_sound(_dense_stack([d0, d1, d2], seed), n_random=128, seed=seed)
+
+
+def test_sound_hybrid_conv_and_strictly_sharper():
+    """End-to-end hybrid graph: sound, and the proven bound is STRICTLY
+    sharper than required_width — the fixture the tentpole promises."""
+    prog = _hybrid_conv_prog()
+    ranges = _assert_sound(prog, n_random=128)
+    assert ranges.proven_width() < prog.required_width()
+
+
+def test_dense_stack_strictly_sharper():
+    prog = _dense_stack([6, 5, 3], 0)
+    ranges = _assert_sound(prog, n_random=128)
+    assert ranges.proven_width() < prog.required_width()
+
+
+# --------------------------------------------------------------------------- #
+# transfer-function micro-properties (brute force)
+# --------------------------------------------------------------------------- #
+@settings(max_examples=40)
+@given(lo=st.integers(-220, 220), span=st.integers(0, 70),
+       src_f=st.integers(0, 4), f=st.integers(0, 4), i=st.integers(0, 3),
+       signed=st.booleans(), mode=st.sampled_from(["SAT", "WRAP"]))
+def test_requant_range_brute_force(lo, span, src_f, f, i, signed, mode):
+    hi = lo + span
+    (rlo, rhi), (tlo, thi) = _requant_range(lo, hi, src_f, f, i, signed, mode)
+    shift = f - src_f
+    vals, codes = [], []
+    for v in range(lo, hi + 1):
+        vals.append(requant_scalar(v, src_f, f, i, signed, mode))
+        codes.append(v << shift if shift >= 0
+                     else _round_half_even(v, -shift))
+    assert rlo <= min(vals) and max(vals) <= rhi
+    # the transient interval covers the pre-clamp shifted codes too
+    assert tlo <= min(codes) and max(codes) <= thi
+
+
+@settings(max_examples=40)
+@given(lo=st.integers(-300, 300), span=st.integers(0, 200),
+       m=st.integers(0, 5))
+def test_index_window_brute_force(lo, span, m):
+    size = 1 << m
+    win = index_window(lo, lo + span, size)
+    reach = {v % size for v in range(lo, lo + span + 1)}
+    assert set(np.flatnonzero(win)) == reach
+
+
+# --------------------------------------------------------------------------- #
+# structural verifier: malformed programs are rejected with diagnostics
+# --------------------------------------------------------------------------- #
+def _valid_min_prog():
+    prog = DaisProgram()
+    prog.input_f = [0]
+    prog.input_signed = [True]
+    r0 = prog.emit("IN", (0,), Reg(0, 3, True))
+    r1 = prog.emit("REQUANT", (r0, 1, 2, True, "SAT", 0), Reg(1, 4, True))
+    prog.outputs = [r1]
+    prog.output_f = [1]
+    return prog
+
+
+def test_verifier_accepts_valid_program():
+    assert verify_program(_valid_min_prog()) == []
+
+
+def test_verifier_rejects_use_before_def():
+    prog = _valid_min_prog()
+    ins = prog.instrs[1]
+    prog.instrs[1] = Instr(ins.op, (99,) + ins.args[1:], ins.reg)
+    with pytest.raises(VerifyError) as ei:
+        verify_program(prog)
+    assert ei.value.diagnostics
+
+
+def test_verifier_rejects_in_abi_disorder():
+    prog = DaisProgram()
+    prog.input_f = [0, 0]
+    prog.input_signed = [True, True]
+    prog.emit("IN", (1,), Reg(0, 3, True))
+    prog.emit("IN", (0,), Reg(0, 3, True))
+    prog.outputs = [0]
+    prog.output_f = [0]
+    with pytest.raises(VerifyError):
+        verify_program(prog)
+
+
+def test_verifier_rejects_const_outside_declared_bounds():
+    prog = DaisProgram()
+    prog.emit("CONST", (100,), Reg(0, 3, False))     # 3u holds [0, 7]
+    prog.outputs = [0]
+    prog.output_f = [0]
+    with pytest.raises(VerifyError):
+        verify_program(prog)
+
+
+def test_verifier_rejects_requant_grid_mismatch():
+    prog = _valid_min_prog()
+    ins = prog.instrs[1]
+    # claim the source sits on f=3 when its register declares f=0
+    prog.instrs[1] = Instr(ins.op, ins.args[:5] + (3,), ins.reg)
+    with pytest.raises(VerifyError):
+        verify_program(prog)
+
+
+def test_verifier_rejects_missing_llut_table():
+    prog = DaisProgram()
+    prog.input_f = [0]
+    prog.input_signed = [True]
+    r0 = prog.emit("IN", (0,), Reg(0, 3, True))
+    r1 = prog.emit("LLUT", (r0, 7, 0, 0), Reg(0, 2, True))  # no table 7
+    prog.outputs = [r1]
+    prog.output_f = [0]
+    with pytest.raises(VerifyError):
+        verify_program(prog)
+
+
+def test_verifier_rejects_output_grid_mismatch():
+    prog = _valid_min_prog()
+    prog.output_f = [3]                              # register declares f=1
+    with pytest.raises(VerifyError):
+        verify_program(prog)
+
+
+def test_verifier_collects_diagnostics_without_raising():
+    prog = _valid_min_prog()
+    prog.output_f = [3]
+    diags = verify_program(prog, raise_on_error=False)
+    assert diags and all(str(d) for d in diags)
+
+
+# --------------------------------------------------------------------------- #
+# translation validation: DCE self-certifies; lies are rejected
+# --------------------------------------------------------------------------- #
+def _dce_fixture():
+    from repro.core.opt import eliminate_dead_cells
+    prog = _hybrid_conv_prog()                       # pads fold to consts
+    out, rep = eliminate_dead_cells(prog)            # validates internally
+    assert rep.obligations is not None
+    return prog, out, rep.obligations
+
+
+def test_dce_obligations_discharge():
+    prog, out, ob = _dce_fixture()
+    validate_rewrite(prog, out, ob)                  # must not raise
+
+
+def test_lying_const_obligation_rejected():
+    prog, out, ob = _dce_fixture()
+    assert ob.const, "fixture should fold at least one constant"
+    k = next(iter(ob.const))
+    bad = dataclasses.replace(ob, const={**ob.const, k: ob.const[k] + 1})
+    with pytest.raises(AnalysisError):
+        validate_rewrite(prog, out, bad)
+
+
+def test_tampered_rewrite_output_rejected():
+    prog, out, ob = _dce_fixture()
+    bad = copy.deepcopy(out)
+    for idx, ins in enumerate(bad.instrs):
+        if ins.op == "CONST" and ins.reg.width >= 2:
+            bad.instrs[idx] = Instr("CONST", (ins.args[0] + 1,), ins.reg)
+            break
+    else:
+        pytest.skip("no mutable CONST in the fixture")
+    with pytest.raises((AnalysisError, VerifyError)):
+        validate_rewrite(prog, bad, ob)
+
+
+def test_misdirected_mapping_rejected():
+    prog, out, ob = _dce_fixture()
+    # point one surviving instruction's mapping at a different target
+    k = next(iter(ob.new_of))
+    wrong = (ob.new_of[k] + 1) % out.n_instrs()
+    bad = dataclasses.replace(ob, new_of={**ob.new_of, k: wrong})
+    with pytest.raises(AnalysisError):
+        validate_rewrite(prog, out, bad)
+
+
+# --------------------------------------------------------------------------- #
+# proven bound drives the engine: dtype admission + lane narrowing
+# --------------------------------------------------------------------------- #
+def _narrow_proof_prog():
+    """required_width > 30 (declared-width transients), proven tiny: a
+    wide-declared LLUT whose actual entries are small, then an up-shift."""
+    prog = DaisProgram()
+    prog.input_f = [0]
+    prog.input_signed = [False]
+    r0 = prog.emit("IN", (0,), Reg(0, 3, False))
+    codes = np.zeros((1, 1, 8), np.int64)
+    codes[0, 0, :] = [0, 1, 2, 3, 3, 2, 1, 0]
+    prog.tables[0] = LayerTables(
+        f_in=np.zeros((1, 1), np.int32), i_in=np.full((1, 1), 2, np.int32),
+        f_out=np.zeros((1, 1), np.int32),
+        i_out=np.full((1, 1), 27, np.int32),
+        in_width=np.full((1, 1), 3, np.int32),
+        out_width=np.full((1, 1), 28, np.int32), codes=codes)
+    r1 = prog.emit("LLUT", (r0, 0, 0, 0), Reg(0, 28, False))
+    r2 = prog.emit("REQUANT", (r1, 4, 4, False, "SAT", 0), Reg(4, 8, False))
+    prog.outputs = [r2]
+    prog.output_f = [4]
+    return prog
+
+
+def test_proven_bound_admits_int32_engine():
+    import jax
+
+    from repro.kernels.lut_serve import (compile_program, engine_width,
+                                         verify_engine)
+
+    prog = _narrow_proof_prog()
+    assert prog.required_width() > 30          # the legacy cliff rejects it
+    assert engine_width(prog) <= 30            # the proof admits it
+    engine = compile_program(prog)             # works without x64
+    assert np.dtype(engine.dtype) == np.dtype(np.int32)
+    verify_engine(engine, prog, n_random=64)   # and stays bit-exact
+    if not jax.config.jax_enable_x64:
+        with pytest.raises(ValueError, match="X64"):
+            compile_program(prog, narrow=False)
+
+
+def test_lane_narrowing_shrinks_packed_tables_bit_exactly():
+    from repro.kernels.lut_serve import compile_program, verify_engine
+
+    prog = _hybrid_conv_prog()
+    wide = compile_program(prog, engine="pallas", narrow=False)
+    nar = compile_program(prog, engine="pallas", narrow=True)
+    assert wide.path == nar.path == "pallas"
+    assert nar.packed_table_bytes < wide.packed_table_bytes
+    verify_engine(nar, prog, n_random=256)
+    verify_engine(wide, prog, n_random=256)
+
+
+def test_analysis_error_on_malformed_program():
+    """analyze_ranges assumes a verified program; the lint entry point
+    verifies first — but a direct malformed call must not return unsound
+    ranges silently."""
+    prog = _valid_min_prog()
+    ins = prog.instrs[1]
+    prog.instrs[1] = Instr(ins.op, (99,) + ins.args[1:], ins.reg)
+    with pytest.raises(Exception):
+        analyze_ranges(prog)
+
+
+def test_lint_cli_reports_and_gates(tmp_path, capsys):
+    from repro.launch.lint import lint_program
+
+    rep = lint_program(_dense_stack([4, 3, 2], 1), name="stack")
+    assert rep["ok"] and rep["proven_width"] <= rep["required_width"]
+    assert rep["dce_validated"]
+    out = capsys.readouterr().out
+    assert "verifier: ok" in out and "proven_width" in out
+
+    bad = _valid_min_prog()
+    bad.output_f = [3]
+    rep = lint_program(bad, name="bad")
+    assert not rep["ok"] and rep["n_diagnostics"] >= 1

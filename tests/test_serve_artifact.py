@@ -300,6 +300,56 @@ def test_forged_attestation_rejected(tmp_path):
 
 
 # --------------------------------------------------------------------------- #
+# tampering, round 2: a rewritten hash gets past the digest — the
+# structural verifier is the next gate (ISSUE: don't trust prog/* arrays)
+# --------------------------------------------------------------------------- #
+def _rewrite_rehash(path, mutate):
+    """Mutate arrays AND recompute the stored digest, as an adversary with
+    write access would — the load must then fall through to the verifier."""
+    from repro.serve.artifact import _bundle_digest
+
+    with np.load(path) as z:
+        arrays = {k: z[k].copy() for k in z.files}
+    meta = json.loads(bytes(arrays.pop("meta_json")).decode())
+    mutate(arrays)
+    meta_core = {k: v for k, v in meta.items() if k != "content_hash"}
+    meta["content_hash"] = _bundle_digest(arrays, meta_core)
+    arrays["meta_json"] = np.frombuffer(
+        json.dumps(meta, sort_keys=True).encode(), np.uint8)
+    np.savez(path, **arrays)
+
+
+def test_rehashed_out_of_range_register_rejected(tmp_path):
+    from repro.core.dais import _OP_CODES
+
+    prog = _lut_stack()
+    path = str(tmp_path / "model.npz")
+    save_artifact(path, prog)
+
+    def dangling_arg(arrays):
+        ops = arrays["prog/instr_op"]
+        idx = int(np.flatnonzero(ops == _OP_CODES.index("REQUANT"))[0])
+        arrays["prog/instr_args"][idx, 0] = 10**6    # register that never is
+    _rewrite_rehash(path, dangling_arg)
+    with pytest.raises(ArtifactError, match="structural verifier"):
+        load_artifact(path)
+
+
+def test_rehashed_oversized_llut_index_rejected(tmp_path):
+    prog = _lut_stack()
+    path = str(tmp_path / "model.npz")
+    save_artifact(path, prog)
+
+    def oversize(arrays):
+        key = next(k for k in arrays if k.startswith("prog/table")
+                   and k.endswith("_in_width"))
+        arrays[key] = arrays[key] + 7    # 1 << m now exceeds codes.shape[2]
+    _rewrite_rehash(path, oversize)
+    with pytest.raises(ArtifactError, match="structural verifier"):
+        load_artifact(path)
+
+
+# --------------------------------------------------------------------------- #
 # rtl attestation: bundles carry (and protect) the hardware-level proof
 # --------------------------------------------------------------------------- #
 def test_rtl_attestation_round_trips(tmp_path):
